@@ -1,0 +1,71 @@
+"""(alpha, k)-minimality verification — Theorems 1/2/3/6 empirically.
+
+For each algorithm: measured alpha, empirical k_workload / k_network vs
+the paper's theoretical k bound.  PASS = measured <= bound.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import randjoin, smms_sort, statjoin, terasort_sort
+from repro.core.alpha_k import (randjoin_k_bound, smms_k_bound,
+                                statjoin_k_bound, terasort_k_bound)
+from repro.data import scalar_skew_tables, uniform_keys
+
+
+def run(report_rows: List[str]) -> None:
+    # ---- SMMS: (3, 1 + 2/r + r t^3/n) --------------------------------------
+    t, m = 8, 8192
+    n = t * m
+    for r in (1, 2, 6):
+        x = jnp.asarray(uniform_keys(n, seed=r).reshape(t, m))
+        (_, _), rep = smms_sort(x, r=r)
+        k_theory = smms_k_bound(n, t, r)
+        ok = rep.alpha == 3 and rep.check(k_theory)
+        report_rows.append(
+            f"alpha_k,smms,r={r},alpha={rep.alpha},"
+            f"k_w={rep.k_workload:.3f},k_n={rep.k_network:.3f},"
+            f"k_theory={k_theory:.3f},{'PASS' if ok else 'FAIL'}")
+        assert ok
+
+    # ---- Terasort: (3, 5 + t^3/n) w.h.p. ------------------------------------
+    x = jnp.asarray(uniform_keys(n, seed=9).reshape(t, m))
+    _, rep = terasort_sort(x, seed=0)
+    k_theory = terasort_k_bound(n, t)
+    ok = rep.alpha == 3 and rep.check(k_theory)
+    report_rows.append(
+        f"alpha_k,terasort,alpha={rep.alpha},k_w={rep.k_workload:.3f},"
+        f"k_theory={k_theory:.3f},{'PASS' if ok else 'FAIL'}")
+    assert ok
+
+    # ---- StatJoin: workload <= 2W/t deterministically (Thm 6) --------------
+    ns = 4000
+    s_keys, t_keys = scalar_skew_tables(ns, 600, 80, seed=6)
+    rows = np.arange(ns)
+    _, rep = statjoin(s_keys, rows, t_keys, rows, t_machines=8)
+    sigma = rep.n_out / max(1, rep.n_in)
+    k_theory = statjoin_k_bound(8, sigma)
+    k_meas = np.max(rep.workload) / (rep.n_out / 8)
+    ok = rep.alpha == 3 and k_meas <= 2.0
+    report_rows.append(
+        f"alpha_k,statjoin,alpha={rep.alpha},k_out={k_meas:.3f}<=2,"
+        f"sigma={sigma:.1f},k_theory={k_theory:.3f},"
+        f"{'PASS' if ok else 'FAIL'}")
+    assert ok
+
+    # ---- RandJoin: ~(1, 2 + t/sigma) w.h.p. ---------------------------------
+    w_est = rep.n_out
+    out, rep_r = randjoin(s_keys, rows, t_keys, rows, t_machines=8,
+                          out_capacity=max(64, 3 * w_est // 8),
+                          in_cap_factor=4.0, seed=7)
+    sigma = rep_r.n_out / max(1, rep_r.n_in)
+    k_meas = np.max(rep_r.workload) / (rep_r.n_out / 8)
+    ok = rep_r.alpha == 1 and k_meas <= 2.0
+    report_rows.append(
+        f"alpha_k,randjoin,alpha={rep_r.alpha},k_out={k_meas:.3f},"
+        f"k_theory={randjoin_k_bound(8, sigma):.3f},"
+        f"{'PASS' if ok else 'FAIL'}")
+    assert ok

@@ -1,0 +1,95 @@
+"""Paper Figs 11-14: join workload distribution + runtime, Zipf + scalar
+skew; RandJoin & StatJoin vs the Standard-Repartition baseline."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import randjoin, repartition_join, statjoin
+from repro.core.alpha_k import statjoin_workload_bound
+from repro.data import scalar_skew_tables, zipf_tables
+
+
+def _join_size(s_keys, t_keys):
+    import collections
+    cs = collections.Counter(s_keys.tolist())
+    ct = collections.Counter(t_keys.tolist())
+    return sum(cs[k] * ct[k] for k in cs if k in ct)
+
+
+def run(report_rows: List[str]) -> None:
+    t = 8
+    # ---- Zipf skew (Fig 11/12) --------------------------------------------
+    for theta in (0.0, 0.5, 1.0):
+        ns = 3000
+        s_keys, t_keys = zipf_tables(ns, ns, theta=theta, seed=3,
+                                     domain=200)
+        w = _join_size(s_keys, t_keys)
+        rows = np.arange(ns)
+
+        t0 = time.time()
+        _, rep_r = randjoin(s_keys, rows, t_keys, rows, t_machines=t,
+                            out_capacity=max(64, 3 * w // t),
+                            in_cap_factor=4.0, seed=1)
+        dt_r = time.time() - t0
+
+        t0 = time.time()
+        _, rep_s = statjoin(s_keys, rows, t_keys, rows, t_machines=t)
+        dt_s = time.time() - t0
+
+        _, rep_p = repartition_join(s_keys, rows, t_keys, rows,
+                                    t_machines=t, out_capacity=w + 64)
+
+        report_rows.append(
+            f"join_zipf,theta={theta},randjoin,imb={rep_r.imbalance:.3f},"
+            f"us={dt_r*1e6:.0f}")
+        report_rows.append(
+            f"join_zipf,theta={theta},statjoin,imb={rep_s.imbalance:.3f},"
+            f"us={dt_s*1e6:.0f}")
+        report_rows.append(
+            f"join_zipf,theta={theta},repartition,imb={rep_p.imbalance:.3f}"
+            f",us=-")
+        if theta <= 0.5:  # skewed regimes: paper's claim
+            assert rep_r.imbalance < rep_p.imbalance
+            assert rep_s.imbalance < rep_p.imbalance
+
+    # ---- scalar skew (Fig 13/14): M x N hot key ---------------------------
+    for (mh, nh) in ((500, 100), (1000, 50)):
+        n = 4000
+        s_keys, t_keys = scalar_skew_tables(n, mh, nh, seed=4)
+        w = _join_size(s_keys, t_keys)
+        rows = np.arange(n)
+        _, rep_r = randjoin(s_keys, rows, t_keys, rows, t_machines=t,
+                            out_capacity=max(64, 3 * w // t),
+                            in_cap_factor=4.0, seed=2)
+        _, rep_s = statjoin(s_keys, rows, t_keys, rows, t_machines=t)
+        bound = statjoin_workload_bound(w, t)
+        report_rows.append(
+            f"join_scalar,M={mh},N={nh},randjoin,imb={rep_r.imbalance:.3f}")
+        report_rows.append(
+            f"join_scalar,M={mh},N={nh},statjoin,imb={rep_s.imbalance:.3f},"
+            f"thm6_max={np.max(rep_s.workload)/ (w/t):.3f}<=2")
+        assert np.max(rep_s.workload) <= bound + 1e-9, "Theorem 6"
+
+
+def run_statjoin_overhead(report_rows: List[str]) -> None:
+    """Tables 2-3 + Fig 15: statistics-collection share of StatJoin."""
+    n = 3000
+    s_keys, t_keys = zipf_tables(n, n, theta=0.0, seed=5, domain=150)
+    rows = np.arange(n)
+    t0 = time.time()
+    stats = None
+    from repro.core import collect_statistics
+    stats = collect_statistics(s_keys, t_keys)
+    dt_stats = time.time() - t0
+    t0 = time.time()
+    statjoin(s_keys, rows, t_keys, rows, t_machines=8, stats=stats)
+    dt_total = dt_stats + (time.time() - t0)
+    pct = 100.0 * dt_stats / dt_total
+    report_rows.append(
+        f"statjoin_overhead,stats_us={dt_stats*1e6:.0f},"
+        f"total_us={dt_total*1e6:.0f},pct={pct:.1f}")
+    # paper: statistics collection is a small fraction (0.6%-7%)
+    assert pct < 25.0, pct

@@ -1,0 +1,50 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference — these
+validate correctness-at-scale and report call latencies (CPU interpret
+numbers are NOT TPU perf; the roofline section covers the TPU model)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitonic import bitonic_sort
+from repro.kernels.bucketize import bucketize_histogram
+from repro.kernels.flash_attention import flash_attention
+
+
+def _time(fn, *args):
+    out = jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    out = jax.block_until_ready(fn(*args))
+    return out, (time.time() - t0) * 1e6
+
+
+def run(report_rows: List[str]) -> None:
+    x = jax.random.normal(jax.random.key(0), (8, 1024))
+    got, us = _time(bitonic_sort, x)
+    np.testing.assert_array_equal(got, ref.sort_ref(x))
+    report_rows.append(f"kernel,bitonic_sort,8x1024,us={us:.0f},allclose=1")
+
+    keys = jax.random.normal(jax.random.key(1), (1 << 14,))
+    bounds = jnp.sort(jax.random.normal(jax.random.key(2), (63,)))
+    (ids, counts), us = _time(
+        lambda k, b: bucketize_histogram(k, b, 64), keys, bounds)
+    rids, rcounts = ref.bucketize_ref(keys, bounds, 64)
+    np.testing.assert_array_equal(ids, rids)
+    np.testing.assert_array_equal(counts, rcounts)
+    report_rows.append(f"kernel,bucketize,16k/64b,us={us:.0f},allclose=1")
+
+    q = jax.random.normal(jax.random.key(3), (1, 4, 256, 64))
+    k = jax.random.normal(jax.random.key(4), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.key(5), (1, 2, 256, 64))
+    got, us = _time(lambda a, b, c: flash_attention(a, b, c, block_q=64,
+                                                    block_k=64), q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+    report_rows.append(f"kernel,flash_attention,gqa256,us={us:.0f},"
+                       f"allclose=1")

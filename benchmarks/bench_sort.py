@@ -1,0 +1,69 @@
+"""Paper Figs 8-10 + Table 1: sorting workload imbalance & runtime.
+
+SMMS vs Terasort (+ Algorithm S) on LIDAR-like real-ish data and uniform
+random data, sweeping process counts.  The paper's headline numbers to
+validate: SMMS imbalance ~= 1.0 in all cases; Terasort imbalance >= 1.5
+in most cases; SMMS total runtime beats Terasort by ~25%.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import smms_sort, terasort_sort
+from repro.core.alpha_k import smms_workload_bound, terasort_workload_bound
+from repro.data import lidar_like, uniform_keys
+
+
+def run(report_rows: List[str]) -> None:
+    n = 1 << 18
+    for gen, gen_name in ((lidar_like, "lidar"), (uniform_keys, "random")):
+        x = gen(n, seed=1)
+        for t in (8, 16, 32):
+            m = n // t
+            xt = jnp.asarray(x[:t * m].reshape(t, m))
+
+            t0 = time.time()
+            (_, _), rep_s = smms_sort(xt, r=2)
+            dt_s = time.time() - t0
+
+            t0 = time.time()
+            _, rep_t = terasort_sort(xt, seed=0)
+            dt_t = time.time() - t0
+
+            bound_s = smms_workload_bound(n, t, 2) / m
+            bound_t = terasort_workload_bound(n, t) / m
+            report_rows.append(
+                f"sort_imbalance,{gen_name},t={t},smms,"
+                f"{rep_s.imbalance:.4f},bound={bound_s:.3f}")
+            report_rows.append(
+                f"sort_imbalance,{gen_name},t={t},terasort,"
+                f"{rep_t.imbalance:.4f},bound={bound_t:.3f}")
+            report_rows.append(
+                f"sort_runtime_us,{gen_name},t={t},"
+                f"smms,{dt_s * 1e6:.0f},terasort={dt_t * 1e6:.0f}")
+            assert rep_s.imbalance <= rep_t.imbalance + 0.05, (
+                "paper claim: SMMS balances better than Terasort")
+
+
+def run_scaling(report_rows: List[str]) -> None:
+    """Table 1: sequential vs parallel sort runtime scaling."""
+    n = 1 << 18
+    x = uniform_keys(n, seed=2)
+    t0 = time.time()
+    np.sort(x)  # A_seq: the comparable sequential sort
+    seq = time.time() - t0
+    report_rows.append(f"sort_scaling,seq,t=1,numpy,{seq * 1e6:.0f}")
+    for t in (4, 8, 16):
+        xt = jnp.asarray(x.reshape(t, n // t))
+        smms_sort(xt, r=2)  # warm
+        t0 = time.time()
+        (_, _), rep = smms_sort(xt, r=2)
+        dt = time.time() - t0
+        report_rows.append(
+            f"sort_scaling,smms,t={t},imbalance={rep.imbalance:.3f},"
+            f"{dt * 1e6:.0f}")

@@ -1,0 +1,109 @@
+"""Render the EXPERIMENTS.md §Dry-run / §Roofline tables from the JSON
+records written by repro.launch.dryrun.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PiB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def load(dirname):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | mesh | status | compile | args/dev | "
+            "temp/dev | fits 16GiB |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("variant"):
+            continue
+        mem = r.get("memory_per_device", {})
+        rows.append(
+            "| {arch} | {shape} | {mesh} | {status} | {c} | {a} | {t} | "
+            "{f} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                status=r.get("status", "?"),
+                c=f"{r.get('compile_s', '-')}s" if "compile_s" in r else "-",
+                a=fmt_bytes(mem.get("arguments_bytes")),
+                t=fmt_bytes(mem.get("temp_bytes")),
+                f={True: "yes", False: "NO"}.get(
+                    mem.get("fits_16GiB_hbm"), "-")))
+    return "\n".join(rows)
+
+
+def roofline_table(recs):
+    rows = ["| arch | shape | T_comp | T_mem | T_coll | dominant | "
+            "useful | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != "single" or "roofline" not in r or r.get("variant"):
+            continue
+        rf = r["roofline"]
+        rows.append(
+            "| {arch} | {shape} | {tc} | {tm} | {tl} | **{dom}** | "
+            "{ur:.2f} | {frac:.3f} |".format(
+                arch=r["arch"], shape=r["shape"],
+                tc=fmt_s(rf["t_compute_s"]), tm=fmt_s(rf["t_memory_s"]),
+                tl=fmt_s(rf["t_collective_s"]), dom=rf["dominant"],
+                ur=rf["useful_flop_ratio"],
+                frac=rf["roofline_fraction"]))
+    return "\n".join(rows)
+
+
+def skips_table(recs):
+    rows = []
+    for r in recs:
+        if r.get("status") == "skip":
+            rows.append(f"* {r['arch']} x {r['shape']} ({r['mesh']}): "
+                        f"{r['skip_reason']}")
+    return "\n".join(rows)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun")
+    args = p.parse_args()
+    recs = load(args.dir)
+    ok = sum(1 for r in recs if r.get("status") == "ok")
+    skip = sum(1 for r in recs if r.get("status") == "skip")
+    err = sum(1 for r in recs if r.get("status") == "error")
+    print(f"## Dry-run summary: {ok} ok, {skip} documented skips, "
+          f"{err} errors\n")
+    print(dryrun_table(recs))
+    print("\n### Skips\n")
+    print(skips_table(recs))
+    print("\n## Roofline (single-pod, per device)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

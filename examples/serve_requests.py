@@ -1,0 +1,55 @@
+"""Serving walkthrough: SMMS length-bucketed request batching + decode.
+
+A queue of prompts with wildly mixed lengths is planned into batches by
+the paper's sorting technique (padding waste bounded by the SMMS
+k-factor), then each batch is prefilled + decoded.
+
+    PYTHONPATH=src python examples/serve_requests.py
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, smoke_config
+from repro.models import init_params
+from repro.serve import LengthBucketScheduler, generate
+
+
+def main():
+    cfg = smoke_config(get_arch("gemma-2b"))
+    cfg = dataclasses.replace(cfg, vocab_size=1024)
+    params = init_params(cfg, jax.random.key(0))
+
+    rng = np.random.default_rng(7)
+    n_requests = 24
+    lengths = np.concatenate([rng.integers(4, 12, 12),
+                              rng.integers(40, 64, 12)])
+    rng.shuffle(lengths)
+    prompts = [rng.integers(0, cfg.vocab_size, l).tolist() for l in lengths]
+
+    sched = LengthBucketScheduler(max_batch=6, buckets=4)
+    plan = sched.plan(lengths.tolist())
+    naive = [list(range(i, min(i + 6, n_requests)))
+             for i in range(0, n_requests, 6)]
+    print(f"{n_requests} requests, lengths {lengths.min()}..{lengths.max()}")
+    print(f"padding waste: planned {sched.padding_waste(lengths, plan):.1%}"
+          f" vs naive fifo {sched.padding_waste(lengths, naive):.1%}")
+
+    total = 0
+    for batch_idx in plan:
+        mx = max(lengths[i] for i in batch_idx)
+        toks = np.zeros((len(batch_idx), mx), np.int32)
+        for row, i in enumerate(batch_idx):
+            toks[row, mx - lengths[i]:] = prompts[i]  # left-pad
+        out = generate(params, cfg, jnp.asarray(toks), max_new_tokens=4)
+        total += out.shape[0]
+        print(f"  batch of {len(batch_idx):2d} @ len {mx:3d} -> "
+              f"generated {out.shape[1]} tokens each")
+    assert total == n_requests
+    print("all requests served")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Fault-tolerant checkpointing: atomic shard files + elastic re-shard.
+
+Design (the HDFS-replication role from the paper's cluster, adapted):
+
+* every save writes ``step_<N>.tmp/`` then atomically renames to
+  ``step_<N>/`` — a crash mid-save never corrupts the latest checkpoint;
+* leaves are stored as one .npy per pytree path inside an .npz bundle,
+  with a JSON manifest (step, tree structure, dtypes, shapes);
+* ``restore`` device_puts each leaf against the CURRENT mesh's sharding —
+  a checkpoint taken on 512 chips restores onto 256 (or 8) without any
+  re-write: elastic re-sharding falls out of global arrays + NamedSharding
+  (arrays are gathered to host at save; production would write per-shard
+  files via a distributed array serializer, same interface);
+* ``keep`` bounds disk usage; ``latest_step`` enables preemption-restart
+  (launch/train.py resumes from it automatically).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [
+        "/".join(str(getattr(k, "key", k)) for k in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+    return leaves, paths, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any) -> str:
+        leaves, paths, _ = _flatten(tree)
+        tmp = os.path.join(self.directory, f"step_{step:010d}.tmp")
+        final = os.path.join(self.directory, f"step_{step:010d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+        np.savez(os.path.join(tmp, "leaves.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "paths": paths,
+            "shapes": [list(np.shape(l)) for l in leaves],
+            "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, final) if not os.path.exists(final) else None
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------
+    def restore(self, step: int, like: Any,
+                shardings: Optional[Any] = None) -> Any:
+        """Restore into the structure of ``like``; re-shard elastically
+        against ``shardings`` (a pytree of NamedSharding) if given."""
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "leaves.npz"))
+        leaves = [data[f"leaf_{i}"] for i in range(len(manifest["paths"]))]
+
+        like_leaves, treedef = jax.tree_util.tree_flatten(like)
+        assert len(like_leaves) == len(leaves), (
+            f"checkpoint has {len(leaves)} leaves, expected "
+            f"{len(like_leaves)}")
+        for got, want in zip(leaves, like_leaves):
+            assert tuple(got.shape) == tuple(np.shape(want)), (
+                got.shape, np.shape(want))
+        if shardings is not None:
+            sh_leaves = jax.tree_util.tree_flatten(shardings)[0]
+            leaves = [jax.device_put(l, s)
+                      for l, s in zip(leaves, sh_leaves)]
+        else:
+            leaves = [jax.numpy.asarray(l) for l in leaves]
+        return jax.tree_util.tree_unflatten(treedef, leaves)

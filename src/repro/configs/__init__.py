@@ -1,0 +1,7 @@
+from .base import ArchConfig, MoEConfig, SSMConfig
+from .registry import ARCHS, get_arch, smoke_config
+from .shapes import SHAPES, ShapeSpec, applicable, input_specs, skip_reason
+
+__all__ = ["ArchConfig", "MoEConfig", "SSMConfig", "ARCHS", "get_arch",
+           "smoke_config", "SHAPES", "ShapeSpec", "applicable",
+           "input_specs", "skip_reason"]

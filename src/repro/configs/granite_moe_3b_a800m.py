@@ -1,0 +1,27 @@
+"""granite-moe-3b-a800m [moe] — fine-grained 40-expert top-8.
+
+[hf:ibm-granite/granite-3.0 family; hf]  32L d_model=1536 24H (GQA kv=8,
+head_dim=64) per-expert d_ff=512, vocab=49155 (padded to 49408 so the
+embedding shards 16-way).  40 experts do not divide a 16-way model axis,
+so the MoE falls back from EP to TP (shard d_ff_expert); the alpha-k
+dispatch planner still balances token load across expert slots.
+"""
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49_155,
+    act="swiglu",
+    moe=MoEConfig(num_experts=40, top_k=8, d_ff_expert=512,
+                  every_n_layers=1, dispatch="alpha_k", extra_slots=8),
+    tie_embeddings=True,
+    max_seq_len=8_192,
+    notes="40 experts top-8 fine-grained; 24 q-heads -> merged-dim TP",
+)

@@ -1,0 +1,27 @@
+"""pixtral-12b [vlm] — pixtral-ViT frontend + mistral-nemo backbone.
+
+[hf:mistralai/Pixtral-12B-2409; unverified]  40L d_model=5120 32H
+(GQA kv=8, head_dim=128) d_ff=14336 vocab=131072.  The vision frontend
+is a STUB per the assignment: input_specs() provides 256 precomputed
+1024-d patch embeddings which a learned projection lifts to d_model and
+prepends to the token stream.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131_072,
+    act="swiglu",
+    frontend="vision",
+    n_frontend_tokens=256,
+    frontend_dim=1024,
+    rope_theta=1_000_000.0,
+    max_seq_len=131_072,
+)

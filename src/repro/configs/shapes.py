@@ -1,0 +1,85 @@
+"""The four assigned input shapes + ShapeDtypeStruct builders (dry-run)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import ArchConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "input_specs", "applicable",
+           "skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ArchConfig, shape: ShapeSpec) -> bool:
+    if shape.name == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+def skip_reason(cfg: ArchConfig, shape: ShapeSpec) -> Optional[str]:
+    if applicable(cfg, shape):
+        return None
+    return (f"{cfg.name} is pure full-attention (not sub-quadratic): "
+            f"long_500k requires SSM/hybrid/sliding-window archs")
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, object]:
+    """ShapeDtypeStruct stand-ins for every model input — weak-type
+    correct, shardable, zero allocation.  Decode shapes include the KV /
+    SSM cache structs (one new token against a seq_len cache)."""
+    from repro.models.model import init_cache
+
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(bb, ss):
+        return jax.ShapeDtypeStruct((bb, ss), i32)
+
+    if shape.kind == "train":
+        specs: Dict[str, object] = {}
+        s_text = s - (cfg.n_frontend_tokens if cfg.frontend == "vision"
+                      else 0)
+        specs["tokens"] = tok(b, s_text)
+        specs["labels"] = tok(b, s_text)
+        if cfg.frontend == "vision":
+            specs["embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+        return specs
+
+    if shape.kind == "prefill":
+        specs = {}
+        s_text = s - (cfg.n_frontend_tokens if cfg.frontend == "vision"
+                      else 0)
+        specs["tokens"] = tok(b, s_text)
+        if cfg.frontend == "vision":
+            specs["embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+        specs["cache"] = jax.eval_shape(
+            functools.partial(init_cache, cfg, b, s))
+        return specs
+
+    # decode: one token against a seq_len cache
+    return {
+        "token": tok(b, 1),
+        "cache": jax.eval_shape(functools.partial(init_cache, cfg, b, s)),
+    }

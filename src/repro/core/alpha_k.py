@@ -1,0 +1,147 @@
+"""(alpha, k)-minimality accounting — the paper's Section 2 yardstick.
+
+An (alpha, k)-minimal algorithm on t machines:
+  * runs in ``alpha`` synchronized rounds (collective phases on TPU),
+  * bounds per-machine workload   W_i <= k * W_seq / t        (Ineq. 1)
+  * bounds per-machine network    N_i <= k * N / t            (Ineq. 2)
+  * per-machine compute           C_i  = O(C_seq / t)         (Eq. 3)
+
+On an SPMD machine a "round" is a collective phase inside one jitted
+program.  Each core algorithm in this package reports, per device, the
+number of objects it sent/received per phase and the final workload; this
+module turns those counters into the paper's k values so that tests and
+benchmarks can assert the theorems (Thm 1/2 for SMMS, Thm 3/4 for
+Terasort, Cor 3/Thm 5 for RandJoin, Thm 6/7 for StatJoin) empirically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Sequence
+
+import numpy as np
+
+__all__ = [
+    "PhaseStats",
+    "AlphaKReport",
+    "smms_k_bound",
+    "terasort_k_bound",
+    "statjoin_k_bound",
+    "randjoin_k_bound",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseStats:
+    """Per-device traffic of one synchronized round (collective phase)."""
+
+    name: str
+    sent: np.ndarray      # (t,) objects sent by each device this phase
+    received: np.ndarray  # (t,) objects received by each device this phase
+
+    @property
+    def net(self) -> np.ndarray:
+        return np.asarray(self.sent) + np.asarray(self.received)
+
+
+@dataclasses.dataclass
+class AlphaKReport:
+    """Empirical (alpha, k) measurement for one algorithm execution."""
+
+    algorithm: str
+    t: int                      # number of machines
+    n_in: int                   # input size (objects)
+    n_out: int                  # output size (objects)
+    workload: np.ndarray        # (t,) final per-device workload (objects)
+    phases: List[PhaseStats] = dataclasses.field(default_factory=list)
+
+    # ---- derived quantities -------------------------------------------------
+    @property
+    def alpha(self) -> int:
+        return len(self.phases)
+
+    @property
+    def w_seq(self) -> float:
+        return float(max(self.n_in, self.n_out))
+
+    @property
+    def n_total(self) -> float:
+        return float(self.n_in + self.n_out)
+
+    @property
+    def k_workload(self) -> float:
+        """max_i W_i / (W_seq / t) — Ineq. (1)."""
+        return float(np.max(self.workload) / (self.w_seq / self.t))
+
+    @property
+    def k_network(self) -> float:
+        """max over phases of max_i N_i / (N / t) — Ineq. (2)."""
+        if not self.phases:
+            return 0.0
+        per_phase = [np.max(p.net) / (self.n_total / self.t) for p in self.phases]
+        return float(max(per_phase))
+
+    @property
+    def imbalance(self) -> float:
+        """max workload / mean workload — the paper's Figures 8-11/13 metric."""
+        mean = float(np.mean(self.workload))
+        return float(np.max(self.workload)) / mean if mean > 0 else float("inf")
+
+    def check(self, k: float) -> bool:
+        """Does this run satisfy (alpha, k)-minimality for the given k?"""
+        return self.k_workload <= k and self.k_network <= k
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "algorithm": self.algorithm,
+            "alpha": self.alpha,
+            "t": self.t,
+            "k_workload": round(self.k_workload, 4),
+            "k_network": round(self.k_network, 4),
+            "imbalance": round(self.imbalance, 4),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Theoretical bounds from the paper, used as assertions in tests/benchmarks.
+# ---------------------------------------------------------------------------
+
+def smms_k_bound(n: int, t: int, r: int) -> float:
+    """Theorem 2: SMMS is (3, 1 + 2/r + r t^3 / n)-minimal (needs t^3 <= n)."""
+    return 1.0 + 2.0 / r + r * t**3 / n
+
+
+def smms_workload_bound(n: int, t: int, r: int) -> float:
+    """Theorem 1: round-3 workload <= (1 + 2/r + t^2/n) * m objects."""
+    m = n / t
+    return (1.0 + 2.0 / r + t**2 / n) * m
+
+
+def terasort_k_bound(n: int, t: int) -> float:
+    """Theorem 4: Terasort + Algorithm S is (3, 5 + t^3/n)-minimal w.h.p."""
+    return 5.0 + t**3 / n
+
+
+def terasort_workload_bound(n: int, t: int) -> float:
+    """Theorem 3: |S_i| <= 5m + 1 with probability >= 1 - 1/n."""
+    return 5.0 * (n / t) + 1.0
+
+
+def statjoin_k_bound(t: int, sigma: float) -> float:
+    """Theorem 7: StatJoin is (3, 2 + t/sigma)-minimal."""
+    return 2.0 + t / sigma
+
+
+def statjoin_workload_bound(w_total: int, t: int) -> float:
+    """Theorem 6: join-result workload per machine <= 2 W / t."""
+    return 2.0 * w_total / t
+
+
+def randjoin_k_bound(t: int, sigma: float) -> float:
+    """Theorem 5: RandJoin is (1, 2 + t/sigma)-minimal w.p. 1 - 1.2e-9."""
+    return 2.0 + t / sigma
+
+
+def merge_phase_stats(stats: Sequence[Mapping[str, np.ndarray]]) -> List[PhaseStats]:
+    """Convenience: build PhaseStats from {'name', 'sent', 'received'} dicts."""
+    return [PhaseStats(s["name"], np.asarray(s["sent"]), np.asarray(s["received"]))
+            for s in stats]

@@ -1,0 +1,171 @@
+"""Bucketed redistribution (the paper's Round-3 shuffle) on an SPMD machine.
+
+MPI lets Round 3 send "however many objects landed in bucket k" — a ragged
+exchange.  XLA cannot: every buffer shape is static.  The central hardware
+adaptation of this repo is that the paper's k-bound *is* the static shape:
+(alpha, k)-minimality proves each device receives at most ``k * m`` objects,
+so a compile-time capacity ``C = ceil(cap_factor * m)`` with a validity mask
+is safe (cap_factor = the algorithm's k bound + slack).  This is exactly the
+MoE capacity-factor trick, justified by Theorem 1 / Theorem 3 instead of by
+prayer.
+
+Two backends:
+
+* ``static``  — dense ``lax.all_to_all`` of (t, C/t) tiles padded with a
+  sentinel.  Works under ``shard_map`` *and* ``vmap`` (used by unit tests).
+* ``ragged``  — ``lax.ragged_all_to_all`` with exact send sizes into a
+  C-sized output buffer.  shard_map only; saves the padding bandwidth.
+
+Both report dropped-object counts so callers can detect capacity overflow
+(a fault, handled by retrying with a larger factor — see launch/train.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "PAD",
+    "partition_sorted",
+    "build_send_buffer",
+    "static_exchange",
+    "ragged_exchange",
+    "exchange_sorted_segments",
+]
+
+# Sentinel key for padded slots.  Keys are required to be finite floats or
+# ints strictly below the sentinel; sorts push pads to the end.
+PAD = jnp.inf
+
+
+def partition_sorted(x_sorted: jnp.ndarray, interior: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Split a locally sorted vector into t contiguous destination segments.
+
+    interior: (t-1,) interior boundaries b_1..b_{t-1}.  Element e goes to
+    bucket k iff b_k <= e < b_{k+1} (b_0 = -inf, b_t = +inf).
+    Returns (starts, lens), each (t,).
+    """
+    m = x_sorted.shape[0]
+    cuts = jnp.searchsorted(x_sorted, interior, side="left")  # (t-1,)
+    starts = jnp.concatenate([jnp.zeros((1,), cuts.dtype), cuts])
+    ends = jnp.concatenate([cuts, jnp.full((1,), m, cuts.dtype)])
+    return starts, ends - starts
+
+
+def build_send_buffer(x_sorted: jnp.ndarray, starts: jnp.ndarray,
+                      lens: jnp.ndarray, cap_per_pair: int,
+                      values: Optional[jnp.ndarray] = None,
+                      pad_key=PAD):
+    """Pack t contiguous segments into a (t, C) tile, sentinel-padded.
+
+    Returns (keys_buf, values_buf_or_None, dropped) where dropped counts
+    objects beyond per-pair capacity (0 when capacity is adequate).
+    """
+    t = starts.shape[0]
+    m = x_sorted.shape[0]
+    cols = jnp.arange(cap_per_pair)
+    idx = starts[:, None] + cols[None, :]                      # (t, C)
+    valid = cols[None, :] < lens[:, None]
+    safe = jnp.clip(idx, 0, m - 1)
+    keys = jnp.where(valid, x_sorted[safe], jnp.asarray(pad_key, x_sorted.dtype))
+    vals = None
+    if values is not None:
+        vals_g = values[safe]                                  # (t, C, ...)
+        mask = valid.reshape(t, cap_per_pair, *([1] * (values.ndim - 1)))
+        vals = jnp.where(mask, vals_g, jnp.zeros_like(vals_g))
+    dropped = jnp.sum(jnp.maximum(lens - cap_per_pair, 0))
+    return keys, vals, dropped
+
+
+def static_exchange(keys_buf: jnp.ndarray, axis_name: str,
+                    values_buf: Optional[jnp.ndarray] = None):
+    """Dense all_to_all of (t, C) tiles: row k goes to device k."""
+    recv_k = lax.all_to_all(keys_buf, axis_name, split_axis=0, concat_axis=0,
+                            tiled=False)
+    recv_v = None
+    if values_buf is not None:
+        recv_v = lax.all_to_all(values_buf, axis_name, split_axis=0,
+                                concat_axis=0, tiled=False)
+    return recv_k, recv_v
+
+
+def ragged_exchange(x_sorted: jnp.ndarray, starts: jnp.ndarray,
+                    lens: jnp.ndarray, axis_name: str, capacity: int,
+                    pad_key=PAD) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact-size exchange via lax.ragged_all_to_all (shard_map only).
+
+    capacity: static receive-buffer size; Theorem 1/3 bound the true
+    receive count, so ceil(k_bound * m) slots suffice.
+    Returns (recv_keys (capacity,), recv_count).
+    """
+    t = lens.shape[0]
+    sizes = lens.astype(jnp.int32)
+    # L[src, dst] — everyone learns the full size matrix (t^2 ints, tiny).
+    size_matrix = lax.all_gather(sizes, axis_name)            # (t, t)
+    me = lax.axis_index(axis_name)
+    # Where my chunk lands in dst's buffer: sum of earlier senders' sizes.
+    col_excl = jnp.cumsum(size_matrix, axis=0) - size_matrix   # (t, t)
+    output_offsets = col_excl[me]                              # (t,)
+    recv_sizes = size_matrix[:, me]                            # (t,)
+    out = jnp.full((capacity,), jnp.asarray(pad_key, x_sorted.dtype))
+    recv = lax.ragged_all_to_all(
+        x_sorted, out, starts.astype(jnp.int32), sizes,
+        output_offsets.astype(jnp.int32), recv_sizes.astype(jnp.int32),
+        axis_name=axis_name)
+    return recv, jnp.sum(recv_sizes)
+
+
+class ExchangeResult(NamedTuple):
+    keys: jnp.ndarray             # (capacity,) sorted ascending, pads last
+    values: Optional[jnp.ndarray]
+    count: jnp.ndarray            # valid objects received (scalar)
+    sent: jnp.ndarray             # objects sent to other devices (scalar)
+    dropped: jnp.ndarray          # global dropped count (scalar, psum'd)
+
+
+def exchange_sorted_segments(x_sorted: jnp.ndarray,
+                             interior: jnp.ndarray,
+                             *, axis_name: str, t: int,
+                             cap_factor: float,
+                             values: Optional[jnp.ndarray] = None,
+                             backend: str = "static",
+                             merge: bool = True) -> ExchangeResult:
+    """Round-3 shuffle: deliver bucket k of every device to device k.
+
+    x_sorted: (m,) locally sorted keys.  interior: (t-1,) boundaries.
+    Output capacity = ceil(cap_factor * m) rounded up to a multiple of t.
+    """
+    m = x_sorted.shape[0]
+    cap_total = int(-(-int(cap_factor * m) // t) * t)  # round up to mult of t
+    cap_pair = cap_total // t
+    starts, lens = partition_sorted(x_sorted, interior)
+    me = lax.axis_index(axis_name)
+    sent = m - lens[me]  # objects leaving this device
+
+    if backend == "ragged":
+        recv, count = ragged_exchange(x_sorted, starts, lens, axis_name,
+                                      cap_total)
+        recv_v = None
+        dropped = jnp.zeros((), jnp.int32)
+    else:
+        keys_buf, vals_buf, local_drop = build_send_buffer(
+            x_sorted, starts, lens, cap_pair, values)
+        recv2d, recv_v2d = static_exchange(keys_buf, axis_name, vals_buf)
+        recv = recv2d.reshape(-1)
+        recv_v = recv_v2d.reshape(-1, *recv_v2d.shape[2:]) if recv_v2d is not None else None
+        count = jnp.sum(recv < jnp.asarray(PAD, recv.dtype)).astype(jnp.int32)
+        dropped = lax.psum(local_drop, axis_name).astype(jnp.int32)
+
+    if merge:
+        if recv_v is not None:
+            order = jnp.argsort(recv)
+            recv = recv[order]
+            recv_v = recv_v[order]
+        else:
+            recv = jnp.sort(recv)  # pads (=inf) land at the end
+    return ExchangeResult(recv, recv_v, count, sent, dropped)

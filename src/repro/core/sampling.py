@@ -1,0 +1,51 @@
+"""Algorithm S — sequential draft sampling (Fan-Muller-Rezucha 1962).
+
+Selects *exactly* q of m objects, each subset equally likely (Lemma 1:
+every object has inclusion probability q/m).  The paper plugs this into
+Terasort so the sample count is deterministic (q = ceil(ln(n t)) per
+machine), which Theorem 3's Chernoff argument requires.
+
+Implemented as a jittable ``lax.scan``: when considering object o_k with j
+already selected, select with probability (q - j) / (m - k).  The rule
+forces selection when remaining slots equal remaining objects and stops at
+j = q, so exactly q objects always come out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["algorithm_s", "terasort_sample_count"]
+
+
+def terasort_sample_count(n: int, t: int) -> int:
+    """q = ceil(ln(n*t)) samples per machine (Tao et al. setting)."""
+    import math
+    return max(1, math.ceil(math.log(n * t)))
+
+
+def algorithm_s(key: jax.Array, x: jnp.ndarray, q: int) -> jnp.ndarray:
+    """Select exactly q values from x (shape (m,)), unbiased. Returns (q,)."""
+    m = x.shape[0]
+    if q >= m:
+        return x
+
+    def step(carry, inp):
+        j, k = carry
+        k, sub = jax.random.split(k)
+        remaining = m - inp                      # objects left incl. current
+        p = (q - j) / remaining
+        take = jax.random.uniform(sub) < p
+        return (j + take.astype(jnp.int32), k), take
+
+    # j0 == 0, but *derived from the key* so its varying-axes type matches
+    # the carry under shard_map's vma tracking (the count becomes varying
+    # after the first device-local random draw).
+    j0 = jax.random.randint(key, (), 0, 1)
+    (_, _), takes = lax.scan(step, (j0, key), jnp.arange(m))
+    # Extract the q selected values with static shapes: selected indices
+    # sort before non-selected (stable), take the first q.
+    rank = jnp.where(takes, jnp.arange(m), m + jnp.arange(m))
+    order = jnp.argsort(rank)
+    return x[order[:q]]

@@ -1,0 +1,5 @@
+from .synthetic import (lidar_like, scalar_skew_tables, uniform_keys,
+                        zipf_tables)
+
+__all__ = ["uniform_keys", "lidar_like", "zipf_tables",
+           "scalar_skew_tables"]

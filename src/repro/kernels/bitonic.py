@@ -1,0 +1,144 @@
+"""Bitonic sort network as a Pallas TPU kernel — SMMS Round-1 local sort.
+
+The paper's hot spot is the per-machine sort (O((n/t) log(n/t)) of the
+total cost).  On TPU the comparison network must be *vectorial*: a scalar
+heap/quicksort is hostile to the 8x128 VPU.  A bitonic network is branch-
+free, oblivious (fixed schedule — static shapes), and every compare-
+exchange substage is two full-width min/max over a relayout, which maps
+onto VREG shuffles.
+
+Layout choice: the network runs along the LAST (lane) dimension with the
+block resident in VMEM.  Distance-d partner exchange is expressed as a
+reshape (rows, n/(2d), 2, d) so no gathers are needed — Mosaic lowers the
+(2, d) split into sublane/lane rotations.  The direction bit of stage k
+depends only on the run index (position >> (k+1)), a broadcast compare.
+
+Cost: n log^2 n compare-exchanges; for the m = n/t <= 64k row blocks SMMS
+uses, the whole row fits VMEM (64k f32 = 256 KiB << 16 MiB) and the sort
+is memory-light (one HBM read + write per row).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bitonic_sort", "bitonic_sort_kv", "sort_network_block"]
+
+
+def _compare_exchange(x, d: int, k: int, descending_runs: jnp.ndarray):
+    """One substage: exchange partners at distance d inside runs of 2^(k+1).
+
+    x: (rows, n). descending_runs: (n/(2d),) bool — per partner-group
+    direction (precomputed for this (k, d))."""
+    rows, n = x.shape
+    xr = x.reshape(rows, n // (2 * d), 2, d)
+    a = xr[:, :, 0, :]
+    b = xr[:, :, 1, :]
+    mn = jnp.minimum(a, b)
+    mx = jnp.maximum(a, b)
+    down = descending_runs[None, :, None]
+    lo = jnp.where(down, mx, mn)
+    hi = jnp.where(down, mn, mx)
+    return jnp.stack([lo, hi], axis=2).reshape(rows, n)
+
+
+def sort_network_block(x: jnp.ndarray) -> jnp.ndarray:
+    """Full bitonic sort of each row of x: (rows, n), n a power of 2.
+
+    Pure jnp — usable inside a Pallas kernel body or standalone (this is
+    also what the kernel's interpret-mode path executes).
+    """
+    rows, n = x.shape
+    logn = int(math.log2(n))
+    assert 1 << logn == n, "n must be a power of 2"
+    for k in range(logn):               # runs of length 2^(k+1) get sorted
+        for j in range(k, -1, -1):      # exchange distance 2^j
+            d = 1 << j
+            group = jnp.arange(n // (2 * d)) * (2 * d)  # first elt of group
+            down = ((group >> (k + 1)) & 1) == 1        # direction per run
+            x = _compare_exchange(x, d, k, down)
+    return x
+
+
+def _sort_kernel(x_ref, o_ref):
+    o_ref[...] = sort_network_block(x_ref[...])
+
+
+def _sort_kv_kernel(k_ref, v_ref, ok_ref, ov_ref):
+    keys = k_ref[...]
+    vals = v_ref[...]
+    rows, n = keys.shape
+    logn = int(math.log2(n))
+    for k in range(logn):
+        for j in range(k, -1, -1):
+            d = 1 << j
+            group = jnp.arange(n // (2 * d)) * (2 * d)
+            down = (((group >> (k + 1)) & 1) == 1)[None, :, None]
+            kr = keys.reshape(rows, n // (2 * d), 2, d)
+            vr = vals.reshape(rows, n // (2 * d), 2, d)
+            ka, kb = kr[:, :, 0, :], kr[:, :, 1, :]
+            va, vb = vr[:, :, 0, :], vr[:, :, 1, :]
+            swap = (ka > kb) != down    # branch-free compare-exchange
+            klo = jnp.where(swap, kb, ka)
+            khi = jnp.where(swap, ka, kb)
+            vlo = jnp.where(swap, vb, va)
+            vhi = jnp.where(swap, va, vb)
+            keys = jnp.stack([klo, khi], axis=2).reshape(rows, n)
+            vals = jnp.stack([vlo, vhi], axis=2).reshape(rows, n)
+    ok_ref[...] = keys
+    ov_ref[...] = vals
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def bitonic_sort(x: jnp.ndarray, block_rows: int = 8,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Row-wise ascending sort via the Pallas bitonic kernel.
+
+    x: (rows, n).  n is padded to a power of 2 with +inf (stripped after).
+    interpret=True validates on CPU; on TPU pass interpret=False.
+    """
+    rows, n = x.shape
+    np2 = max(2, _next_pow2(n))
+    rpad = (-rows) % block_rows
+    big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
+    xp = jnp.pad(x, ((0, rpad), (0, np2 - n)), constant_values=big)
+    out = pl.pallas_call(
+        _sort_kernel,
+        grid=((rows + rpad) // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, np2), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, np2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:rows, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def bitonic_sort_kv(keys: jnp.ndarray, values: jnp.ndarray,
+                    block_rows: int = 8, interpret: bool = True):
+    """Row-wise key-value sort. keys/values: (rows, n), same shape."""
+    rows, n = keys.shape
+    np2 = max(2, _next_pow2(n))
+    rpad = (-rows) % block_rows
+    big = jnp.asarray(jnp.finfo(keys.dtype).max, keys.dtype)
+    kp = jnp.pad(keys, ((0, rpad), (0, np2 - n)), constant_values=big)
+    vp = jnp.pad(values, ((0, rpad), (0, np2 - n)))
+    spec = pl.BlockSpec((block_rows, np2), lambda i: (i, 0))
+    ok, ov = pl.pallas_call(
+        _sort_kv_kernel,
+        grid=((rows + rpad) // block_rows,),
+        in_specs=[spec, spec],
+        out_specs=(spec, spec),
+        out_shape=(jax.ShapeDtypeStruct(kp.shape, keys.dtype),
+                   jax.ShapeDtypeStruct(vp.shape, values.dtype)),
+        interpret=interpret,
+    )(kp, vp)
+    return ok[:rows, :n], ov[:rows, :n]

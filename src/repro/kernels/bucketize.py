@@ -1,0 +1,79 @@
+"""Fused bucketize + histogram Pallas kernel — SMMS Round-3 planning.
+
+After Algorithm 1 produces the t-1 interior boundaries, every device must
+(a) map each key to its destination bucket and (b) count keys per bucket
+to size the exchange.  Done naively that is a searchsorted pass plus a
+histogram pass (two HBM sweeps over the keys).  This kernel fuses both:
+one sweep, bucket ids and per-block partial counts come out together; the
+caller sums partial counts over blocks (a (blocks, t) reduction, tiny).
+
+Binary search is branch-free: log2(t) broadcast compare/select steps over
+the whole key block, with the boundary vector resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bucketize_histogram"]
+
+
+def _bucketize_kernel(keys_ref, bounds_ref, ids_ref, counts_ref, *, t: int,
+                      n_bounds: int):
+    keys = keys_ref[...]                   # (1, block_n)
+    bounds = bounds_ref[...]               # (1, n_bounds) padded to pow2-1
+    block_n = keys.shape[-1]
+
+    # branch-free binary search: id = #bounds <= key  (side='right')
+    lo = jnp.zeros(keys.shape, jnp.int32)
+    hi = jnp.full(keys.shape, n_bounds, jnp.int32)
+    steps = max(1, math.ceil(math.log2(n_bounds + 1)))
+    for _ in range(steps):
+        mid = (lo + hi) // 2
+        b_mid = jnp.take_along_axis(bounds, mid, axis=-1)
+        go_right = b_mid <= keys
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+    ids = lo                               # in [0, t-1] given real bounds
+    ids_ref[...] = ids
+
+    # per-block histogram: one-hot accumulate (block_n, t) -> (1, t)
+    onehot = (ids[0, :, None] == jnp.arange(t)[None, :]).astype(jnp.int32)
+    counts_ref[...] = jnp.sum(onehot, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("t", "block_n", "interpret"))
+def bucketize_histogram(keys: jnp.ndarray, boundaries: jnp.ndarray, t: int,
+                        block_n: int = 1024, interpret: bool = True):
+    """keys: (n,), boundaries: (t-1,) ascending. Returns (ids (n,), counts (t,)).
+
+    Buckets are [b_k, b_{k+1}): id = searchsorted(boundaries, key, 'right').
+    """
+    n = keys.shape[0]
+    n_bounds = boundaries.shape[0]
+    pad = (-n) % block_n
+    big = jnp.asarray(jnp.finfo(keys.dtype).max, keys.dtype)
+    kp = jnp.pad(keys, (0, pad), constant_values=big)[None, :]  # (1, N)
+    bp = boundaries[None, :]
+    blocks = kp.shape[1] // block_n
+
+    ids, partial = pl.pallas_call(
+        functools.partial(_bucketize_kernel, t=t, n_bounds=n_bounds),
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((1, block_n), lambda i: (0, i)),
+                  pl.BlockSpec((1, n_bounds), lambda i: (0, 0))],
+        out_specs=(pl.BlockSpec((1, block_n), lambda i: (0, i)),
+                   pl.BlockSpec((1, t), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct(kp.shape, jnp.int32),
+                   jax.ShapeDtypeStruct((blocks, t), jnp.int32)),
+        interpret=interpret,
+    )(kp, bp)
+    counts = jnp.sum(partial, axis=0)
+    if pad:
+        # padded keys (=dtype max) land in the last bucket; remove them
+        counts = counts.at[t - 1].add(-pad)
+    return ids[0, :n], counts

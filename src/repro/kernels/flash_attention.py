@@ -1,0 +1,125 @@
+"""Blocked causal attention (flash-style online softmax) in Pallas.
+
+The LM stack's compute hot spot.  Tiled for VMEM: the grid walks
+(batch*q_heads, q_blocks, kv_blocks) with the kv axis innermost so the
+running (m, l, acc) statistics live in VMEM scratch across kv iterations
+— one pass over K/V per q block, no (Sq, Sk) score matrix ever hits HBM.
+
+Supports GQA (kv-head = q-head // group) via the K/V BlockSpec index
+maps, and a sliding window (gemma3's 5:1 local:global pattern) via the
+mask.  Block shapes default to (128, 128) — MXU-aligned in both matmul
+dims for every head_dim in the assigned archs (64..256).
+
+Numerics: scores are computed in f32 with the -1e30 masking trick so no
+-inf/-inf NaNs appear in the online-softmax rescale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               sm_scale: float, causal: bool, window: Optional[int],
+               block_q: int, block_k: int, seq_q: int, seq_k: int,
+               num_kv_blocks: int):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (block_q, d)
+    k = k_ref[0].astype(jnp.float32)            # (block_k, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+    qpos = qi * block_q + jnp.arange(block_q)[:, None] + (seq_k - seq_q)
+    kpos = ki * block_k + jnp.arange(block_k)[None, :]
+    mask = kpos < seq_k                          # kv padding
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_scr[...]                          # (block_q, 1)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.where(l == 0, 1.0, l)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).  Returns (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    sm_scale = 1.0 / (d ** 0.5)
+
+    block_q = min(block_q, max(8, 1 << (sq - 1).bit_length()))
+    block_k = min(block_k, max(8, 1 << (sk - 1).bit_length()))
+    qpad, kpad = (-sq) % block_q, (-sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, qpad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+
+    qp = qp.reshape(b * hq, sq + qpad, d)
+    kp = kp.reshape(b * hkv, sk + kpad, d)
+    vp = vp.reshape(b * hkv, sk + kpad, d)
+    nq, nk = (sq + qpad) // block_q, (sk + kpad) // block_k
+
+    def kv_index(bh, qi, ki):
+        return (bh // hq) * hkv + (bh % hq) // g, ki, 0
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, sm_scale=sm_scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          seq_q=sq, seq_k=sk, num_kv_blocks=nk),
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out.reshape(b, hq, sq + qpad, d)[:, :, :sq, :]

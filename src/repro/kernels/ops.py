@@ -1,0 +1,48 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels run with interpret=True (the kernel
+body executes in Python/XLA on CPU — correctness path).  On a real TPU
+runtime set ``repro.kernels.ops.INTERPRET = False`` (or the
+REPRO_PALLAS_INTERPRET env var) and the same calls compile with Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import bitonic, bucketize, flash_attention as fa
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+__all__ = ["sort", "sort_kv", "bucketize_histogram", "flash_attention",
+           "INTERPRET"]
+
+
+def sort(x: jnp.ndarray, block_rows: int = 8) -> jnp.ndarray:
+    """Row-wise ascending sort (bitonic network kernel)."""
+    return bitonic.bitonic_sort(x, block_rows=block_rows,
+                                interpret=INTERPRET)
+
+
+def sort_kv(keys: jnp.ndarray, values: jnp.ndarray, block_rows: int = 8):
+    """Row-wise key-value sort (bitonic network kernel)."""
+    return bitonic.bitonic_sort_kv(keys, values, block_rows=block_rows,
+                                   interpret=INTERPRET)
+
+
+def bucketize_histogram(keys: jnp.ndarray, boundaries: jnp.ndarray, t: int,
+                        block_n: int = 1024):
+    """Fused bucket-id + histogram (SMMS Round-3 planning)."""
+    return bucketize.bucketize_histogram(keys, boundaries, t,
+                                         block_n=block_n,
+                                         interpret=INTERPRET)
+
+
+def flash_attention(q, k, v, causal: bool = True, window=None,
+                    block_q: int = 128, block_k: int = 128):
+    """Blocked online-softmax attention with GQA + sliding window."""
+    return fa.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=INTERPRET)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against the
+function here with the same name.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = ["sort_ref", "sort_kv_ref", "bucketize_ref", "attention_ref"]
+
+
+def sort_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise ascending sort. x: (..., n)."""
+    return jnp.sort(x, axis=-1)
+
+
+def sort_kv_ref(keys: jnp.ndarray, values: jnp.ndarray):
+    """Row-wise key-value sort (stable in key ties is NOT required —
+    bitonic networks are unstable; tests use distinct keys)."""
+    order = jnp.argsort(keys, axis=-1)
+    return (jnp.take_along_axis(keys, order, axis=-1),
+            jnp.take_along_axis(values, order, axis=-1))
+
+
+def bucketize_ref(keys: jnp.ndarray, boundaries: jnp.ndarray, t: int):
+    """Bucket ids + per-bucket histogram.
+
+    keys: (n,), boundaries: (t-1,) ascending interior boundaries.
+    id = number of boundaries <= key (i.e. buckets are [b_k, b_{k+1})).
+    """
+    ids = jnp.searchsorted(boundaries, keys, side="right").astype(jnp.int32)
+    counts = jnp.sum(ids[:, None] == jnp.arange(t)[None, :], axis=0)
+    return ids, counts.astype(jnp.int32)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """Multi-head attention oracle with GQA + optional sliding window.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+    window: attend only to keys within `window` positions behind the query
+    (inclusive of self), i.e. key j visible to query i iff
+    i - window < j <= i (when causal).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    kx = jnp.repeat(k, g, axis=1)
+    vx = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, kx) / jnp.sqrt(d).astype(q.dtype)
+    skv = k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)  # right-aligned queries
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32), -jnp.inf)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), vx)

@@ -1,0 +1,36 @@
+"""Production mesh builders.
+
+Importing this module never touches jax device state — meshes are built
+inside functions only (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a 2-pod 'pod' axis.
+
+    'pod'   — pure data parallelism (slow inter-pod links: gradient
+              all-reduce only, optionally int8-compressed),
+    'data'  — batch + FSDP,
+    'model' — TP / EP / sequence-sharded KV.
+    """
+    import jax
+    from jax.sharding import AxisType
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(t: int = 8):
+    """Small mesh over however many (host) devices exist — examples/tests."""
+    import jax
+    from jax.sharding import AxisType
+
+    n = len(jax.devices())
+    t = min(t, n)
+    data = max(1, t // 2) if t > 1 else 1
+    model = t // data
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

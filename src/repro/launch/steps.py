@@ -1,0 +1,162 @@
+"""jit-compiled, sharding-annotated step builders (train / prefill / decode).
+
+These are what both the real drivers (train.py / serve.py) and the
+multi-pod dry-run lower: one function per (kind), with in/out shardings
+derived from sharding/specs.py for the given mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models.model import (decode_step, init_cache, params_shape,
+                                prefill, train_loss)
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, \
+    cosine_schedule
+from repro.sharding.specs import make_rules
+
+__all__ = ["build_train_step", "build_prefill_step", "build_decode_step",
+           "train_input_sharding", "StepBundle"]
+
+
+class StepBundle:
+    """A jitted step + everything the dry-run needs to lower it."""
+
+    def __init__(self, fn, arg_shapes: Tuple, rules):
+        self.fn = fn
+        self.arg_shapes = arg_shapes
+        self.rules = rules
+
+    def lower(self):
+        return self.fn.lower(*self.arg_shapes)
+
+
+def _named(mesh: Optional[Mesh], spec_tree):
+    if mesh is None:
+        return None
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def train_input_sharding(cfg: ArchConfig, rules, batch: int):
+    spec: Dict[str, P] = {
+        "tokens": rules.batch_spec(batch),
+        "labels": rules.batch_spec(batch),
+    }
+    if cfg.frontend == "vision":
+        b_ax = rules.batch_spec(batch)[0]
+        spec["embeds"] = P(b_ax, None, None)
+    return spec
+
+
+def build_train_step(cfg: ArchConfig, mesh: Optional[Mesh],
+                     shape: ShapeSpec, *, remat: str = "full",
+                     scan_unroll: int = 1, loss_chunk: int = 512,
+                     adamw: AdamWConfig = AdamWConfig(),
+                     lr_schedule=None) -> StepBundle:
+    rules = make_rules(mesh, cfg)
+    pshape = params_shape(cfg)
+    pspecs = rules.param_specs(pshape)
+    oshape = jax.eval_shape(functools.partial(adamw_init, cfg=adamw),
+                            pshape)
+    ospecs = {"step": P(), "m": pspecs, "v": pspecs}
+
+    def step_fn(params, opt_state, batch):
+        def loss_fn(p):
+            return train_loss(p, cfg, batch, rules=rules, remat=remat,
+                              loss_chunk=loss_chunk,
+                              scan_unroll=scan_unroll)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        lr = (lr_schedule(opt_state["step"]) if lr_schedule is not None
+              else adamw.lr)
+        new_params, new_opt, gnorm = adamw_update(params, grads, opt_state,
+                                                  cfg=adamw, lr=lr)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    in_spec = train_input_sharding(cfg, rules, shape.global_batch)
+    from repro.configs.shapes import input_specs
+    batch_shapes = input_specs(cfg, shape)
+
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                      _named(mesh, in_spec)),
+        out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                       _named(mesh, {"loss": P(), "grad_norm": P()})),
+        donate_argnums=(0, 1),
+    )
+    return StepBundle(jitted, (pshape, oshape, batch_shapes), rules)
+
+
+def build_prefill_step(cfg: ArchConfig, mesh: Optional[Mesh],
+                       shape: ShapeSpec, *, scan_unroll: int = 1
+                       ) -> StepBundle:
+    rules = make_rules(mesh, cfg)
+    pshape = params_shape(cfg)
+    pspecs = rules.param_specs(pshape)
+    from repro.configs.shapes import input_specs
+    specs = input_specs(cfg, shape)
+    cache_shape = specs["cache"]
+    cspecs = rules.cache_specs(cache_shape)
+    b = shape.global_batch
+    tok_spec = rules.batch_spec(b)
+
+    def step_fn(params, tokens, cache, embeds=None):
+        return prefill(params, cfg, tokens, cache, embeds=embeds,
+                       rules=rules, scan_unroll=scan_unroll)
+
+    in_sh = [_named(mesh, pspecs), _named(mesh, tok_spec),
+             _named(mesh, cspecs)]
+    args = [pshape, specs["tokens"], cache_shape]
+    if cfg.frontend == "vision":
+        in_sh.append(_named(mesh, P(tok_spec[0], None, None)))
+        args.append(specs["embeds"])
+    logits_spec = P(tok_spec[0], "model") if mesh is not None else P()
+
+    jitted = jax.jit(step_fn, in_shardings=tuple(in_sh),
+                     out_shardings=(_named(mesh, logits_spec),
+                                    _named(mesh, cspecs)),
+                     donate_argnums=(2,))
+    return StepBundle(jitted, tuple(args), rules)
+
+
+def build_decode_step(cfg: ArchConfig, mesh: Optional[Mesh],
+                      shape: ShapeSpec, *, scan_unroll: int = 1
+                      ) -> StepBundle:
+    rules = make_rules(mesh, cfg)
+    pshape = params_shape(cfg)
+    pspecs = rules.param_specs(pshape)
+    from repro.configs.shapes import input_specs
+    specs = input_specs(cfg, shape)
+    cache_shape = specs["cache"]
+    cspecs = rules.cache_specs(cache_shape)
+    tok_spec = rules.batch_spec(shape.global_batch)
+
+    def step_fn(params, token, cache):
+        return decode_step(params, cfg, token, cache, rules=rules,
+                           scan_unroll=scan_unroll)
+
+    logits_spec = (P(tok_spec[0], "model") if mesh is not None else P())
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(_named(mesh, pspecs), _named(mesh, tok_spec),
+                      _named(mesh, cspecs)),
+        out_shardings=(_named(mesh, logits_spec), _named(mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+    return StepBundle(jitted, (pshape, specs["token"], cache_shape), rules)
+
+
+def build_step(cfg: ArchConfig, mesh: Optional[Mesh], shape: ShapeSpec,
+               **kw) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape, **kw)
+    return build_decode_step(cfg, mesh, shape, **kw)

@@ -1,0 +1,5 @@
+from .model import (decode_step, forward, init_cache, init_params,
+                    params_shape, prefill, train_loss)
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params",
+           "params_shape", "prefill", "train_loss"]

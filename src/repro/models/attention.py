@@ -1,0 +1,152 @@
+"""Attention for training/prefill/decode.
+
+Two interchangeable backends:
+
+* ``blockwise`` (default for pjit programs) — pure-jnp flash-style online
+  softmax: a python loop over q chunks, each scanning ONLY its causal kv
+  prefix (static slice per chunk, so HLO FLOPs == causal-optimal at block
+  granularity; no (S, S) score matrix is ever materialized).  Fully
+  GSPMD-shardable.
+* ``pallas`` — the kernels/flash_attention.py Mosaic kernel (TPU runtime).
+
+Decode (q_len == 1) takes the dense row path: scores are (B, H, 1, S),
+linear in S. Sequence-sharded KV at decode resolves to a psum-combined
+partial softmax under GSPMD (flash-decode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["attention"]
+
+_NEG = -1e30
+
+# Roofline builds set this True so the kv-block scan unrolls and XLA's
+# cost analysis sees every block (while-loop bodies are otherwise counted
+# once).  Production lowerings keep the compact while-loop form.
+UNROLL_SCANS = False
+
+
+def _dense_rows(q, k, v, q_offset: int, causal: bool,
+                window: Optional[int]) -> jnp.ndarray:
+    """Full-row attention for short q (decode / tiny prefill).
+
+    GQA is computed with *grouped* einsums — q reshaped to
+    (B, Hkv, g, Sq, D) against un-expanded K/V — so a seq-sharded KV
+    cache is consumed in place: the softmax denominator reduces over the
+    sharded seq axis (flash-decode's psum combine) instead of GSPMD
+    resharding a broadcast-materialized (B, Hq, S, D) tensor (which cost
+    2 x 512 MiB of all-gather per layer per step when measured)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, hkv, g, sq, d)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg,
+                   k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v)
+    return o.reshape(b, hq, sq, d)
+
+
+def _chunk_scan(q_c, k_pfx, v_pfx, q_offset: int, window: Optional[int],
+                block_k: int, causal: bool) -> jnp.ndarray:
+    """Online-softmax over kv blocks for one q chunk (kv prefix only).
+
+    GQA via grouped einsums — K/V are never head-expanded (see
+    _dense_rows)."""
+    b, hq, qc, d = q_c.shape
+    hkv, sk = k_pfx.shape[1], k_pfx.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5
+    nkb = -(-sk // block_k)
+    pad = nkb * block_k - sk
+    if pad:
+        k_pfx = jnp.pad(k_pfx, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_pfx = jnp.pad(v_pfx, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k_pfx.reshape(b, hkv, nkb, block_k, d).transpose(2, 0, 1, 3, 4)
+    vb = v_pfx.reshape(b, hkv, nkb, block_k, d).transpose(2, 0, 1, 3, 4)
+    qg = q_c.reshape(b, hkv, g, qc, d)
+
+    qpos = jnp.arange(qc)[:, None] + q_offset
+
+    def step(carry, inp):
+        m, l, acc = carry
+        k_blk, v_blk, blk_i = inp
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qg,
+                       k_blk).astype(jnp.float32) * scale
+        kpos = blk_i * block_k + jnp.arange(block_k)[None, :]
+        mask = kpos < sk
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, hkv, g, qc, 1), _NEG, jnp.float32),
+            jnp.zeros((b, hkv, g, qc, 1), jnp.float32),
+            jnp.zeros((b, hkv, g, qc, d), jnp.float32))
+    (m, l, acc), _ = lax.scan(step, init, (kb, vb, jnp.arange(nkb)),
+                              unroll=nkb if UNROLL_SCANS else 1)
+    out = (acc / jnp.where(l == 0, 1.0, l)).astype(q_c.dtype)
+    return out.reshape(b, hq, qc, d)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: Optional[int] = None,
+              q_offset: Optional[int] = None, backend: str = "blockwise",
+              q_chunk: int = 2048, block_k: int = 2048) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) -> (B, Hq, Sq, D).
+
+    q_offset: absolute position of q[0] (default right-aligned to k)."""
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    if q_offset is None:
+        q_offset = sk - sq
+
+    if backend == "pallas":
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, causal=causal, window=window)
+
+    if sq <= 16:  # decode / tiny q: dense rows, linear in S
+        return _dense_rows(q, k, v, q_offset, causal, window)
+
+    q_chunk = min(q_chunk, sq)
+    outs = []
+    for lo in range(0, sq, q_chunk):
+        hi = min(sq, lo + q_chunk)
+        # static causal prefix: keys beyond this chunk's last query are
+        # masked anyway — never compute them
+        kv_hi = sk
+        if causal:
+            kv_hi = min(sk, q_offset + hi)
+        kv_lo = 0
+        if window is not None:
+            kv_lo = max(0, q_offset + lo - window + 1)
+            kv_lo = (kv_lo // block_k) * block_k  # block-align
+        o = _chunk_scan(q[:, :, lo:hi], k[:, :, kv_lo:kv_hi],
+                        v[:, :, kv_lo:kv_hi],
+                        q_offset + lo - kv_lo, window, block_k, causal)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=2) if len(outs) > 1 else outs[0]

@@ -1,0 +1,97 @@
+"""Basic model layers: RMSNorm, RoPE, gated MLPs, embeddings, chunked loss."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rope", "gated_mlp", "init_dense", "init_mlp",
+           "chunked_cross_entropy"]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(
+        jnp.float32))).astype(dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10_000.0
+         ) -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, H, D), positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freq[None, :]  # (S, h)
+        ang = ang[None, :, None, :]                                   # 1,S,1,h
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freq
+        ang = ang[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def gated_mlp(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+              w_down: jnp.ndarray, act: str = "swiglu") -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    if act == "geglu":
+        h = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def init_dense(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) == 2 else shape[-2]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_mlp(key, d: int, ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": init_dense(k1, (d, ff), dtype),
+            "w_up": init_dense(k2, (d, ff), dtype),
+            "w_down": init_dense(k3, (ff, d), dtype)}
+
+
+def chunked_cross_entropy(x: jnp.ndarray, w_unembed: jnp.ndarray,
+                          labels: jnp.ndarray, chunk: int = 512,
+                          vocab_size: Optional[int] = None) -> jnp.ndarray:
+    """Token-mean CE without materializing (B, S, V) logits.
+
+    x: (B, S, d) final hidden states; w_unembed: (d, V_padded);
+    labels: (B, S) int32, -1 = ignore.  Sequence is processed in chunks
+    (a python loop over static slices — the chunk logits peak at
+    (B, chunk, V) and are immediately reduced, which is what keeps the
+    262k-vocab archs inside HBM).  Padded vocab rows are masked out.
+    """
+    b, s, d = x.shape
+    v = w_unembed.shape[1]
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    total = jnp.zeros((), jnp.float32)
+    count = jnp.zeros((), jnp.float32)
+    neg = jnp.asarray(-1e30, jnp.float32)
+    for c in range(n_chunks):
+        lo = c * chunk
+        hi = min(s, lo + chunk)
+        logits = jnp.einsum("bsd,dv->bsv", x[:, lo:hi],
+                            w_unembed).astype(jnp.float32)
+        if vocab_size is not None and vocab_size < v:
+            pad_mask = jnp.arange(v) >= vocab_size
+            logits = jnp.where(pad_mask[None, None, :], neg, logits)
+        lab = labels[:, lo:hi]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(lab, 0)[..., None], axis=-1)[..., 0]
+        valid = lab >= 0
+        total += jnp.sum(jnp.where(valid, lse - picked, 0.0))
+        count += jnp.sum(valid.astype(jnp.float32))
+    return total / jnp.maximum(count, 1.0)

@@ -1,0 +1,401 @@
+"""Decoder LM assembly: init / train forward / prefill / decode.
+
+Layers are grouped into *periods* (the repeating pattern unit: 1 for
+uniform stacks, 6 for gemma3's 5-local:1-global, 8 for jamba's 1-attn:7-
+mamba) and the period is scanned with ``lax.scan`` over stacked params —
+HLO size stays O(period) regardless of depth, which is what lets the
+126-layer 405B config lower in seconds.  Remat (``jax.checkpoint``) wraps
+the scanned body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.sharding.specs import ShardingRules, make_rules
+from .attention import attention
+from .layers import (chunked_cross_entropy, gated_mlp, init_dense, init_mlp,
+                     rms_norm, rope)
+from .moe import init_moe, moe_layer
+from .ssm import MambaState, init_mamba, init_mamba_state, mamba_block
+
+__all__ = ["init_params", "params_shape", "train_loss", "forward",
+           "init_cache", "prefill", "decode_step"]
+
+# Decode cache-write strategy: 'dus' (dynamic_update_slice — the naive
+# baseline) or 'select' (sharding-preserving masked write — §Perf
+# optimization, -29% HBM bytes on granite decode_32k).  Module-level so
+# the dry-run can A/B it via --opts.  Default = the measured winner.
+CACHE_WRITE = "select"
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, pos: int):
+    d, dtype = cfg.d_model, cfg.param_dtype
+    kind = cfg.kind(pos)
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), dtype)}
+    if kind == "mamba":
+        p["mamba"] = init_mamba(ks[0], d, cfg.ssm, dtype)
+    else:
+        hd = cfg.head_dim_
+        p["wq"] = init_dense(ks[0], (d, cfg.n_heads * hd), dtype)
+        p["wk"] = init_dense(ks[1], (d, cfg.n_kv_heads * hd), dtype)
+        p["wv"] = init_dense(ks[2], (d, cfg.n_kv_heads * hd), dtype)
+        p["wo"] = init_dense(ks[3], (cfg.n_heads * hd, d), dtype)
+    if cfg.is_moe(pos):
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["moe"] = init_moe(ks[4], d, cfg.moe, dtype)
+    elif cfg.d_ff > 0:
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["mlp"] = init_mlp(ks[5], d, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    d, v, dtype = cfg.d_model, cfg.padded_vocab, cfg.param_dtype
+    k_embed, k_un, k_fe, k_blocks = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        # 1/sqrt(d) embeddings: unit-variance hidden state after the
+        # gemma-style sqrt(d) embed_scale, and O(1) tied logits at init.
+        "embed": init_dense(k_embed, (v, d), dtype, scale=d ** -0.5),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_dense(k_un, (d, v), dtype)
+    if cfg.frontend == "vision":
+        params["frontend_proj"] = init_dense(k_fe, (cfg.frontend_dim, d),
+                                             dtype)
+
+    period_keys = jax.random.split(k_blocks, cfg.n_periods)
+
+    def one_period(k):
+        pks = jax.random.split(k, cfg.period)
+        return {str(pos): _init_block(pks[pos], cfg, pos)
+                for pos in range(cfg.period)}
+
+    params["periods"] = jax.vmap(one_period)(period_keys)
+    return params
+
+
+def params_shape(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _attn_sub(bp, x, cfg: ArchConfig, pos: int, rules: ShardingRules,
+              kv_in: Optional[Tuple] = None, q_offset=0):
+    """Attention sub-block.  kv_in: (k_cache, v_cache, traced_pos) at
+    decode; None at train/prefill.  Returns (out, (k, v) fresh)."""
+    b, s, d = x.shape
+    hd = cfg.head_dim_
+    window = cfg.sliding_window if cfg.kind(pos) == "attn_local" else None
+
+    h = rms_norm(x, bp["ln1"], cfg.rms_eps)
+    q = jnp.einsum("bsd,dq->bsq", h, bp["wq"]).reshape(
+        b, s, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dq->bsq", h, bp["wk"]).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dq->bsq", h, bp["wv"]).reshape(
+        b, s, cfg.n_kv_heads, hd)
+
+    if kv_in is None:
+        positions = jnp.arange(s)
+        q_off = 0
+    else:
+        positions = q_offset + jnp.arange(s)
+        q_off = q_offset
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q, k, v = rules.heads(q), rules.heads(k), rules.heads(v)
+
+    qt = q.transpose(0, 2, 1, 3)
+    quant = kv_in is not None and "k_scale" in kv_in[0]
+    if kv_in is None:
+        kt, vt = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+        o = attention(qt, kt, vt, causal=True, window=window, q_offset=0)
+        return (jnp.einsum("bsq,qd->bsd",
+                           o.transpose(0, 2, 1, 3).reshape(
+                               b, s, cfg.n_heads * hd), bp["wo"]), None)
+
+    cp, _ = kv_in
+    new_cp = dict(cp)
+    if s > 1:
+        # prefill: attend over the FRESH (length-s) k/v — static shapes,
+        # blockwise path — then write them into the cache at offset 0
+        # (single-shot prefill always starts the sequence).
+        kt, vt = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+        o = attention(qt, kt, vt, causal=True, window=window, q_offset=0)
+        for name, t in (("k", kt), ("v", vt)):
+            if quant:
+                q8, sc = _quant_rows(t)
+                new_cp[name] = lax.dynamic_update_slice(
+                    cp[name], q8, (0, 0, 0, 0))
+                new_cp[name + "_scale"] = lax.dynamic_update_slice(
+                    cp[name + "_scale"], sc, (0, 0, 0, 0))
+            else:
+                new_cp[name] = lax.dynamic_update_slice(
+                    cp[name], t.astype(cp[name].dtype), (0, 0, 0, 0))
+    else:
+        # decode: dense single-row attention over the whole cache buffer,
+        # masked by the traced position (linear in S_max).
+        for name, t in (("k", k.transpose(0, 2, 1, 3)),
+                        ("v", v.transpose(0, 2, 1, 3))):
+            writes = []
+            if quant:
+                q8, sc = _quant_rows(t)
+                writes = [(name, q8), (name + "_scale", sc)]
+            else:
+                writes = [(name, t.astype(cp[name].dtype))]
+            for wname, wval in writes:
+                if CACHE_WRITE == "select":
+                    # Elementwise masked select: a dynamic-slice write at
+                    # a traced position into the seq-sharded cache forces
+                    # GSPMD into involuntary full rematerialization (an
+                    # all-gather of the whole cache per layer per step).
+                    # The select is elementwise, so the seq sharding
+                    # flows straight through.  See EXPERIMENTS §Perf.
+                    sel = (jnp.arange(cp[wname].shape[2])[None, None, :,
+                                                          None]
+                           == q_offset)
+                    new_cp[wname] = jnp.where(sel, wval, cp[wname])
+                else:  # 'dus' — the naive baseline
+                    new_cp[wname] = lax.dynamic_update_slice(
+                        cp[wname], wval, (0, 0, q_offset, 0))
+        if quant:
+            k_full = (new_cp["k"].astype(jnp.float32)
+                      * new_cp["k_scale"]).astype(x.dtype)
+            v_full = (new_cp["v"].astype(jnp.float32)
+                      * new_cp["v_scale"]).astype(x.dtype)
+        else:
+            k_full, v_full = new_cp["k"], new_cp["v"]
+        o = attention(qt, k_full, v_full, causal=True, window=window,
+                      q_offset=q_off)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * hd)
+    out = jnp.einsum("bsq,qd->bsd", o, bp["wo"])
+    return out, new_cp
+
+
+def _ffn_sub(bp, x, cfg: ArchConfig, pos: int, rules: ShardingRules):
+    if cfg.is_moe(pos):
+        h = rms_norm(x, bp["ln2"], cfg.rms_eps)
+        y, _stats = moe_layer(bp["moe"], h, cfg.moe, act=cfg.act,
+                              shard_slots=rules.moe_slots,
+                              shard_groups=rules.group_major,
+                              groups=rules.moe_groups())
+        return y
+    if cfg.d_ff > 0:
+        h = rms_norm(x, bp["ln2"], cfg.rms_eps)
+        return gated_mlp(h, bp["mlp"]["w_gate"], bp["mlp"]["w_up"],
+                         bp["mlp"]["w_down"], act=cfg.act)
+    return None
+
+
+def _apply_period_train(period_params, x, cfg: ArchConfig,
+                        rules: ShardingRules):
+    for pos in range(cfg.period):
+        bp = period_params[str(pos)]
+        if cfg.kind(pos) == "mamba":
+            h = rms_norm(x, bp["ln1"], cfg.rms_eps)
+            y, _ = mamba_block(bp["mamba"], h, cfg.ssm)
+            x = x + y
+        else:
+            y, _ = _attn_sub(bp, x, cfg, pos, rules)
+            x = x + y
+        f = _ffn_sub(bp, x, cfg, pos, rules)
+        if f is not None:
+            x = x + f
+        x = rules.hidden(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ArchConfig, tokens: jnp.ndarray,
+            embeds: Optional[jnp.ndarray] = None,
+            rules: Optional[ShardingRules] = None,
+            remat: str = "full", scan_unroll: int = 1) -> jnp.ndarray:
+    """Token ids (+ optional frontend embeds) -> final hidden states."""
+    rules = rules or make_rules(None, cfg)
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    if cfg.frontend == "vision" and embeds is not None:
+        fe = jnp.einsum("bse,ed->bsd", embeds.astype(cfg.compute_dtype),
+                        params["frontend_proj"])
+        x = jnp.concatenate([fe, x], axis=1)
+    x = rules.hidden(x)
+
+    body = functools.partial(_apply_period_train, cfg=cfg, rules=rules)
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def scan_fn(carry, period_params):
+        return body(period_params, carry), None
+
+    x, _ = lax.scan(scan_fn, x, params["periods"], unroll=scan_unroll)
+    return rms_norm(x, params["final_norm"], cfg.rms_eps)
+
+
+def train_loss(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+               rules: Optional[ShardingRules] = None,
+               remat: str = "full", loss_chunk: int = 512,
+               scan_unroll: int = 1) -> jnp.ndarray:
+    x = forward(params, cfg, batch["tokens"], batch.get("embeds"),
+                rules=rules, remat=remat, scan_unroll=scan_unroll)
+    w_un = (params["embed"].T if cfg.tie_embeddings
+            else params["unembed"]).astype(cfg.compute_dtype)
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "embeds" in batch:
+        # frontend positions carry no next-token loss
+        pad = jnp.full((labels.shape[0], batch["embeds"].shape[1]), -1,
+                       labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    return chunked_cross_entropy(x, w_un, labels, chunk=loss_chunk,
+                                 vocab_size=cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=None) -> Dict[str, Any]:
+    dtype = dtype or cfg.compute_dtype
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32), "periods": {}}
+    np_, hd = cfg.n_periods, cfg.head_dim_
+    for pos in range(cfg.period):
+        kind = cfg.kind(pos)
+        if kind == "mamba":
+            st = init_mamba_state(batch, cfg.d_model, cfg.ssm, dtype)
+            cache["periods"][str(pos)] = {
+                "conv": jnp.zeros((np_,) + st.conv.shape, dtype),
+                "ssm": jnp.zeros((np_,) + st.ssm.shape, jnp.float32),
+            }
+        else:
+            shape = (np_, batch, cfg.n_kv_heads, max_seq, hd)
+            if cfg.kv_quant:
+                # int8 rows + f32 per-(b,h,s) scales: half the residency
+                sshape = shape[:-1] + (1,)
+                cache["periods"][str(pos)] = {
+                    "k": jnp.zeros(shape, jnp.int8),
+                    "k_scale": jnp.zeros(sshape, jnp.float32),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "v_scale": jnp.zeros(sshape, jnp.float32),
+                }
+            else:
+                cache["periods"][str(pos)] = {
+                    "k": jnp.zeros(shape, dtype),
+                    "v": jnp.zeros(shape, dtype),
+                }
+    return cache
+
+
+def _quant_rows(x: jnp.ndarray):
+    """Per-row int8 quantization over the last dim.  x: (..., hd)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127,
+                 127).astype(jnp.int8)
+    return q, scale
+
+
+def _apply_period_serve(period_params, cache_period, x, cfg: ArchConfig,
+                        rules: ShardingRules, q_offset):
+    new_cache = {}
+    for pos in range(cfg.period):
+        bp = period_params[str(pos)]
+        cp = cache_period[str(pos)]
+        if cfg.kind(pos) == "mamba":
+            h = rms_norm(x, bp["ln1"], cfg.rms_eps)
+            y, st = mamba_block(bp["mamba"], h, cfg.ssm,
+                                state=MambaState(cp["conv"], cp["ssm"]))
+            new_cache[str(pos)] = {"conv": st.conv.astype(cp["conv"].dtype),
+                                   "ssm": st.ssm}
+            x = x + y
+        else:
+            y, new_cp = _attn_sub(bp, x, cfg, pos, rules,
+                                  kv_in=(cp, q_offset),
+                                  q_offset=q_offset)
+            new_cache[str(pos)] = new_cp
+            x = x + y
+        f = _ffn_sub(bp, x, cfg, pos, rules)
+        if f is not None:
+            x = x + f
+        x = rules.hidden(x)
+    return x, new_cache
+
+
+def _serve_forward(params, cfg, x, cache, rules, scan_unroll: int = 1):
+    q_offset = cache["pos"]
+
+    def scan_fn(carry, inp):
+        period_params, cache_period = inp
+        y, new_cp = _apply_period_serve(period_params, cache_period, carry,
+                                        cfg, rules, q_offset)
+        return y, new_cp
+
+    x, new_periods = lax.scan(scan_fn, x,
+                              (params["periods"], cache["periods"]),
+                              unroll=scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    new_cache = {"pos": cache["pos"] + x.shape[1], "periods": new_periods}
+    return x, new_cache
+
+
+def _embed_in(params, cfg, tokens, embeds):
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    if cfg.frontend == "vision" and embeds is not None:
+        fe = jnp.einsum("bse,ed->bsd", embeds.astype(cfg.compute_dtype),
+                        params["frontend_proj"])
+        x = jnp.concatenate([fe, x], axis=1)
+    return x
+
+
+def prefill(params, cfg: ArchConfig, tokens: jnp.ndarray,
+            cache: Dict[str, Any],
+            embeds: Optional[jnp.ndarray] = None,
+            rules: Optional[ShardingRules] = None, scan_unroll: int = 1):
+    """Run the prompt through the model, filling the cache.
+
+    Returns (last-position logits (B, V), cache)."""
+    rules = rules or make_rules(None, cfg)
+    x = rules.hidden(_embed_in(params, cfg, tokens, embeds))
+    x, cache = _serve_forward(params, cfg, x, cache, rules, scan_unroll)
+    w_un = (params["embed"].T if cfg.tie_embeddings
+            else params["unembed"]).astype(cfg.compute_dtype)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], w_un)
+    return logits, cache
+
+
+def decode_step(params, cfg: ArchConfig, token: jnp.ndarray,
+                cache: Dict[str, Any],
+                rules: Optional[ShardingRules] = None, scan_unroll: int = 1):
+    """One autoregressive step.  token: (B, 1) -> logits (B, V)."""
+    rules = rules or make_rules(None, cfg)
+    x = rules.hidden(_embed_in(params, cfg, token, None))
+    x, cache = _serve_forward(params, cfg, x, cache, rules, scan_unroll)
+    w_un = (params["embed"].T if cfg.tie_embeddings
+            else params["unembed"]).astype(cfg.compute_dtype)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], w_un)
+    return logits, cache

@@ -1,0 +1,200 @@
+"""Mamba-2 SSD (state-space duality) block — chunked train/prefill + O(1)
+recurrent decode.  Used by mamba2-130m and the jamba hybrid.
+
+Chunked SSD (arXiv:2405.21060 §6): within a chunk the recurrence is
+expanded as a masked quadratic form (MXU-friendly), across chunks a short
+scan carries the (heads, head_dim, d_state) state.  head_dim is chosen in
+configs so n_heads divides the tensor axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import SSMConfig
+from .layers import init_dense, rms_norm
+
+# see attention.UNROLL_SCANS — roofline builds unroll the chunk scan
+UNROLL_SCANS = False
+
+__all__ = ["init_mamba", "mamba_block", "mamba_decode_step", "MambaState",
+           "init_mamba_state", "ssd_chunked"]
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray   # (B, conv_width-1, conv_dim)
+    ssm: jnp.ndarray    # (B, H, head_dim, d_state)
+
+
+def _conv_dim(d_inner: int, s: SSMConfig) -> int:
+    return d_inner + 2 * s.d_state  # x, B, C go through the causal conv
+
+
+def init_mamba(key, d: int, s: SSMConfig, dtype):
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    cd = _conv_dim(di, s)
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * di + 2 * s.d_state + nh  # z, x, B, C, dt
+    return {
+        "in_proj": init_dense(ks[0], (d, proj_out), dtype),
+        "conv_w": init_dense(ks[1], (s.conv_width, cd), dtype,
+                             scale=s.conv_width ** -0.5),
+        "conv_b": jnp.zeros((cd,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "norm_scale": jnp.zeros((di,), dtype),
+        "out_proj": init_dense(ks[2], (di, d), dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, width W.  x: (B, S, C), w: (W, C).
+
+    Returns (y, new_state) where state carries the last W-1 inputs."""
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else xp[:, :0]
+    return jax.nn.silu((y + b[None, None]).astype(jnp.float32)).astype(
+        x.dtype), new_state
+
+
+def ssd_chunked(x, dt, a_neg, b_in, c_in, d_skip, chunk: int,
+                init_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P) inputs; dt: (B, S, H) positive step sizes;
+    a_neg: (H,) negative decay rates; b_in, c_in: (B, S, N) (n_groups=1,
+    shared over heads); d_skip: (H,).
+    Returns (y (B, S, H, P), final_state (B, H, P, N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    q = chunk
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bc = b_in.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c_in.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    da = dtc * a_neg[None, None, None, :]            # (B, nc, q, H) <= 0
+    cum = jnp.cumsum(da, axis=2)                     # inclusive
+    xdt = xc.astype(jnp.float32) * dtc[..., None]    # (B, nc, q, H, P)
+
+    # ---- intra-chunk quadratic form ----------------------------------------
+    li = cum[:, :, :, None, :]                       # i index -> axis 2
+    lj = cum[:, :, None, :, :]                       # j index -> axis 3
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None],
+                      jnp.exp(li - lj), 0.0)         # (B, nc, q_i, q_j, H)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)       # (B, nc, q_i, q_j)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp",
+                         cb, decay, xdt)
+
+    # ---- chunk-boundary states ---------------------------------------------
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)     # (B, nc, q, H)
+    states = jnp.einsum("bcqh,bcqn,bcqhp->bchpn", decay_out, bc, xdt)
+    total = jnp.exp(cum[:, :, -1, :])                # (B, nc, H)
+
+    # ---- inter-chunk recurrence (short scan over nc) ------------------------
+    if init_state is None:
+        st0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    else:
+        st0 = init_state.astype(jnp.float32)
+
+    def step(carry, inp):
+        st_chunk, tot = inp                          # (B,H,P,N), (B,H)
+        new = carry * tot[:, :, None, None] + st_chunk
+        return new, carry                            # emit state BEFORE chunk
+
+    final, st_prev = lax.scan(step, st0,
+                              (states.transpose(1, 0, 2, 3, 4),
+                               total.transpose(1, 0, 2)),
+                              unroll=nc if UNROLL_SCANS else 1)
+    st_prev = st_prev.transpose(1, 0, 2, 3, 4)       # (B, nc, H, P, N)
+
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc, st_prev,
+                         jnp.exp(cum))
+    y = y_intra + y_inter + xc.astype(jnp.float32) * d_skip[None, None,
+                                                            None, :, None]
+    y = y.reshape(bsz, s + pad, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def mamba_block(params, x: jnp.ndarray, s: SSMConfig,
+                state: Optional[MambaState] = None
+                ) -> Tuple[jnp.ndarray, MambaState]:
+    """Full Mamba-2 mixer.  x: (B, S, d) -> (B, S, d) (+ state for serving)."""
+    bsz, seq, d = x.shape
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+
+    proj = jnp.einsum("bsd,dp->bsp", x, params["in_proj"])
+    z, xi, b_in, c_in, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + s.d_state, 2 * di + 2 * s.d_state],
+        axis=-1)
+
+    conv_in = jnp.concatenate([xi, b_in, c_in], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, params["conv_w"], params["conv_b"],
+        None if state is None else state.conv)
+    xi, b_in, c_in = jnp.split(conv_out, [di, di + s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None])
+    a_neg = -jnp.exp(params["A_log"])
+    if seq == 1 and state is not None:
+        # O(1) recurrent decode: h' = h*exp(dt A) + B dt x;  y = C h' + D x
+        xh = xi.reshape(bsz, 1, nh, s.head_dim).astype(jnp.float32)
+        da = jnp.exp(dt[:, 0] * a_neg[None, :])          # (B, H)
+        xdt = xh[:, 0] * dt[:, 0, :, None]               # (B, H, P)
+        upd = jnp.einsum("bn,bhp->bhpn", b_in[:, 0].astype(jnp.float32),
+                         xdt)
+        ssm_state = state.ssm * da[:, :, None, None] + upd
+        y = (jnp.einsum("bn,bhpn->bhp", c_in[:, 0].astype(jnp.float32),
+                        ssm_state)
+             + xh[:, 0] * params["D"][None, :, None])[:, None]
+        y = y.astype(x.dtype)
+    else:
+        y, ssm_state = ssd_chunked(
+            xi.reshape(bsz, seq, nh, s.head_dim), dt, a_neg, b_in, c_in,
+            params["D"], s.chunk,
+            None if state is None else state.ssm)
+
+    y = y.reshape(bsz, seq, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm_scale"])
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+    return out, MambaState(conv_state, ssm_state)
+
+
+def init_mamba_state(batch: int, d: int, s: SSMConfig,
+                     dtype=jnp.bfloat16) -> MambaState:
+    di = s.d_inner(d)
+    return MambaState(
+        conv=jnp.zeros((batch, s.conv_width - 1, _conv_dim(di, s)), dtype),
+        ssm=jnp.zeros((batch, s.n_heads(d), s.head_dim, s.d_state),
+                      jnp.float32))
+
+
+def mamba_decode_step(params, x: jnp.ndarray, s: SSMConfig,
+                      state: MambaState) -> Tuple[jnp.ndarray, MambaState]:
+    """Single-token recurrent step.  x: (B, 1, d)."""
+    out, new_state = mamba_block(params, x, s, state=state)
+    return out, new_state

@@ -1,0 +1,6 @@
+from .adamw import adamw_init, adamw_update, cosine_schedule
+from .grad_compress import (compress_decompress, compress_state_init,
+                            compressed_psum)
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule",
+           "compress_decompress", "compress_state_init", "compressed_psum"]

@@ -1,0 +1,4 @@
+from .batching import LengthBucketScheduler
+from .engine import generate
+
+__all__ = ["LengthBucketScheduler", "generate"]

@@ -1,0 +1,61 @@
+"""Request batching with SMMS length bucketing.
+
+Serving pads every prompt in a batch to the longest member; batching
+similar lengths together is a workload-balancing problem — the same one
+the paper's sorting solves.  The scheduler sorts queued prompt lengths
+with SMMS (Algorithm-1 boundaries = token-balanced buckets) and emits
+batches whose padding waste is bounded by the SMMS k-factor.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["LengthBucketScheduler"]
+
+
+class LengthBucketScheduler:
+    def __init__(self, max_batch: int = 8, buckets: int = 4, r: int = 2):
+        self.max_batch = max_batch
+        self.buckets = buckets
+        self.r = r
+
+    def plan(self, prompt_lengths: Sequence[int]
+             ) -> List[List[int]]:
+        """Group request indices into batches of similar length."""
+        n = len(prompt_lengths)
+        if n == 0:
+            return []
+        lengths = np.asarray(prompt_lengths, np.float64)
+        t = min(self.buckets, max(1, n // 2))
+        if n >= 2 * t and n % t == 0:
+            from repro.data.pipeline import smms_length_bucketing
+            order, bucket_id, _ = smms_length_bucketing(lengths, t, self.r)
+        else:  # tiny queue: plain argsort fallback
+            order = np.argsort(lengths, kind="stable")
+            bucket_id = np.zeros(n, np.int64)
+        batches: List[List[int]] = []
+        cur: List[int] = []
+        cur_bucket = -1
+        for idx, b in zip(order.tolist(), bucket_id.tolist()):
+            if len(cur) >= self.max_batch or b != cur_bucket:
+                if cur:
+                    batches.append(cur)
+                cur, cur_bucket = [], b
+            cur.append(int(idx))
+        if cur:
+            batches.append(cur)
+        return batches
+
+    @staticmethod
+    def padding_waste(prompt_lengths: Sequence[int],
+                      batches: List[List[int]]) -> float:
+        """Fraction of padded tokens across the plan (lower = better)."""
+        lengths = np.asarray(prompt_lengths)
+        total, useful = 0, 0
+        for b in batches:
+            mx = lengths[b].max()
+            total += mx * len(b)
+            useful += lengths[b].sum()
+        return 1.0 - useful / max(total, 1)

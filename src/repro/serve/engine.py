@@ -1,0 +1,37 @@
+"""Minimal serving engine: batched prefill + greedy decode loop."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.model import decode_step, init_cache, prefill
+
+__all__ = ["generate"]
+
+
+def generate(params, cfg: ArchConfig, prompts: jnp.ndarray,
+             max_new_tokens: int = 16,
+             embeds: Optional[jnp.ndarray] = None,
+             rules=None) -> np.ndarray:
+    """Greedy generation.  prompts: (B, S) int32 -> (B, max_new) int32."""
+    b, s = prompts.shape
+    front = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    cache = init_cache(cfg, b, s + front + max_new_tokens)
+    logits, cache = jax.jit(
+        lambda p, t, c: prefill(p, cfg, t, c, embeds=embeds, rules=rules)
+    )(params, prompts, cache)
+
+    step = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c, rules=rules))
+    out = []
+    tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)[:, None]
+    tok = tok.astype(jnp.int32)
+    for _ in range(max_new_tokens):
+        out.append(np.asarray(tok))
+        logits, cache = step(params, tok, cache)
+        tok = jnp.argmax(logits[:, :cfg.vocab_size],
+                         axis=-1)[:, None].astype(jnp.int32)
+    return np.concatenate(out, axis=1)

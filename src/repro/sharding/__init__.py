@@ -1,0 +1,3 @@
+from .specs import ShardingRules, make_rules
+
+__all__ = ["ShardingRules", "make_rules"]

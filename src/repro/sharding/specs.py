@@ -1,0 +1,238 @@
+"""Partition rules: params (TP + optional FSDP + EP) and activations.
+
+Mesh axes: ``('data', 'model')`` single-pod, ``('pod', 'data', 'model')``
+multi-pod.  The ``pod`` axis is pure data parallelism (the slow inter-pod
+links only ever carry gradient all-reduces); ``model`` carries TP/EP;
+``data`` carries batch + FSDP for the big archs.
+
+Head counts that don't divide the 16-way model axis (gemma-2b: 8,
+granite/musicgen: 24) are handled by sharding the *merged* head*head_dim
+projection dim (always divisible) and leaving the per-head attention
+layout to GSPMD; MoE expert counts that don't divide (granite: 40) fall
+back from EP to TP-MoE (shard d_ff_expert).  All decisions are explicit
+here so the dry-run table can attribute layout choices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["ShardingRules", "make_rules"]
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Optional[Mesh]
+    batch_axes: Tuple[str, ...]         # ('pod','data') or ('data',)
+    model_axis: str = "model"
+    fsdp: bool = False                  # shard the non-TP weight dim on data
+    fsdp_axis: str = "data"
+    seq_parallel: bool = False          # residual stream seq-sharded over
+    #                                     'model' between TP regions
+    #                                     (Megatron-SP; §Perf experiment)
+
+    # ------------------------------------------------------------------
+    def _axis_size(self, name: str) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[name]
+
+    def _div(self, dim: int, *axes: Optional[str]) -> Optional[str]:
+        """First axis (or tuple) that evenly divides dim, else None."""
+        total = 1
+        for a in axes:
+            if a is None:
+                return None
+            total *= self._axis_size(a)
+        if dim % total == 0:
+            return axes[0] if len(axes) == 1 else axes
+        return None
+
+    def constrain(self, x: jnp.ndarray, spec: P) -> jnp.ndarray:
+        if self.mesh is None or self.mesh.empty:
+            return x
+        return lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    # ---- parameter specs ----------------------------------------------
+    def param_spec(self, path: str, ndim: int, cfg: ArchConfig) -> P:
+        """Spec by parameter name.  Period-stacked params (under
+        'periods/') carry a leading n_periods dim mapped to None."""
+        mdl = self.model_axis
+        fsdp = self.fsdp_axis if self.fsdp else None
+        name = path.split("/")[-1]
+        stacked = "/periods/" in f"/{path}"
+        ep_ok = (cfg.moe is not None
+                 and cfg.moe.num_experts % max(1, self._axis_size(mdl)) == 0)
+
+        def wrap(spec: P) -> P:
+            if stacked:
+                return P(*((None,) + tuple(spec)))
+            return spec
+
+        if name == "embed":
+            return wrap(P(mdl, fsdp))
+        if name == "unembed":
+            return wrap(P(fsdp, mdl))
+        if name == "frontend_proj":
+            return wrap(P(None, mdl))
+        if name in ("wq", "wk", "wv"):
+            return wrap(P(fsdp, mdl))
+        if name == "wo":
+            return wrap(P(mdl, fsdp))
+        if name in ("w_gate", "w_up"):
+            if ndim - (1 if stacked else 0) == 3:  # MoE experts (E, d, ff)
+                return wrap(P(mdl, fsdp, None) if ep_ok
+                            else P(None, fsdp, mdl))
+            return wrap(P(fsdp, mdl))
+        if name == "w_down":
+            if ndim - (1 if stacked else 0) == 3:  # (E, ff, d)
+                return wrap(P(mdl, None, fsdp) if ep_ok
+                            else P(None, mdl, fsdp))
+            return wrap(P(mdl, fsdp))
+        if name == "router":
+            return wrap(P(fsdp, None))
+        if name == "in_proj":
+            return wrap(P(fsdp, mdl))
+        if name == "out_proj":
+            return wrap(P(mdl, fsdp))
+        if name == "conv_w":
+            return wrap(P(None, mdl))
+        # norms, biases, A_log, D, dt_bias, conv_b, scalars: replicated
+        return wrap(P(*([None] * max(0, ndim - (1 if stacked else 0)))))
+
+    def param_specs(self, params_shape) -> dict:
+        """Map an eval_shape'd params pytree to PartitionSpecs."""
+        cfg = getattr(self, "_cfg", None)
+
+        def visit(path, leaf):
+            keys = "/".join(str(getattr(p, "key", p)) for p in path)
+            return self.param_spec(keys, len(leaf.shape), cfg)
+
+        return jax.tree_util.tree_map_with_path(visit, params_shape)
+
+    def bind(self, cfg: ArchConfig) -> "ShardingRules":
+        self._cfg = cfg
+        return self
+
+    # ---- activation constraints ----------------------------------------
+    def hidden(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(B, S, d): batch over batch_axes (when divisible); with
+        seq_parallel, the sequence additionally shards over 'model' so
+        every between-block elementwise/norm op runs 1/TP-sized."""
+        b, s = x.shape[0], x.shape[1]
+        ax = self._div(b, *self.batch_axes)
+        if ax is None and len(self.batch_axes) > 1:
+            ax = self._div(b, self.batch_axes[-1])
+        if self.seq_parallel and s % max(1, self._axis_size(
+                self.model_axis)) == 0:
+            return self.constrain(x, P(ax, self.model_axis, None))
+        return self.constrain(x, P(ax, None, None))
+
+    def heads(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(B, S, H, hd): heads on model when divisible, else seq."""
+        b, s, h, _ = x.shape
+        bax = self._div(b, *self.batch_axes) or self._div(
+            b, self.batch_axes[-1])
+        if h % max(1, self._axis_size(self.model_axis)) == 0:
+            return self.constrain(x, P(bax, None, self.model_axis, None))
+        if s % max(1, self._axis_size(self.model_axis)) == 0:
+            return self.constrain(x, P(bax, self.model_axis, None, None))
+        return self.constrain(x, P(bax, None, None, None))
+
+    def ffn(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(B, S, ff): ff on model."""
+        b = x.shape[0]
+        bax = self._div(b, *self.batch_axes) or self._div(
+            b, self.batch_axes[-1])
+        return self.constrain(x, P(bax, None, self.model_axis))
+
+    def moe_slots(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """Slot-major dispatch buffer: EP over model (uneven OK on
+        intermediates).  Rank 4 = (NS, G, C, d) with groups over the
+        batch axes; rank 3 = (NS, C, d)."""
+        bsp = (self.batch_axes if len(self.batch_axes) > 1
+               else self.batch_axes[0])
+        if buf.ndim == 4:
+            return self.constrain(buf, P(self.model_axis, bsp, None, None))
+        return self.constrain(buf, P(self.model_axis, None, None))
+
+    def moe_groups(self) -> int:
+        """Dispatch-group count = number of data shards (group-local
+        scatter/gather stays collective-free; see models/moe.py)."""
+        return self._total_batch() if self.mesh is not None else 1
+
+    def group_major(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(G, ...) buffers: G over the batch axes, rest unsharded."""
+        bsp = (self.batch_axes if len(self.batch_axes) > 1
+               else self.batch_axes[0])
+        return self.constrain(x, P(bsp, *([None] * (x.ndim - 1))))
+
+    def cache_specs(self, cache_shape) -> dict:
+        """Specs for the whole serving-cache pytree (by leaf name).
+
+        k/v: (n_periods, B, Hkv, S, hd) — batch over batch_axes and the
+        sequence over 'model' when the batch divides; for tiny batches
+        (long-context) the sequence is sharded over every axis instead.
+        conv: (np, B, W-1, cd) — channels over model.
+        ssm:  (np, B, H, P, N) — heads over model (configs guarantee
+        divisibility)."""
+        total_b = self._total_batch()
+        mdl = self.model_axis
+        batch_sp = (self.batch_axes if len(self.batch_axes) > 1
+                    else self.batch_axes[0])
+
+        def visit(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            b = leaf.shape[1] if len(leaf.shape) > 1 else 1
+            b_ok = b % max(1, total_b) == 0
+            if name in ("k", "v", "k_scale", "v_scale"):
+                if b_ok:
+                    return P(None, batch_sp, None, mdl, None)
+                return P(None, None, None,
+                         tuple(self.batch_axes) + (mdl,), None)
+            if name == "conv":
+                return P(None, batch_sp if b_ok else None, None, mdl)
+            if name == "ssm":
+                return P(None, batch_sp if b_ok else None, mdl, None, None)
+            return P()  # 'pos'
+
+        return jax.tree_util.tree_map_with_path(visit, cache_shape)
+
+    def kv_cache_spec(self, batch: int, seq: int) -> P:
+        """(n_periods, B, Hkv, S_max, hd) cache layout per shape."""
+        if batch % max(1, self._total_batch()) == 0:
+            return P(None, self.batch_axes if len(self.batch_axes) > 1
+                     else self.batch_axes[0], None, self.model_axis, None)
+        # tiny batch (long-context): shard the sequence over everything
+        axes = tuple(self.batch_axes) + (self.model_axis,)
+        return P(None, None, None, axes, None)
+
+    def _total_batch(self) -> int:
+        t = 1
+        for a in self.batch_axes:
+            t *= self._axis_size(a)
+        return t
+
+    def batch_spec(self, batch: int) -> P:
+        ax = self._div(batch, *self.batch_axes) or self._div(
+            batch, self.batch_axes[-1])
+        return P(ax, None)
+
+
+def make_rules(mesh: Optional[Mesh], cfg: ArchConfig,
+               fsdp_threshold: int = 10_000_000_000) -> ShardingRules:
+    """FSDP kicks in automatically above ~10B params."""
+    if mesh is None:
+        return ShardingRules(None, ("data",)).bind(cfg)
+    axes = tuple(mesh.axis_names)
+    batch_axes = tuple(a for a in axes if a != "model")
+    fsdp = cfg.param_count() > fsdp_threshold
+    return ShardingRules(mesh, batch_axes, fsdp=fsdp).bind(cfg)

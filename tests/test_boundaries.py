@@ -1,0 +1,73 @@
+"""Algorithm 1 — oracle (priority-queue sweep) vs vectorized CDF inversion."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import boundaries_jax, boundaries_oracle, equidepth_samples
+from repro.core.boundaries import interval_pdf
+from repro.data import lidar_like, uniform_keys
+
+
+def _samples(x, t, r):
+    m = x.shape[0] // t
+    s = r * t
+    xs = np.sort(x[: t * m].reshape(t, m), axis=1)
+    lam = np.asarray(equidepth_samples(jnp.asarray(xs), s))
+    return lam, m, s
+
+
+@pytest.mark.parametrize("t,r", [(4, 1), (4, 2), (8, 2), (16, 3)])
+@pytest.mark.parametrize("gen", [uniform_keys, lidar_like])
+def test_oracle_vs_vectorized(t, r, gen):
+    x = gen(t * 512, seed=t + r)
+    lam, m, s = _samples(x, t, r)
+    b_ref = boundaries_oracle(lam, m, s)
+    b_jax = np.asarray(boundaries_jax(jnp.asarray(lam), m, s))
+    assert b_ref.shape == (t + 1,) == b_jax.shape
+    scale = np.max(np.abs(b_ref)) + 1.0
+    np.testing.assert_allclose(b_jax, b_ref, rtol=0, atol=2e-5 * scale)
+
+
+@pytest.mark.parametrize("t,r", [(4, 2), (8, 1)])
+def test_boundaries_monotone_and_cover(t, r):
+    x = uniform_keys(t * 256, seed=7)
+    lam, m, s = _samples(x, t, r)
+    b = np.asarray(boundaries_jax(jnp.asarray(lam), m, s))
+    assert np.all(np.diff(b) >= -1e-6)
+    assert b[0] <= x.min() + 1e-6
+    assert b[-1] >= x.max() - 1e-6  # last sample is the global max object
+
+
+def test_estimated_density_is_m():
+    """The boundaries equalize the *estimated* density to m per bucket."""
+    t, r = 8, 2
+    x = uniform_keys(t * 1024, seed=3)
+    lam, m, s = _samples(x, t, r)
+    b = np.asarray(boundaries_jax(jnp.asarray(lam), m, s))
+    # evaluate the piecewise-linear model CDF at the boundaries
+    cgrid = np.linspace(0, m, s + 1)
+    f = np.zeros_like(b)
+    for i in range(t):
+        f += np.interp(b, lam[i], cgrid, left=0.0, right=float(m))
+    est_density = np.diff(f)
+    np.testing.assert_allclose(est_density, m, rtol=5e-3)
+
+
+def test_interval_pdf_matches_paper_definition():
+    lam = jnp.asarray([[0.0, 1.0, 3.0, 7.0]])  # s=3, one machine
+    m, s = 30, 3
+    mu = np.asarray(interval_pdf(lam, m, s))[0]
+    np.testing.assert_allclose(mu[:3], [(m / s) / 1, (m / s) / 2, (m / s) / 4])
+    assert mu[3] == 0.0  # mu[i, s] = 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 3), st.integers(0, 2**31 - 1))
+def test_property_oracle_agreement(t, r, seed):
+    x = uniform_keys(t * 128, seed=seed)
+    lam, m, s = _samples(x, t, r)
+    b_ref = boundaries_oracle(lam, m, s)
+    b_jax = np.asarray(boundaries_jax(jnp.asarray(lam), m, s))
+    scale = np.max(np.abs(b_ref)) + 1.0
+    np.testing.assert_allclose(b_jax, b_ref, rtol=0, atol=5e-5 * scale)

@@ -1,0 +1,167 @@
+"""RandJoin / StatJoin / Repartition: correctness vs oracle + balance bounds."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (choose_ab, collect_statistics, local_equijoin,
+                        plan_statjoin, randjoin, repartition_join, statjoin)
+from repro.core.alpha_k import statjoin_workload_bound
+from repro.core.localjoin import MASKED_KEY
+from repro.data import scalar_skew_tables, zipf_tables
+
+
+def oracle_join(s_keys, t_keys):
+    """Set of (s_row, t_row) pairs, plus total size."""
+    out = set()
+    t_by_key = {}
+    for j, k in enumerate(t_keys):
+        t_by_key.setdefault(int(k), []).append(j)
+    for i, k in enumerate(s_keys):
+        for j in t_by_key.get(int(k), ()):
+            out.add((i, j))
+    return out
+
+
+def collect_pairs(out):
+    """Valid (s_row, t_row) pairs from a vmapped JoinOutput."""
+    s = np.asarray(out.s_rows).reshape(-1)
+    t = np.asarray(out.t_rows).reshape(-1)
+    v = np.asarray(out.valid).reshape(-1)
+    return set(zip(s[v].tolist(), t[v].tolist()))
+
+
+# ---------------------------------------------------------------------------
+# local_equijoin
+# ---------------------------------------------------------------------------
+
+def test_local_equijoin_exact():
+    s_keys = np.array([3, 1, 3, 9, 1], np.int32)
+    t_keys = np.array([1, 3, 3, 7], np.int32)
+    want = oracle_join(s_keys, t_keys)
+    out = local_equijoin(jnp.asarray(s_keys), jnp.arange(5, dtype=jnp.int32),
+                         jnp.asarray(t_keys), jnp.arange(4, dtype=jnp.int32),
+                         capacity=16)
+    assert collect_pairs(out) == want
+    assert int(out.count) == len(want)
+    assert int(out.dropped) == 0
+
+
+def test_local_equijoin_masked_and_overflow():
+    s_keys = np.array([5, MASKED_KEY, 5], np.int32)
+    t_keys = np.array([5, 5, MASKED_KEY], np.int32)
+    out = local_equijoin(jnp.asarray(s_keys), jnp.arange(3, dtype=jnp.int32),
+                         jnp.asarray(t_keys), jnp.arange(3, dtype=jnp.int32),
+                         capacity=3)
+    assert int(out.count) == 4          # 2 x 2 real matches
+    assert int(out.dropped) == 1        # capacity 3 < 4
+    assert int(np.sum(np.asarray(out.valid))) == 3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 60), st.integers(1, 60))
+def test_property_local_equijoin(seed, ns, nt):
+    rng = np.random.default_rng(seed)
+    s_keys = rng.integers(0, 8, ns).astype(np.int32)
+    t_keys = rng.integers(0, 8, nt).astype(np.int32)
+    want = oracle_join(s_keys, t_keys)
+    out = local_equijoin(jnp.asarray(s_keys),
+                         jnp.arange(ns, dtype=jnp.int32),
+                         jnp.asarray(t_keys),
+                         jnp.arange(nt, dtype=jnp.int32),
+                         capacity=max(1, 2 * len(want) + 4))
+    assert collect_pairs(out) == want
+
+
+# ---------------------------------------------------------------------------
+# RandJoin
+# ---------------------------------------------------------------------------
+
+def test_choose_ab_minimizes():
+    a, b = choose_ab(12, size_s=1000, size_t=10)
+    assert a * b == 12
+    # replicating the tiny table widely is cheap: expect b small... a|T|+b|S|
+    costs = {(aa, 12 // aa): aa * 10 + (12 // aa) * 1000
+             for aa in [1, 2, 3, 4, 6, 12]}
+    assert a * 10 + b * 1000 == min(costs.values())
+
+
+@pytest.mark.parametrize("t", [4, 6])
+def test_randjoin_exact(t):
+    s_keys, t_keys = zipf_tables(240, 240, theta=0.3, seed=t)
+    want = oracle_join(s_keys, t_keys)
+    out, report = randjoin(s_keys, np.arange(240), t_keys, np.arange(240),
+                           t_machines=t, out_capacity=4 * len(want) // t + 64,
+                           seed=5, in_cap_factor=4.0)
+    assert collect_pairs(out) == want
+    assert int(np.asarray(out.dropped).max()) == 0
+
+
+def test_randjoin_balances_hot_key():
+    """One hot key: repartition pins it to 1 machine; RandJoin spreads it."""
+    n, mh, nh = 3000, 300, 300
+    s_keys, t_keys = scalar_skew_tables(n, mh, nh, seed=0)
+    w = len(oracle_join(s_keys, t_keys))
+    t = 4
+    out_r, rep_rand = randjoin(s_keys, np.arange(n), t_keys, np.arange(n),
+                               t_machines=t, out_capacity=w, seed=3,
+                               in_cap_factor=4.0)
+    _, rep_part = repartition_join(s_keys, np.arange(n), t_keys,
+                                   np.arange(n), t_machines=t,
+                                   out_capacity=w + 16)
+    assert rep_rand.imbalance < rep_part.imbalance
+    assert rep_rand.imbalance < 2.0   # Cor. 3 regime
+
+
+# ---------------------------------------------------------------------------
+# StatJoin
+# ---------------------------------------------------------------------------
+
+def test_plan_respects_theorem6():
+    s_keys, t_keys = scalar_skew_tables(4000, 400, 200, seed=1)
+    stats = collect_statistics(s_keys, t_keys)
+    for t in (4, 8, 15):
+        rects = plan_statjoin(stats, t)
+        loads = np.zeros(t)
+        for r in rects:
+            loads[r.machine] += r.size
+        assert loads.sum() == stats.total  # nothing lost or duplicated
+        assert loads.max() <= statjoin_workload_bound(stats.total, t) + 1e-9
+
+
+@pytest.mark.parametrize("t", [4, 8])
+def test_statjoin_exact(t):
+    s_keys, t_keys = zipf_tables(300, 300, theta=0.0, seed=t + 1)
+    want = oracle_join(s_keys, t_keys)
+    out, report = statjoin(s_keys, np.arange(300), t_keys, np.arange(300),
+                           t_machines=t)
+    assert collect_pairs(out) == want
+    assert int(np.asarray(out.dropped).max()) == 0
+    assert report.alpha == 3
+
+
+def test_statjoin_scalar_skew_balance():
+    n, mh, nh = 3000, 500, 100
+    s_keys, t_keys = scalar_skew_tables(n, mh, nh, seed=2)
+    out, report = statjoin(s_keys, np.arange(n), t_keys, np.arange(n),
+                           t_machines=8)
+    bound = statjoin_workload_bound(report.n_out, 8)
+    assert np.max(report.workload) <= bound
+    assert collect_pairs(out) == oracle_join(s_keys, t_keys)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 8))
+def test_property_statjoin_exact_and_bounded(seed, t):
+    rng = np.random.default_rng(seed)
+    ns = int(rng.integers(20, 120))
+    nt = int(rng.integers(20, 120))
+    s_keys = rng.integers(0, 12, ns).astype(np.int32)
+    t_keys = rng.integers(0, 12, nt).astype(np.int32)
+    want = oracle_join(s_keys, t_keys)
+    out, report = statjoin(s_keys, np.arange(ns), t_keys, np.arange(nt),
+                           t_machines=t)
+    assert collect_pairs(out) == want
+    if want:
+        assert np.max(report.workload) <= statjoin_workload_bound(
+            len(want), t) + 1e-9

@@ -1,0 +1,119 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps, interpret mode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bitonic import bitonic_sort, bitonic_sort_kv
+from repro.kernels.bucketize import bucketize_histogram
+from repro.kernels.flash_attention import flash_attention
+
+
+# ---------------------------------------------------------------------------
+# bitonic sort
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,n", [(1, 2), (4, 64), (8, 128), (3, 100),
+                                    (16, 1024), (5, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bitonic_sort_sweep(rows, n, dtype):
+    x = jax.random.normal(jax.random.key(rows * n), (rows, n)).astype(dtype)
+    got = bitonic_sort(x)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(ref.sort_ref(x), np.float32))
+
+
+def test_bitonic_sort_kv():
+    rows, n = 4, 200
+    keys = jax.random.permutation(
+        jax.random.key(0), jnp.arange(rows * n, dtype=jnp.float32)
+    ).reshape(rows, n)
+    vals = keys * 2 + 1
+    gk, gv = bitonic_sort_kv(keys, vals)
+    rk, rv = ref.sort_kv_ref(keys, vals)
+    np.testing.assert_array_equal(gk, rk)
+    np.testing.assert_array_equal(gv, rv)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6), st.integers(2, 300), st.integers(0, 2**31 - 1))
+def test_property_bitonic(rows, n, seed):
+    x = jax.random.normal(jax.random.key(seed), (rows, n))
+    np.testing.assert_array_equal(bitonic_sort(x), ref.sort_ref(x))
+
+
+# ---------------------------------------------------------------------------
+# bucketize + histogram
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,t", [(100, 4), (1024, 16), (5000, 64),
+                                 (1 << 14, 256)])
+def test_bucketize_sweep(n, t):
+    keys = jax.random.normal(jax.random.key(n + t), (n,)) * 100
+    bounds = jnp.sort(jax.random.normal(jax.random.key(t), (t - 1,)) * 80)
+    ids, counts = bucketize_histogram(keys, bounds, t, block_n=512)
+    rids, rcounts = ref.bucketize_ref(keys, bounds, t)
+    np.testing.assert_array_equal(ids, rids)
+    np.testing.assert_array_equal(counts, rcounts)
+    assert int(counts.sum()) == n
+
+
+def test_bucketize_boundary_exact_keys():
+    """Keys exactly at a boundary go RIGHT (buckets are [b_k, b_{k+1}))."""
+    bounds = jnp.asarray([1.0, 2.0, 3.0])
+    keys = jnp.asarray([0.5, 1.0, 2.0, 2.5, 3.0])
+    ids, counts = bucketize_histogram(keys, bounds, 4, block_n=8)
+    np.testing.assert_array_equal(ids, [0, 1, 2, 2, 3])
+    np.testing.assert_array_equal(counts, [1, 1, 2, 1])
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,d", [
+    (1, 2, 2, 128, 128, 64),     # MHA square
+    (2, 4, 2, 64, 64, 64),       # GQA g=2
+    (1, 8, 1, 32, 32, 128),      # MQA
+    (1, 2, 2, 100, 100, 64),     # ragged seq (padding path)
+    (1, 2, 1, 1, 96, 64),        # decode: single query vs KV cache
+    (1, 4, 4, 256, 256, 256),    # gemma-2b head_dim
+])
+def test_flash_attention_sweep(b, hq, hkv, sq, sk, d):
+    ks = jax.random.split(jax.random.key(b * sq + d), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, sk, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, sk, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [16, 64, 100])
+def test_flash_attention_sliding_window(window):
+    b, h, s, d = 1, 2, 160, 64
+    ks = jax.random.split(jax.random.key(window), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, s, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=32, block_k=32)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    b, h, s, d = 1, 2, 128, 64
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, h, s, d)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, h, s, d)).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)

@@ -1,0 +1,79 @@
+"""Layer-level properties: RMSNorm, RoPE, chunked CE vs dense CE."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import chunked_cross_entropy, rms_norm, rope
+
+
+def test_rms_norm_unit_scale():
+    x = jax.random.normal(jax.random.key(0), (4, 64)) * 7.0
+    y = rms_norm(x, jnp.zeros(64))
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_rope_preserves_norm_and_relative_position():
+    """Rotations preserve norms; q.k depends only on relative offset."""
+    d = 64
+    q = jax.random.normal(jax.random.key(1), (1, 8, 1, d))
+    k = jax.random.normal(jax.random.key(2), (1, 8, 1, d))
+    pos = jnp.arange(8)
+    qr = rope(q, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(qr), axis=-1),
+                               np.linalg.norm(np.asarray(q), axis=-1),
+                               rtol=1e-5)
+    # dot(q@i, k@j) must equal dot(q@(i+c), k@(j+c))
+    kr = rope(k, pos)
+    dots1 = np.einsum("bshd,bthd->bst", np.asarray(qr), np.asarray(kr))
+    qr2 = rope(q, pos + 100)
+    kr2 = rope(k, pos + 100)
+    dots2 = np.einsum("bshd,bthd->bst", np.asarray(qr2), np.asarray(kr2))
+    np.testing.assert_allclose(dots1, dots2, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("chunk", [3, 8, 64])
+def test_chunked_ce_matches_dense(chunk):
+    b, s, d, v = 2, 10, 16, 50
+    ks = jax.random.split(jax.random.key(3), 3)
+    x = jax.random.normal(ks[0], (b, s, d))
+    w = jax.random.normal(ks[1], (d, v)) * 0.1
+    labels = jax.random.randint(ks[2], (b, s), 0, v)
+    got = chunked_cross_entropy(x, w, labels, chunk=chunk)
+    logits = np.asarray(jnp.einsum("bsd,dv->bsv", x, w), np.float64)
+    lse = np.log(np.exp(logits - logits.max(-1, keepdims=True)).sum(-1)) \
+        + logits.max(-1)
+    picked = np.take_along_axis(logits, np.asarray(labels)[..., None],
+                                -1)[..., 0]
+    want = (lse - picked).mean()
+    np.testing.assert_allclose(float(got), want, rtol=1e-4)
+
+
+def test_chunked_ce_ignores_masked_and_padded_vocab():
+    b, s, d, v, true_v = 1, 8, 16, 64, 50
+    ks = jax.random.split(jax.random.key(4), 3)
+    x = jax.random.normal(ks[0], (b, s, d))
+    w = jax.random.normal(ks[1], (d, v)) * 0.1
+    labels = jax.random.randint(ks[2], (b, s), 0, true_v)
+    labels = labels.at[0, :2].set(-1)  # masked positions
+    loss = chunked_cross_entropy(x, w, labels, chunk=4, vocab_size=true_v)
+    assert np.isfinite(float(loss))
+    # padded vocab rows never contribute: same loss with huge pad logits
+    w2 = w.at[:, true_v:].add(100.0)
+    loss2 = chunked_cross_entropy(x, w2, labels, chunk=4,
+                                  vocab_size=true_v)
+    np.testing.assert_allclose(float(loss), float(loss2), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 30), st.integers(0, 2**31 - 1))
+def test_property_ce_positive_and_bounded(b, s, seed):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    v = 32
+    x = jax.random.normal(ks[0], (b, s, 8))
+    w = jax.random.normal(ks[1], (8, v)) * 0.2
+    labels = jax.random.randint(ks[2], (b, s), 0, v)
+    loss = float(chunked_cross_entropy(x, w, labels, chunk=7))
+    assert 0.0 < loss < np.log(v) + 10.0

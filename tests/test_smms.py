@@ -1,0 +1,84 @@
+"""SMMS sorting: correctness vs jnp.sort oracle + Theorem 1/2 bounds."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import smms_sort
+from repro.core.alpha_k import smms_k_bound, smms_workload_bound
+from repro.data import lidar_like, uniform_keys
+
+
+@pytest.mark.parametrize("t,r", [(4, 1), (8, 2), (16, 2)])
+@pytest.mark.parametrize("gen", [uniform_keys, lidar_like])
+def test_sorts_correctly(t, r, gen):
+    m = 512
+    x = gen(t * m, seed=t * 31 + r)
+    (got, _), report = smms_sort(jnp.asarray(x.reshape(t, m)), r=r)
+    assert int(report.workload.sum()) == t * m, "no objects lost"
+    np.testing.assert_array_equal(np.sort(x), got)
+
+
+def test_no_drops_at_theorem1_capacity():
+    t, r, m = 8, 2, 1024
+    x = uniform_keys(t * m, seed=5).reshape(t, m)
+    (_, _), report = smms_sort(jnp.asarray(x), r=r)
+    bound = smms_workload_bound(t * m, t, r)
+    assert np.max(report.workload) <= bound, (
+        f"Theorem 1 violated: {np.max(report.workload)} > {bound}")
+
+
+def test_adversarial_initial_placement():
+    """All small keys on machine 0, etc. — pre-sorted-by-machine worst case.
+
+    Theorem 1 holds for arbitrary initial placement; the *per-pair* static
+    capacity is what stresses out, so cap_factor is raised accordingly
+    (the deterministic bound still caps the receive total).
+    """
+    t, r, m = 4, 2, 512
+    x = np.sort(uniform_keys(t * m, seed=11)).reshape(t, m)  # adversarial
+    (got, _), report = smms_sort(jnp.asarray(x), r=r, cap_factor=float(t))
+    assert report.total_dropped == 0
+    np.testing.assert_array_equal(np.sort(x.reshape(-1)), got)
+    assert np.max(report.workload) <= smms_workload_bound(t * m, t, r)
+
+
+def test_carries_values():
+    t, r, m = 4, 2, 256
+    x = uniform_keys(t * m, seed=2).reshape(t, m)
+    vals = np.arange(t * m, dtype=np.int32).reshape(t, m)
+    (keys, got_vals), _ = smms_sort(jnp.asarray(x), r=r,
+                                    values=jnp.asarray(vals))
+    order = np.argsort(x.reshape(-1))
+    np.testing.assert_array_equal(got_vals, np.arange(t * m)[order])
+
+
+@pytest.mark.parametrize("t,r", [(8, 2), (8, 6)])
+def test_alpha_k_minimality(t, r):
+    """Empirical k must respect Theorem 2's bound (and alpha == 3)."""
+    m = 2048
+    x = uniform_keys(t * m, seed=9).reshape(t, m)
+    (_, _), report = smms_sort(jnp.asarray(x), r=r)
+    assert report.alpha == 3
+    k_theory = smms_k_bound(t * m, t, r)
+    assert report.k_workload <= k_theory
+    assert report.k_network <= k_theory
+
+
+def test_higher_r_tightens_balance():
+    """Paper: larger r → smaller k. r=6 should beat r=1 on imbalance."""
+    t, m = 8, 4096
+    x = lidar_like(t * m, seed=13).reshape(t, m)
+    (_, _), rep1 = smms_sort(jnp.asarray(x), r=1)
+    (_, _), rep6 = smms_sort(jnp.asarray(x), r=6)
+    assert rep6.imbalance <= rep1.imbalance + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_property_sort_and_bound(t, r, seed):
+    m = 256
+    x = uniform_keys(t * m, seed=seed)
+    (got, _), report = smms_sort(jnp.asarray(x.reshape(t, m)), r=r)
+    np.testing.assert_array_equal(np.sort(x), got)
+    assert np.max(report.workload) <= smms_workload_bound(t * m, t, r)

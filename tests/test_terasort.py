@@ -1,0 +1,66 @@
+"""Terasort + Algorithm S: correctness, Lemma 1 unbiasedness, Thm 3 bound."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import algorithm_s, terasort_sample_count, terasort_sort
+from repro.core.alpha_k import terasort_workload_bound
+from repro.data import lidar_like, uniform_keys
+
+
+def test_algorithm_s_exact_count():
+    x = jnp.arange(100.0)
+    for seed in range(5):
+        got = algorithm_s(jax.random.key(seed), x, 7)
+        assert got.shape == (7,)
+        assert len(np.unique(np.asarray(got))) == 7  # no repeats
+
+
+def test_algorithm_s_unbiased():
+    """Lemma 1: every object selected w.p. q/m. Chi-square-ish sanity."""
+    m, q, trials = 40, 8, 3000
+    counts = np.zeros(m)
+    x = jnp.arange(float(m))
+    sample = jax.jit(lambda k: algorithm_s(k, x, q))
+    keys = jax.random.split(jax.random.key(0), trials)
+    for k in keys:
+        counts[np.asarray(sample(k)).astype(int)] += 1
+    expected = trials * q / m
+    # 5-sigma band for Binomial(trials, q/m)
+    sigma = np.sqrt(trials * (q / m) * (1 - q / m))
+    assert np.all(np.abs(counts - expected) < 5 * sigma), (
+        counts.min(), counts.max(), expected)
+
+
+@pytest.mark.parametrize("t", [4, 8])
+@pytest.mark.parametrize("gen", [uniform_keys, lidar_like])
+def test_sorts_correctly(t, gen):
+    m = 1024
+    x = gen(t * m, seed=t)
+    got, report = terasort_sort(jnp.asarray(x.reshape(t, m)), seed=1)
+    assert report.total_dropped == 0
+    np.testing.assert_array_equal(np.sort(x), got)
+    assert report.alpha == 3
+
+
+def test_theorem3_workload_bound():
+    t, m = 8, 4096
+    x = uniform_keys(t * m, seed=3).reshape(t, m)
+    got, report = terasort_sort(jnp.asarray(x), seed=0)
+    assert np.max(report.workload) <= terasort_workload_bound(t * m, t)
+
+
+def test_smms_beats_terasort_balance():
+    """The paper's headline: SMMS workload balance beats Terasort's."""
+    from repro.core import smms_sort
+    t, m = 8, 4096
+    x = lidar_like(t * m, seed=17).reshape(t, m)
+    _, rep_ts = terasort_sort(jnp.asarray(x), seed=0)
+    (_, _), rep_sm = smms_sort(jnp.asarray(x), r=2)
+    assert rep_sm.imbalance <= rep_ts.imbalance + 0.05, (
+        rep_sm.imbalance, rep_ts.imbalance)
+
+
+def test_sample_count_formula():
+    assert terasort_sample_count(10**6, 10) == int(np.ceil(np.log(10**7)))

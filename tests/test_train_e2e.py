@@ -1,0 +1,47 @@
+"""End-to-end training: loss decreases; checkpoint-resume is bit-exact
+with the uninterrupted run (fault-tolerance contract)."""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch, smoke_config
+from repro.launch.train import train
+
+
+def tiny(arch="gemma-2b"):
+    cfg = smoke_config(get_arch(arch))
+    return dataclasses.replace(cfg, vocab_size=512, d_model=64)
+
+
+def test_loss_decreases():
+    losses = train(tiny(), steps=40, batch=4, seq=32, lr=3e-3,
+                   log_every=1000)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, (
+        losses[:5], losses[-5:])
+
+
+def test_checkpoint_restart_is_exact(tmp_path):
+    """Kill-and-resume must land on the same trajectory: the pipeline is
+    stateless and the checkpoint carries params+opt, so losses after
+    resume equal the uninterrupted run's."""
+    cfg = tiny()
+    full = train(cfg, steps=30, batch=4, seq=32, lr=3e-3,
+                 ckpt_dir=str(tmp_path / "a"), ckpt_every=10,
+                 log_every=1000)
+    # run 1: first 20 steps only (simulated preemption at a checkpoint)
+    train(cfg, steps=20, batch=4, seq=32, lr=3e-3,
+          ckpt_dir=str(tmp_path / "b"), ckpt_every=10, log_every=1000)
+    # run 2: resume from step 20, continue to 30
+    resumed = train(cfg, steps=30, batch=4, seq=32, lr=3e-3,
+                    ckpt_dir=str(tmp_path / "b"), ckpt_every=10,
+                    log_every=1000)
+    np.testing.assert_allclose(resumed, full[20:], rtol=1e-5, atol=1e-6)
+
+
+def test_moe_arch_trains():
+    cfg = smoke_config(get_arch("granite-moe-3b-a800m"))
+    losses = train(cfg, steps=25, batch=4, seq=32, lr=3e-3, log_every=1000)
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
