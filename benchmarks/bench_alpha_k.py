@@ -1,7 +1,9 @@
 """(alpha, k)-minimality verification — Theorems 1/2/3/6 empirically.
 
 For each algorithm: measured alpha, empirical k_workload / k_network vs
-the paper's theoretical k bound.  PASS = measured <= bound.
+the paper's theoretical k bound.  PASS = measured <= bound.  All four
+algorithms run through the cluster front door, so every number comes
+from the substrate's instrumented collectives.
 """
 from __future__ import annotations
 
@@ -10,7 +12,7 @@ from typing import List
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import randjoin, smms_sort, statjoin, terasort_sort
+from repro import cluster
 from repro.core.alpha_k import (randjoin_k_bound, smms_k_bound,
                                 statjoin_k_bound, terasort_k_bound)
 from repro.data import scalar_skew_tables, uniform_keys
@@ -22,7 +24,7 @@ def run(report_rows: List[str]) -> None:
     n = t * m
     for r in (1, 2, 6):
         x = jnp.asarray(uniform_keys(n, seed=r).reshape(t, m))
-        (_, _), rep = smms_sort(x, r=r)
+        (_, _), rep = cluster.sort(x, algorithm="smms", r=r)
         k_theory = smms_k_bound(n, t, r)
         ok = rep.alpha == 3 and rep.check(k_theory)
         report_rows.append(
@@ -33,7 +35,7 @@ def run(report_rows: List[str]) -> None:
 
     # ---- Terasort: (3, 5 + t^3/n) w.h.p. ------------------------------------
     x = jnp.asarray(uniform_keys(n, seed=9).reshape(t, m))
-    _, rep = terasort_sort(x, seed=0)
+    (_, _), rep = cluster.sort(x, algorithm="terasort", seed=0)
     k_theory = terasort_k_bound(n, t)
     ok = rep.alpha == 3 and rep.check(k_theory)
     report_rows.append(
@@ -45,7 +47,8 @@ def run(report_rows: List[str]) -> None:
     ns = 4000
     s_keys, t_keys = scalar_skew_tables(ns, 600, 80, seed=6)
     rows = np.arange(ns)
-    _, rep = statjoin(s_keys, rows, t_keys, rows, t_machines=8)
+    _, rep = cluster.join(s_keys, rows, t_keys, rows, algorithm="statjoin",
+                          t_machines=8)
     sigma = rep.n_out / max(1, rep.n_in)
     k_theory = statjoin_k_bound(8, sigma)
     k_meas = np.max(rep.workload) / (rep.n_out / 8)
@@ -58,9 +61,10 @@ def run(report_rows: List[str]) -> None:
 
     # ---- RandJoin: ~(1, 2 + t/sigma) w.h.p. ---------------------------------
     w_est = rep.n_out
-    out, rep_r = randjoin(s_keys, rows, t_keys, rows, t_machines=8,
-                          out_capacity=max(64, 3 * w_est // 8),
-                          in_cap_factor=4.0, seed=7)
+    _, rep_r = cluster.join(s_keys, rows, t_keys, rows, algorithm="randjoin",
+                            t_machines=8,
+                            out_capacity=max(64, 3 * w_est // 8),
+                            in_cap_factor=4.0, seed=7)
     sigma = rep_r.n_out / max(1, rep_r.n_in)
     k_meas = np.max(rep_r.workload) / (rep_r.n_out / 8)
     ok = rep_r.alpha == 1 and k_meas <= 2.0

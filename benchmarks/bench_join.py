@@ -7,7 +7,7 @@ from typing import List
 
 import numpy as np
 
-from repro.core import randjoin, repartition_join, statjoin
+from repro import cluster
 from repro.core.alpha_k import statjoin_workload_bound
 from repro.data import scalar_skew_tables, zipf_tables
 
@@ -30,17 +30,20 @@ def run(report_rows: List[str]) -> None:
         rows = np.arange(ns)
 
         t0 = time.time()
-        _, rep_r = randjoin(s_keys, rows, t_keys, rows, t_machines=t,
-                            out_capacity=max(64, 3 * w // t),
-                            in_cap_factor=4.0, seed=1)
+        _, rep_r = cluster.join(s_keys, rows, t_keys, rows,
+                                algorithm="randjoin", t_machines=t,
+                                out_capacity=max(64, 3 * w // t),
+                                in_cap_factor=4.0, seed=1)
         dt_r = time.time() - t0
 
         t0 = time.time()
-        _, rep_s = statjoin(s_keys, rows, t_keys, rows, t_machines=t)
+        _, rep_s = cluster.join(s_keys, rows, t_keys, rows,
+                                algorithm="statjoin", t_machines=t)
         dt_s = time.time() - t0
 
-        _, rep_p = repartition_join(s_keys, rows, t_keys, rows,
-                                    t_machines=t, out_capacity=w + 64)
+        _, rep_p = cluster.join(s_keys, rows, t_keys, rows,
+                                algorithm="repartition", t_machines=t,
+                                out_capacity=w + 64)
 
         report_rows.append(
             f"join_zipf,theta={theta},randjoin,imb={rep_r.imbalance:.3f},"
@@ -61,10 +64,12 @@ def run(report_rows: List[str]) -> None:
         s_keys, t_keys = scalar_skew_tables(n, mh, nh, seed=4)
         w = _join_size(s_keys, t_keys)
         rows = np.arange(n)
-        _, rep_r = randjoin(s_keys, rows, t_keys, rows, t_machines=t,
-                            out_capacity=max(64, 3 * w // t),
-                            in_cap_factor=4.0, seed=2)
-        _, rep_s = statjoin(s_keys, rows, t_keys, rows, t_machines=t)
+        _, rep_r = cluster.join(s_keys, rows, t_keys, rows,
+                                algorithm="randjoin", t_machines=t,
+                                out_capacity=max(64, 3 * w // t),
+                                in_cap_factor=4.0, seed=2)
+        _, rep_s = cluster.join(s_keys, rows, t_keys, rows,
+                                algorithm="statjoin", t_machines=t)
         bound = statjoin_workload_bound(w, t)
         report_rows.append(
             f"join_scalar,M={mh},N={nh},randjoin,imb={rep_r.imbalance:.3f}")
@@ -80,12 +85,12 @@ def run_statjoin_overhead(report_rows: List[str]) -> None:
     s_keys, t_keys = zipf_tables(n, n, theta=0.0, seed=5, domain=150)
     rows = np.arange(n)
     t0 = time.time()
-    stats = None
     from repro.core import collect_statistics
     stats = collect_statistics(s_keys, t_keys)
     dt_stats = time.time() - t0
     t0 = time.time()
-    statjoin(s_keys, rows, t_keys, rows, t_machines=8, stats=stats)
+    cluster.join(s_keys, rows, t_keys, rows, algorithm="statjoin",
+                 t_machines=8, stats=stats)
     dt_total = dt_stats + (time.time() - t0)
     pct = 100.0 * dt_stats / dt_total
     report_rows.append(

@@ -14,7 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import smms_sort, terasort_sort
+from repro import cluster
 from repro.core.alpha_k import smms_workload_bound, terasort_workload_bound
 from repro.data import lidar_like, uniform_keys
 
@@ -28,11 +28,11 @@ def run(report_rows: List[str]) -> None:
             xt = jnp.asarray(x[:t * m].reshape(t, m))
 
             t0 = time.time()
-            (_, _), rep_s = smms_sort(xt, r=2)
+            (_, _), rep_s = cluster.sort(xt, algorithm="smms", r=2)
             dt_s = time.time() - t0
 
             t0 = time.time()
-            _, rep_t = terasort_sort(xt, seed=0)
+            (_, _), rep_t = cluster.sort(xt, algorithm="terasort", seed=0)
             dt_t = time.time() - t0
 
             bound_s = smms_workload_bound(n, t, 2) / m
@@ -60,9 +60,9 @@ def run_scaling(report_rows: List[str]) -> None:
     report_rows.append(f"sort_scaling,seq,t=1,numpy,{seq * 1e6:.0f}")
     for t in (4, 8, 16):
         xt = jnp.asarray(x.reshape(t, n // t))
-        smms_sort(xt, r=2)  # warm
+        cluster.sort(xt, algorithm="smms", r=2)  # warm
         t0 = time.time()
-        (_, _), rep = smms_sort(xt, r=2)
+        (_, _), rep = cluster.sort(xt, algorithm="smms", r=2)
         dt = time.time() - t0
         report_rows.append(
             f"sort_scaling,smms,t={t},imbalance={rep.imbalance:.3f},"

@@ -1,12 +1,14 @@
 """Quickstart: the paper's algorithms in five minutes.
 
+Everything goes through the cluster front door — one dispatch, one
+substrate runtime, one (alpha, k) report format for all four algorithms.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (randjoin, smms_sort, statjoin, terasort_sort,
-                        repartition_join)
+from repro import cluster
 from repro.data import lidar_like, scalar_skew_tables
 
 
@@ -14,14 +16,16 @@ def main():
     # ---- 1. SMMS: deterministic balanced distributed sort ------------------
     t, m = 8, 4096
     x = lidar_like(t * m, seed=0).reshape(t, m)   # skewed 'real' data
-    (sorted_keys, _), report = smms_sort(jnp.asarray(x), r=2)
+    (sorted_keys, _), report = cluster.sort(jnp.asarray(x),
+                                            algorithm="smms", r=2)
     assert np.all(np.diff(sorted_keys) >= 0)
     print(f"SMMS     : sorted {t*m} keys on {t} machines | "
           f"imbalance {report.imbalance:.3f} (optimal 1.0) | "
           f"alpha={report.alpha}")
 
     # ---- 2. Terasort baseline: randomized, weaker balance ------------------
-    _, rep_ts = terasort_sort(jnp.asarray(x), seed=0)
+    (_, _), rep_ts = cluster.sort(jnp.asarray(x), algorithm="terasort",
+                                  seed=0)
     print(f"Terasort : imbalance {rep_ts.imbalance:.3f}  "
           f"(paper: SMMS beats this by design — Thm 1 vs Thm 3)")
 
@@ -29,16 +33,16 @@ def main():
     n = 4000
     s_keys, t_keys = scalar_skew_tables(n, m_hot=400, n_hot=100, seed=1)
     rows = np.arange(n)
-    w = 400 * 100  # the hot key's join result dominates
 
-    _, rep_part = repartition_join(s_keys, rows, t_keys, rows,
-                                   t_machines=8, out_capacity=2 * w)
-    _, rep_rand = randjoin(s_keys, rows, t_keys, rows, t_machines=8,
-                           out_capacity=w, in_cap_factor=4.0)
-    _, rep_stat = statjoin(s_keys, rows, t_keys, rows, t_machines=8)
-    print(f"Skew join imbalance: repartition {rep_part.imbalance:.2f}  "
-          f"randjoin {rep_rand.imbalance:.2f}  "
-          f"statjoin {rep_stat.imbalance:.2f}  (lower = better, 1.0 ideal)")
+    reports = {}
+    for alg in cluster.JOIN_ALGORITHMS:
+        _, reports[alg] = cluster.join(s_keys, rows, t_keys, rows,
+                                       algorithm=alg, t_machines=8)
+    print(f"Skew join imbalance: "
+          f"repartition {reports['repartition'].imbalance:.2f}  "
+          f"randjoin {reports['randjoin'].imbalance:.2f}  "
+          f"statjoin {reports['statjoin'].imbalance:.2f}  "
+          f"(lower = better, 1.0 ideal)")
     print("Repartition pins the hot key to ONE machine; RandJoin/StatJoin "
           "spread it (Cor 3 / Thm 6).")
 

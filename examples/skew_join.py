@@ -1,11 +1,14 @@
-"""Skew join walkthrough: Zipf tables, all three algorithms, the paper's
-Fig 11/13 workload distributions printed as histograms.
+"""Skew join walkthrough: Zipf tables, all three algorithms through the
+cluster front door, the paper's Fig 11/13 workload distributions printed
+as histograms.
 
     PYTHONPATH=src python examples/skew_join.py
 """
+import collections
+
 import numpy as np
 
-from repro.core import randjoin, repartition_join, statjoin
+from repro import cluster
 from repro.data import zipf_tables
 
 
@@ -21,26 +24,18 @@ def main():
     for theta in (0.0, 1.0):
         s_keys, t_keys = zipf_tables(n, n, theta=theta, seed=2, domain=150)
         rows = np.arange(n)
-        import collections
         cs = collections.Counter(s_keys.tolist())
         ct = collections.Counter(t_keys.tolist())
         w = sum(cs[k] * ct[k] for k in cs if k in ct)
 
-        print(f"\n=== Zipf theta={theta} ({'skewed' if theta < 0.5 else 'uniform'}), "
-              f"|result|={w} ===")
-        _, rep_p = repartition_join(s_keys, rows, t_keys, rows,
-                                    t_machines=t, out_capacity=w + 64)
-        print(f"[repartition]  imbalance {rep_p.imbalance:.2f}")
-        print(bar(rep_p.workload))
-        _, rep_r = randjoin(s_keys, rows, t_keys, rows, t_machines=t,
-                            out_capacity=max(64, 3 * w // t),
-                            in_cap_factor=4.0)
-        print(f"[randjoin]     imbalance {rep_r.imbalance:.2f}")
-        print(bar(rep_r.workload))
-        _, rep_s = statjoin(s_keys, rows, t_keys, rows, t_machines=t)
-        print(f"[statjoin]     imbalance {rep_s.imbalance:.2f} "
-              f"(Thm 6 bound: 2.0)")
-        print(bar(rep_s.workload))
+        print(f"\n=== Zipf theta={theta} "
+              f"({'skewed' if theta < 0.5 else 'uniform'}), |result|={w} ===")
+        for alg, note in (("repartition", ""), ("randjoin", ""),
+                          ("statjoin", " (Thm 6 bound: 2.0)")):
+            _, rep = cluster.join(s_keys, rows, t_keys, rows, algorithm=alg,
+                                  t_machines=t)
+            print(f"[{alg:11s}]  imbalance {rep.imbalance:.2f}{note}")
+            print(bar(rep.workload))
 
 
 if __name__ == "__main__":

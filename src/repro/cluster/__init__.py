@@ -1,0 +1,29 @@
+"""Unified cluster substrate for the paper's (alpha, k) algorithms.
+
+One runtime, two executors, uniform accounting:
+
+* :mod:`substrate`   — ``VmapSubstrate`` (t virtual machines) and
+  ``ShardMapSubstrate`` (real mesh) behind one ``run(shard_fn, *args)``.
+* :mod:`collectives` — instrumented ``all_gather`` / ``all_to_all`` /
+  ``ragged_all_to_all`` / ``psum`` recording per-device traffic inside
+  the jitted program; assembles AlphaKReport automatically.
+* :mod:`capacity`    — theorem-derived static receive capacities and the
+  retry-on-overflow loop.
+* :mod:`api`         — ``cluster.sort`` / ``cluster.join`` dispatch over
+  all four algorithms (SMMS, Terasort+AlgS, RandJoin, StatJoin) plus the
+  repartition baseline.
+"""
+from . import compat
+from .api import JOIN_ALGORITHMS, SORT_ALGORITHMS, join, sort
+from .capacity import CapacityOverflowError, CapacityPolicy, run_with_capacity
+from .collectives import CollectiveTape
+from .substrate import (ShardMapSubstrate, Substrate, VmapSubstrate,
+                        default_substrate)
+
+__all__ = [
+    "compat",
+    "sort", "join", "SORT_ALGORITHMS", "JOIN_ALGORITHMS",
+    "CapacityPolicy", "CapacityOverflowError", "run_with_capacity",
+    "CollectiveTape",
+    "Substrate", "VmapSubstrate", "ShardMapSubstrate", "default_substrate",
+]

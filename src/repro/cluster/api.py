@@ -1,0 +1,117 @@
+"""The cluster front door: one dispatch for all four (alpha, k) algorithms.
+
+    from repro import cluster
+    (keys, values), report = cluster.sort(x, algorithm="smms")
+    out, report = cluster.join(sk, sr, tk, tr, algorithm="statjoin",
+                               t_machines=8)
+
+Every algorithm runs on a Substrate (vmap virtual machines by default,
+shard_map real mesh when requested) and returns the AlphaKReport
+assembled from the instrumented collectives.  Core imports are lazy to
+keep repro.core -> repro.cluster -> repro.core import order acyclic.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .substrate import Substrate
+
+__all__ = ["sort", "join", "SORT_ALGORITHMS", "JOIN_ALGORITHMS"]
+
+SORT_ALGORITHMS = ("smms", "terasort")
+JOIN_ALGORITHMS = ("randjoin", "statjoin", "repartition")
+
+
+def sort(x, *, algorithm: str = "smms",
+         substrate: Optional[Substrate] = None,
+         values=None, r: int = 2, seed: int = 0,
+         cap_factor: Optional[float] = None,
+         backend: str = "static", policy=None):
+    """Distributed sort of x: (t, m).  Returns ((keys, values), report)."""
+    if np.ndim(x) != 2:
+        raise ValueError(
+            f"sort expects x of shape (t, m) — one row per machine — got "
+            f"shape {np.shape(x)}; reshape with x.reshape(t, -1)")
+    if algorithm == "smms":
+        from repro.core.smms import smms_sort
+        return smms_sort(x, r=r, cap_factor=cap_factor, values=values,
+                         backend=backend, substrate=substrate, policy=policy)
+    if algorithm == "terasort":
+        if values is not None:
+            raise NotImplementedError(
+                "terasort host wrapper does not carry values yet; "
+                "use algorithm='smms'")
+        from repro.core.terasort import terasort_sort
+        flat, report = terasort_sort(x, seed=seed, cap_factor=cap_factor,
+                                     backend=backend, substrate=substrate,
+                                     policy=policy)
+        return (flat, None), report
+    raise ValueError(f"unknown sort algorithm {algorithm!r}; "
+                     f"expected one of {SORT_ALGORITHMS}")
+
+
+def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
+         t_machines: int, substrate: Optional[Substrate] = None,
+         out_capacity: Optional[int] = None, seed: int = 0,
+         in_cap_factor: float = 4.0, out_cap_factor: float = 1.05,
+         ab: Optional[Tuple[int, int]] = None, stats=None):
+    """Distributed equi-join.  Returns (JoinOutput, report).
+
+    out_capacity defaults to the Theorem-6 bound ceil(2W/t) + slack for
+    the algorithms that need an explicit buffer (randjoin/repartition) —
+    computing W from exact statistics, the same information StatJoin's
+    planner uses.
+    """
+    if algorithm not in JOIN_ALGORITHMS:
+        raise ValueError(f"unknown join algorithm {algorithm!r}; "
+                         f"expected one of {JOIN_ALGORITHMS}")
+    if algorithm == "statjoin":
+        from repro.core.statjoin import statjoin
+        return statjoin(s_keys, s_rows, t_keys, t_rows, t_machines=t_machines,
+                        out_cap_factor=out_cap_factor, stats=stats,
+                        substrate=substrate, out_capacity=out_capacity)
+
+    defaulted_capacity = out_capacity is None
+    if defaulted_capacity:
+        from repro.core.statjoin import collect_statistics
+        st = stats if stats is not None else collect_statistics(
+            np.asarray(s_keys, np.int64), np.asarray(t_keys, np.int64))
+        w = st.total
+        if algorithm == "repartition":
+            # the skew-vulnerable baseline can pin the WHOLE result onto
+            # one machine — that imbalance is what it exists to exhibit
+            out_capacity = w + 64
+        else:
+            out_capacity = max(64, int(np.ceil(2.0 * out_cap_factor * w
+                                               / t_machines)))
+    if algorithm == "randjoin":
+        from repro.cluster.capacity import CapacityPolicy, run_with_capacity
+        from repro.core.randjoin import randjoin
+
+        def attempt_randjoin(cap):
+            out, rep = randjoin(s_keys, s_rows, t_keys, t_rows,
+                                t_machines=t_machines,
+                                out_capacity=int(cap), seed=seed,
+                                in_cap_factor=in_cap_factor
+                                * (cap / out_capacity),
+                                ab=ab, substrate=substrate)
+            return (out, rep), int(np.asarray(out.dropped).max())
+
+        if not defaulted_capacity:
+            # explicit out_capacity is the caller's pin: one attempt,
+            # drops reported via out.dropped (pre-substrate semantics)
+            return attempt_randjoin(out_capacity)[0]
+        # The Cor-3 bound behind the default capacity is w.h.p. and only
+        # holds for large-enough fragments; when we picked the buffer,
+        # recover from overflow through the shared retry loop (the route
+        # capacities grow with the same factor as the output buffer).
+        (out, rep), _, _ = run_with_capacity(
+            attempt_randjoin,
+            CapacityPolicy.fixed(out_capacity, max_retries=3))
+        return out, rep
+    from repro.core.repartition import repartition_join
+    return repartition_join(s_keys, s_rows, t_keys, t_rows,
+                            t_machines=t_machines, out_capacity=out_capacity,
+                            substrate=substrate)

@@ -1,0 +1,184 @@
+"""Instrumented collectives — the (alpha, k) accounting layer.
+
+The paper judges every algorithm with one yardstick: alpha synchronized
+rounds, per-machine workload and network both within a factor k of
+perfect balance.  Instead of each algorithm hand-assembling its
+``PhaseStats``, the substrate threads a :class:`CollectiveTape` through
+the per-device body: every collective goes through the tape, which
+records per-device sent/received object counts *inside the jitted
+program* (they are ordinary traced scalars that flow out as extra
+outputs of the vmap/shard_map program).  After execution the tape is
+bound to the concrete (t,)-shaped counters and can assemble the
+:class:`~repro.core.alpha_k.AlphaKReport` directly.
+
+Accounting conventions (matching the paper's object counting):
+
+* ``all_gather``   — sent = objects this device contributes, received =
+  total objects gathered (``psum`` of the contributions).
+* ``all_to_all``   — sent = objects leaving this device (caller-supplied,
+  since only it knows which rows are self-addressed), received = valid
+  objects in the landed buffer (sentinel-padding aware via ``pad``).
+* ``ragged_all_to_all`` — exact sizes are part of the op; received =
+  sum of the receive-size vector.
+* ``psum`` of O(1) control scalars (overflow counters etc.) is *not*
+  counted: the paper counts objects, and constant-size control messages
+  vanish in the N/t normalization.
+
+Phases are declared with ``tape.phase(name)``; alpha = number of
+declared phases, and every record merges into the innermost active
+phase.  A phase with no traffic (e.g. SMMS's replicated Round-2
+boundary computation) still counts toward alpha — that is the paper's
+definition of a synchronized round.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import compat
+
+# NOTE: repro.core.alpha_k is imported lazily in phases()/report() — the
+# algorithm modules under repro.core import this module at load time, and
+# importing any repro.core submodule here would close the cycle.
+
+__all__ = ["CollectiveTape"]
+
+
+def _leading_count(x) -> int:
+    """Default object count of an operand: its leading-axis length."""
+    shape = jnp.shape(x)
+    return int(shape[0]) if shape else 1
+
+
+class CollectiveTape:
+    """Records per-device collective traffic during one traced execution.
+
+    Lifecycle: the substrate calls :meth:`reset` at trace time, the body
+    records through the instrumented collectives, the substrate returns
+    :meth:`traced` as program outputs and calls :meth:`bind` on the
+    concrete results.  :meth:`report` then builds the AlphaKReport.
+    """
+
+    def __init__(self) -> None:
+        self.reset()
+
+    # ------------------------------------------------------------------
+    # trace-side API
+    # ------------------------------------------------------------------
+    def reset(self) -> None:
+        self._phase_order: List[str] = []
+        self._entry_phase: List[str] = []   # static: phase of each record
+        self._traced: List = []             # traced (sent, received) pairs
+        self._current: Optional[str] = None
+        self._bound: Optional[List] = None
+
+    @contextlib.contextmanager
+    def phase(self, name: str):
+        """Declare a synchronized round; records inside merge into it."""
+        if name not in self._phase_order:
+            self._phase_order.append(name)
+        prev, self._current = self._current, name
+        try:
+            yield self
+        finally:
+            self._current = prev
+
+    def record(self, sent, received, *, phase: Optional[str] = None) -> None:
+        """Record one traffic entry (traced or static scalars)."""
+        name = phase if phase is not None else self._current
+        if name is None:
+            name = "(untagged)"
+        if name not in self._phase_order:
+            self._phase_order.append(name)
+        self._entry_phase.append(name)
+        self._traced.append((jnp.asarray(sent, jnp.float32),
+                             jnp.asarray(received, jnp.float32)))
+
+    # ---- instrumented collectives ------------------------------------
+    def all_gather(self, x, axis_name: str, *, count=None, tiled: bool = False,
+                   track: bool = True):
+        out = lax.all_gather(x, axis_name, tiled=tiled)
+        if track:
+            c = jnp.asarray(count if count is not None else _leading_count(x))
+            self.record(sent=c, received=lax.psum(c, axis_name))
+        return out
+
+    def all_to_all(self, x, axis_name: str, *, split_axis: int = 0,
+                   concat_axis: int = 0, sent=None, pad=None,
+                   track: bool = True):
+        """Dense exchange; ``pad`` makes the received count sentinel-aware.
+
+        ``sent`` defaults to every element of ``x`` (the whole buffer
+        leaves conceptually; pass the exact off-device count when known).
+        """
+        out = lax.all_to_all(x, axis_name, split_axis=split_axis,
+                             concat_axis=concat_axis, tiled=False)
+        if track:
+            s = jnp.asarray(sent if sent is not None else int(np.prod(jnp.shape(x))))
+            if pad is not None:
+                r = jnp.sum(out < jnp.asarray(pad, out.dtype))
+            else:
+                r = jnp.asarray(int(np.prod(jnp.shape(out))))
+            self.record(sent=s, received=r)
+        return out
+
+    def ragged_all_to_all(self, operand, output, input_offsets, send_sizes,
+                          output_offsets, recv_sizes, *, axis_name: str,
+                          sent=None, track: bool = True):
+        out = compat.ragged_all_to_all(
+            operand, output, input_offsets, send_sizes, output_offsets,
+            recv_sizes, axis_name=axis_name)
+        if track:
+            s = jnp.asarray(sent if sent is not None else jnp.sum(send_sizes))
+            self.record(sent=s, received=jnp.sum(recv_sizes))
+        return out
+
+    def psum(self, x, axis_name: str, *, count=None):
+        """Reduction; O(1) control scalars are untracked by default."""
+        out = lax.psum(x, axis_name)
+        if count is not None:
+            c = jnp.asarray(count)
+            self.record(sent=c, received=c)
+        return out
+
+    # ------------------------------------------------------------------
+    # host-side API
+    # ------------------------------------------------------------------
+    def traced(self):
+        """The in-program counters, to be returned as program outputs."""
+        return tuple(self._traced)
+
+    def bind(self, frames: Sequence) -> None:
+        """Attach concrete (t,)-shaped counters from the executed program."""
+        frames = list(frames)
+        assert len(frames) == len(self._entry_phase), (
+            f"tape recorded {len(self._entry_phase)} entries but got "
+            f"{len(frames)} frames back")
+        self._bound = [(np.asarray(s).reshape(-1), np.asarray(r).reshape(-1))
+                       for (s, r) in frames]
+
+    @property
+    def is_bound(self) -> bool:
+        return self._bound is not None
+
+    def phases(self, t: int):
+        """Merge bound entries into one PhaseStats per declared phase."""
+        from repro.core.alpha_k import PhaseStats
+        assert self._bound is not None, "tape not bound — run it first"
+        sent: Dict[str, np.ndarray] = {p: np.zeros(t) for p in self._phase_order}
+        recv: Dict[str, np.ndarray] = {p: np.zeros(t) for p in self._phase_order}
+        for name, (s, r) in zip(self._entry_phase, self._bound):
+            sent[name] = sent[name] + np.broadcast_to(s, (t,))
+            recv[name] = recv[name] + np.broadcast_to(r, (t,))
+        return [PhaseStats(p, sent[p], recv[p]) for p in self._phase_order]
+
+    def report(self, *, algorithm: str, t: int, n_in: int, n_out: int,
+               workload):
+        from repro.core.alpha_k import AlphaKReport
+        return AlphaKReport(algorithm=algorithm, t=t, n_in=n_in, n_out=n_out,
+                            workload=np.asarray(workload).reshape(-1),
+                            phases=self.phases(t))

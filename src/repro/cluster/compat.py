@@ -1,0 +1,86 @@
+"""Version compatibility shims for the jax APIs the substrate relies on.
+
+The substrate targets the modern jax surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``lax.ragged_all_to_all``) but must run on
+older installs where those live elsewhere or do not exist.  Everything
+version-dependent is funneled through this module so the rest of the
+package can use one spelling.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax import lax
+
+__all__ = [
+    "HAS_RAGGED",
+    "axis_size",
+    "make_mesh",
+    "ragged_all_to_all",
+    "shard_map",
+]
+
+try:  # jax >= 0.5: top-level re-export
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """shard_map without replication checking, across jax versions.
+
+    The kwarg spelling drifted (check_rep -> check_vma -> removed); try
+    the spellings newest-first and fall back to the bare call.
+    """
+    for kw in ({"check_vma": False}, {"check_rep": False}, {}):
+        try:
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+        except TypeError:
+            continue
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+HAS_RAGGED = hasattr(lax, "ragged_all_to_all")
+
+
+def axis_size(axis_name: str) -> int:
+    """Size of a named mapped axis; works under vmap and shard_map."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def make_mesh(shape: Sequence[int], names: Sequence[str],
+              devices: Optional[Sequence] = None):
+    """``jax.make_mesh`` with explicit axis types where supported.
+
+    Older jax has neither ``AxisType`` nor the ``axis_types`` kwarg; the
+    default there is already the explicit-collectives behavior shard_map
+    needs, so the fallback simply omits the argument.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    try:
+        from jax.sharding import AxisType
+        kwargs["axis_types"] = (AxisType.Auto,) * len(names)
+    except ImportError:
+        pass
+    try:
+        return jax.make_mesh(tuple(shape), tuple(names), **kwargs)
+    except TypeError:  # axis_types kwarg not accepted on this version
+        kwargs.pop("axis_types", None)
+        return jax.make_mesh(tuple(shape), tuple(names), **kwargs)
+
+
+def ragged_all_to_all(operand, output, input_offsets, send_sizes,
+                      output_offsets, recv_sizes, *, axis_name: str):
+    """``lax.ragged_all_to_all`` or a clear error on jax builds without it."""
+    if not HAS_RAGGED:
+        raise NotImplementedError(
+            "lax.ragged_all_to_all is not available in this jax version "
+            f"({jax.__version__}); use backend='static' instead")
+    return lax.ragged_all_to_all(
+        operand, output, input_offsets, send_sizes, output_offsets,
+        recv_sizes, axis_name=axis_name)

@@ -1,0 +1,179 @@
+"""Execution substrates: one ``run(shard_fn, *args)`` API, two executors.
+
+A per-device body written against named-axis collectives runs unchanged
+under two interchangeable executors:
+
+* :class:`VmapSubstrate`     — t *virtual* machines on one device via
+  ``jax.vmap`` with axis names (the unit-test / laptop path).
+* :class:`ShardMapSubstrate` — a real device mesh via ``shard_map``
+  (the production path; also exercised on forced host devices in CI).
+
+Both thread a :class:`~repro.cluster.collectives.CollectiveTape` through
+the body (keyword argument ``tape``) and return ``(outputs, tape)`` with
+the tape bound to concrete per-device traffic counters, so the caller
+can assemble an AlphaKReport without knowing which executor ran.
+
+Axes are declared as ``(name, size)`` pairs; multi-axis substrates (the
+RandJoin a x b machine matrix) nest vmaps / open a 2D mesh.  Input
+arrays carry one leading dim per axis (``(t, m)`` or ``(a, b, m)``);
+outputs come back with the same leading dims.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import compat
+from .collectives import CollectiveTape
+
+__all__ = ["Substrate", "VmapSubstrate", "ShardMapSubstrate", "default_substrate"]
+
+AxisSpec = Union[int, Tuple[str, int]]
+
+_DEFAULT_NAMES = ("i", "j", "k")
+
+
+def _normalize_axes(axes: Sequence[AxisSpec]) -> Tuple[Tuple[str, int], ...]:
+    out = []
+    for pos, ax in enumerate(axes):
+        if isinstance(ax, int):
+            out.append((_DEFAULT_NAMES[pos], ax))
+        else:
+            name, size = ax
+            out.append((str(name), int(size)))
+    return tuple(out)
+
+
+class Substrate:
+    """Common surface: axis metadata + ``run(shard_fn, *args)``."""
+
+    def __init__(self, *axes: AxisSpec):
+        if not axes:
+            raise ValueError("substrate needs at least one axis")
+        self.axes = _normalize_axes(axes)
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.axes)
+
+    @property
+    def axis_name(self) -> str:
+        """The sole axis name (1D substrates)."""
+        if len(self.axes) != 1:
+            raise ValueError(f"substrate has {len(self.axes)} axes; "
+                             "use .axis_names")
+        return self.axes[0][0]
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(s for _, s in self.axes)
+
+    @property
+    def t(self) -> int:
+        return int(np.prod(self.shape))
+
+    def run(self, shard_fn: Callable, *args):
+        """Execute ``shard_fn(*local_args, tape=tape)`` on every machine.
+
+        Returns ``(outputs, tape)``: outputs with the substrate's leading
+        axes restored, tape bound to concrete per-device counters.
+        """
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        axes = ",".join(f"{n}={s}" for n, s in self.axes)
+        return f"{type(self).__name__}({axes})"
+
+
+class VmapSubstrate(Substrate):
+    """t virtual machines on one device — nested vmap with axis names."""
+
+    def run(self, shard_fn: Callable, *args):
+        tape = CollectiveTape()
+
+        def wrapper(*local):
+            tape.reset()
+            out = shard_fn(*local, tape=tape)
+            return out, tape.traced()
+
+        fn = wrapper
+        for name, _ in reversed(self.axes):
+            fn = jax.vmap(fn, axis_name=name)
+        out, frames = fn(*args)
+        tape.bind(jax.tree.map(np.asarray, frames))
+        return out, tape
+
+
+class ShardMapSubstrate(Substrate):
+    """A real mesh via shard_map — one device per (virtual) machine.
+
+    The per-device block keeps its leading mesh axes as size-1 dims;
+    the wrapper strips them on the way in and restores them on the way
+    out, so the body sees exactly what it sees under vmap.
+    """
+
+    def __init__(self, *axes: AxisSpec, mesh=None, jit: bool = True):
+        super().__init__(*axes)
+        if mesh is None:
+            mesh = compat.make_mesh(self.shape, self.axis_names)
+        self.mesh = mesh
+        self._jit = jit
+        # (shard_fn, arg signature) -> (jitted fn, tape).  jax.jit's own
+        # cache keys on function identity, so a fresh wrapper closure per
+        # run() would recompile every call; reusing the wrapper (and its
+        # tape, whose static phase metadata the trace populated) restores
+        # compile caching for repeated runs of the same body.
+        self._compiled = {}
+
+    def _signature(self, shard_fn: Callable, args) -> tuple:
+        return (shard_fn,
+                tuple((jnp.shape(a), str(getattr(a, "dtype", type(a))))
+                      for a in args))
+
+    def run(self, shard_fn: Callable, *args):
+        key = self._signature(shard_fn, args)
+        cached = self._compiled.get(key)
+        if cached is None:
+            tape = CollectiveTape()
+            k = len(self.axes)
+            lead = (0,) * k
+
+            def wrapper(*local):
+                tape.reset()
+                stripped = [x[lead] for x in local]
+                out = shard_fn(*stripped, tape=tape)
+                restore = lambda y: jnp.reshape(jnp.asarray(y),
+                                                (1,) * k + jnp.shape(y))
+                return jax.tree.map(restore, (out, tape.traced()))
+
+            spec = P(*self.axis_names)
+            fn = compat.shard_map(wrapper, mesh=self.mesh,
+                                  in_specs=tuple(spec for _ in args),
+                                  out_specs=spec)
+            if self._jit:
+                fn = jax.jit(fn)
+            cached = (fn, tape)
+            self._compiled[key] = cached
+        fn, tape = cached
+        out, frames = fn(*args)
+        tape.bind(jax.tree.map(np.asarray, frames))
+        return out, tape
+
+
+def default_substrate(*axes: AxisSpec,
+                      prefer_mesh: bool = False) -> Substrate:
+    """Pick an executor for the requested machine count.
+
+    shard_map needs one device per machine; when the process doesn't
+    have them (the common single-CPU test environment) fall back to
+    virtual machines under vmap.
+    """
+    sub = VmapSubstrate(*axes)
+    if prefer_mesh and len(jax.devices()) >= sub.t:
+        return ShardMapSubstrate(*axes)
+    return sub

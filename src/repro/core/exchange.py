@@ -14,10 +14,15 @@ Two backends:
 * ``static``  — dense ``lax.all_to_all`` of (t, C/t) tiles padded with a
   sentinel.  Works under ``shard_map`` *and* ``vmap`` (used by unit tests).
 * ``ragged``  — ``lax.ragged_all_to_all`` with exact send sizes into a
-  C-sized output buffer.  shard_map only; saves the padding bandwidth.
+  C-sized output buffer.  shard_map only (and only on jax builds that ship
+  the op — see repro.cluster.compat); saves the padding bandwidth.
 
-Both report dropped-object counts so callers can detect capacity overflow
-(a fault, handled by retrying with a larger factor — see launch/train.py).
+Both report dropped-object counts so callers can detect capacity overflow —
+a fault, recovered by the CapacityPolicy retry loop in repro.cluster.
+
+Traffic accounting goes through a CollectiveTape (repro.cluster) when one
+is supplied, so the (alpha, k) report is assembled from counters measured
+inside the jitted program rather than hand-built phase lists.
 """
 from __future__ import annotations
 
@@ -40,6 +45,11 @@ __all__ = [
 # Sentinel key for padded slots.  Keys are required to be finite floats or
 # ints strictly below the sentinel; sorts push pads to the end.
 PAD = jnp.inf
+
+
+def _null_tape():
+    from repro.cluster.collectives import CollectiveTape
+    return CollectiveTape()
 
 
 def partition_sorted(x_sorted: jnp.ndarray, interior: jnp.ndarray
@@ -83,41 +93,58 @@ def build_send_buffer(x_sorted: jnp.ndarray, starts: jnp.ndarray,
 
 
 def static_exchange(keys_buf: jnp.ndarray, axis_name: str,
-                    values_buf: Optional[jnp.ndarray] = None):
-    """Dense all_to_all of (t, C) tiles: row k goes to device k."""
-    recv_k = lax.all_to_all(keys_buf, axis_name, split_axis=0, concat_axis=0,
-                            tiled=False)
+                    values_buf: Optional[jnp.ndarray] = None,
+                    tape=None, sent=None):
+    """Dense all_to_all of (t, C) tiles: row k goes to device k.
+
+    When a tape is supplied, the exchange is recorded with ``sent`` (the
+    caller's off-device object count) and a PAD-aware received count; the
+    values buffer rides along untracked (the paper counts objects, and a
+    key+payload pair is one object).
+    """
+    tape = tape if tape is not None else _null_tape()
+    recv_k = tape.all_to_all(keys_buf, axis_name, split_axis=0,
+                             concat_axis=0, sent=sent, pad=PAD)
     recv_v = None
     if values_buf is not None:
-        recv_v = lax.all_to_all(values_buf, axis_name, split_axis=0,
-                                concat_axis=0, tiled=False)
+        recv_v = tape.all_to_all(values_buf, axis_name, split_axis=0,
+                                 concat_axis=0, track=False)
     return recv_k, recv_v
 
 
 def ragged_exchange(x_sorted: jnp.ndarray, starts: jnp.ndarray,
                     lens: jnp.ndarray, axis_name: str, capacity: int,
-                    pad_key=PAD) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                    values: Optional[jnp.ndarray] = None,
+                    pad_key=PAD, tape=None, sent=None):
     """Exact-size exchange via lax.ragged_all_to_all (shard_map only).
 
     capacity: static receive-buffer size; Theorem 1/3 bound the true
-    receive count, so ceil(k_bound * m) slots suffice.
-    Returns (recv_keys (capacity,), recv_count).
+    receive count, so ceil(k_bound * m) slots suffice.  ``values`` (same
+    leading shape as x_sorted) ride through a second ragged exchange with
+    the same size/offset vectors.
+    Returns (recv_keys (capacity,), recv_values_or_None, recv_count).
     """
-    t = lens.shape[0]
+    tape = tape if tape is not None else _null_tape()
     sizes = lens.astype(jnp.int32)
     # L[src, dst] — everyone learns the full size matrix (t^2 ints, tiny).
-    size_matrix = lax.all_gather(sizes, axis_name)            # (t, t)
+    size_matrix = tape.all_gather(sizes, axis_name, track=False)   # (t, t)
     me = lax.axis_index(axis_name)
     # Where my chunk lands in dst's buffer: sum of earlier senders' sizes.
     col_excl = jnp.cumsum(size_matrix, axis=0) - size_matrix   # (t, t)
-    output_offsets = col_excl[me]                              # (t,)
-    recv_sizes = size_matrix[:, me]                            # (t,)
+    output_offsets = col_excl[me].astype(jnp.int32)            # (t,)
+    recv_sizes = size_matrix[:, me].astype(jnp.int32)          # (t,)
+    in_offsets = starts.astype(jnp.int32)
     out = jnp.full((capacity,), jnp.asarray(pad_key, x_sorted.dtype))
-    recv = lax.ragged_all_to_all(
-        x_sorted, out, starts.astype(jnp.int32), sizes,
-        output_offsets.astype(jnp.int32), recv_sizes.astype(jnp.int32),
-        axis_name=axis_name)
-    return recv, jnp.sum(recv_sizes)
+    recv = tape.ragged_all_to_all(
+        x_sorted, out, in_offsets, sizes, output_offsets, recv_sizes,
+        axis_name=axis_name, sent=sent)
+    recv_v = None
+    if values is not None:
+        out_v = jnp.zeros((capacity,) + values.shape[1:], values.dtype)
+        recv_v = tape.ragged_all_to_all(
+            values, out_v, in_offsets, sizes, output_offsets, recv_sizes,
+            axis_name=axis_name, track=False)
+    return recv, recv_v, jnp.sum(recv_sizes)
 
 
 class ExchangeResult(NamedTuple):
@@ -134,32 +161,38 @@ def exchange_sorted_segments(x_sorted: jnp.ndarray,
                              cap_factor: float,
                              values: Optional[jnp.ndarray] = None,
                              backend: str = "static",
-                             merge: bool = True) -> ExchangeResult:
+                             merge: bool = True,
+                             tape=None) -> ExchangeResult:
     """Round-3 shuffle: deliver bucket k of every device to device k.
 
     x_sorted: (m,) locally sorted keys.  interior: (t-1,) boundaries.
     Output capacity = ceil(cap_factor * m) rounded up to a multiple of t.
     """
+    if backend not in ("static", "ragged"):
+        raise ValueError(f"unknown exchange backend {backend!r}; "
+                         "expected 'static' or 'ragged'")
     m = x_sorted.shape[0]
     cap_total = int(-(-int(cap_factor * m) // t) * t)  # round up to mult of t
     cap_pair = cap_total // t
     starts, lens = partition_sorted(x_sorted, interior)
     me = lax.axis_index(axis_name)
     sent = m - lens[me]  # objects leaving this device
+    tape = tape if tape is not None else _null_tape()
 
     if backend == "ragged":
-        recv, count = ragged_exchange(x_sorted, starts, lens, axis_name,
-                                      cap_total)
-        recv_v = None
+        recv, recv_v, count = ragged_exchange(
+            x_sorted, starts, lens, axis_name, cap_total, values=values,
+            tape=tape, sent=sent)
         dropped = jnp.zeros((), jnp.int32)
     else:
         keys_buf, vals_buf, local_drop = build_send_buffer(
             x_sorted, starts, lens, cap_pair, values)
-        recv2d, recv_v2d = static_exchange(keys_buf, axis_name, vals_buf)
+        recv2d, recv_v2d = static_exchange(keys_buf, axis_name, vals_buf,
+                                           tape=tape, sent=sent)
         recv = recv2d.reshape(-1)
         recv_v = recv_v2d.reshape(-1, *recv_v2d.shape[2:]) if recv_v2d is not None else None
         count = jnp.sum(recv < jnp.asarray(PAD, recv.dtype)).astype(jnp.int32)
-        dropped = lax.psum(local_drop, axis_name).astype(jnp.int32)
+        dropped = tape.psum(local_drop, axis_name).astype(jnp.int32)
 
     if merge:
         if recv_v is not None:

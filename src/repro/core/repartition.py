@@ -4,30 +4,37 @@ All tuples of a join key land on the machine ``hash(key) % t``; that
 machine cross-products the two sides.  This is the skew-vulnerable
 baseline the paper improves on (a single hot key pins its entire result
 to one machine), implemented so benchmarks can reproduce the imbalance
-the paper motivates with.
+the paper motivates with.  Runs on a repro.cluster substrate like the
+real algorithms; its one shuffle phase is recorded on the tape with the
+received count measured in-program.
 """
 from __future__ import annotations
 
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster.substrate import Substrate, VmapSubstrate
+
 from .localjoin import MASKED_KEY, local_equijoin
-from .alpha_k import AlphaKReport, PhaseStats
 
 __all__ = ["repartition_join"]
 
 
 def repartition_join(s_keys: np.ndarray, s_rows: np.ndarray,
                      t_keys: np.ndarray, t_rows: np.ndarray,
-                     t_machines: int, out_capacity: int):
-    """Hash-partition both tables by key; join per machine (vmapped)."""
+                     t_machines: int, out_capacity: int,
+                     substrate: Optional[Substrate] = None):
+    """Hash-partition both tables by key; join per machine."""
     t = t_machines
     s_keys = np.asarray(s_keys, np.int64)
     t_keys = np.asarray(t_keys, np.int64)
+    if substrate is None:
+        substrate = VmapSubstrate(t)
+    assert substrate.t == t, (substrate, t)
 
     def shard(keys, rows):
         dest = (keys * 2654435761 % 2**31) % t  # Knuth multiplicative hash
@@ -43,13 +50,16 @@ def repartition_join(s_keys: np.ndarray, s_rows: np.ndarray,
 
     sk, sr, ns = shard(s_keys, np.asarray(s_rows))
     tk, tr, nt = shard(t_keys, np.asarray(t_rows))
-    out = jax.vmap(lambda a, b, c, d: local_equijoin(a, b, c, d,
-                                                     out_capacity))(
-        sk, sr, tk, tr)
-    counts = np.asarray(out.count)
+
+    def body(a, b, c, d, tape):
+        with tape.phase("shuffle"):
+            received = jnp.sum(a != MASKED_KEY) + jnp.sum(c != MASKED_KEY)
+            tape.record(sent=received, received=received)
+            return local_equijoin(a, b, c, d, out_capacity)
+
+    out, tape = substrate.run(body, sk, sr, tk, tr)
+    counts = np.asarray(out.count).reshape(-1)
     n_in = len(s_keys) + len(t_keys)
-    phases = [PhaseStats("shuffle", sent=ns + nt, received=ns + nt)]
-    report = AlphaKReport(algorithm="RepartitionJoin", t=t, n_in=n_in,
-                          n_out=int(counts.sum()), workload=counts,
-                          phases=phases)
+    report = tape.report(algorithm="RepartitionJoin", t=t, n_in=n_in,
+                        n_out=int(counts.sum()), workload=counts)
     return out, report

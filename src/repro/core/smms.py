@@ -10,9 +10,10 @@ Three logical rounds (= collective phases in ONE jitted SPMD program):
   Round 3   bucketed shuffle with a static capacity derived from
             Theorem 1 (workload <= (1 + 2/r + t^2/n) m), then local merge.
 
-The function is written against an ``axis_name`` so the same code runs
-under ``shard_map`` (production mesh) and ``vmap`` (unit tests emulate t
-virtual machines on one CPU device).
+The per-device body is written against an ``axis_name`` plus a
+CollectiveTape, so the same code runs on any repro.cluster substrate
+(shard_map production mesh or vmap virtual machines) and its (alpha, k)
+report is assembled from counters recorded inside the jitted program.
 
 Guarantee (Thm 2): (3, 1 + 2/r + r t^3/n)-minimal for t^3 <= n.
 """
@@ -26,9 +27,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.cluster.capacity import CapacityPolicy, run_with_capacity
+from repro.cluster.collectives import CollectiveTape
+from repro.cluster.substrate import Substrate, VmapSubstrate
+
 from .boundaries import boundaries_jax, equidepth_samples
-from .exchange import PAD, ExchangeResult, exchange_sorted_segments
-from .alpha_k import AlphaKReport, PhaseStats, smms_workload_bound
+from .exchange import ExchangeResult, exchange_sorted_segments
+from .alpha_k import smms_workload_bound
 
 __all__ = ["smms_shard", "smms_sort", "SortResult", "default_cap_factor"]
 
@@ -44,81 +49,96 @@ class SortResult(NamedTuple):
 
 def default_cap_factor(n: int, t: int, r: int, slack: float = 1.05) -> float:
     """Static receive capacity from Theorem 1, with a small safety slack."""
-    return float((1.0 + 2.0 / r + t**2 / n) * slack)
+    return CapacityPolicy.smms(n, t, r, slack=slack).first_factor
 
 
 def smms_shard(x_local: jnp.ndarray, *, axis_name: str, t: int, r: int = 2,
                cap_factor: Optional[float] = None,
                values: Optional[jnp.ndarray] = None,
                backend: str = "static",
-               local_sort=jnp.sort) -> SortResult:
+               local_sort=jnp.sort,
+               tape: Optional[CollectiveTape] = None) -> SortResult:
     """Per-device SMMS body.  x_local: (m,) this machine's objects."""
     m = x_local.shape[0]
     n = m * t
     s = r * t
     if cap_factor is None:
         cap_factor = default_cap_factor(n, t, r)
+    if tape is None:
+        tape = CollectiveTape()
 
     # -- Round 1: local sort + equi-depth samples ---------------------------
-    if values is not None:
-        order = jnp.argsort(x_local)
-        xs = x_local[order]
-        values = values[order]
-    else:
-        xs = local_sort(x_local)
-    lam = equidepth_samples(xs, s)                    # (s+1,)
+    with tape.phase("round1->2 samples"):
+        if values is not None:
+            order = jnp.argsort(x_local)
+            xs = x_local[order]
+            values = values[order]
+        else:
+            xs = local_sort(x_local)
+        lam = equidepth_samples(xs, s)                    # (s+1,)
+        lam_all = tape.all_gather(lam, axis_name)         # (t, s+1)
 
-    # -- Round 2: gather samples, replicated Algorithm 1 --------------------
-    lam_all = lax.all_gather(lam, axis_name)          # (t, s+1)
-    b = boundaries_jax(lam_all, m, s)                 # (t+1,)
+    # -- Round 2: replicated Algorithm 1 (no traffic, still a round) --------
+    with tape.phase("round2 boundaries"):
+        b = boundaries_jax(lam_all, m, s)                 # (t+1,)
 
     # -- Round 3: bucketed shuffle + merge ----------------------------------
-    ex: ExchangeResult = exchange_sorted_segments(
-        xs, b[1:-1], axis_name=axis_name, t=t, cap_factor=cap_factor,
-        values=values, backend=backend, merge=True)
+    with tape.phase("round3 shuffle"):
+        ex: ExchangeResult = exchange_sorted_segments(
+            xs, b[1:-1], axis_name=axis_name, t=t, cap_factor=cap_factor,
+            values=values, backend=backend, merge=True, tape=tape)
     return SortResult(ex.keys, ex.values, ex.count, ex.sent, ex.dropped, b)
 
 
 # ---------------------------------------------------------------------------
-# Host-level wrapper: t virtual machines via vmap (tests / benchmarks).
+# Host-level wrapper: run the body on a substrate, with capacity retry.
 # ---------------------------------------------------------------------------
 
 def smms_sort(x: jnp.ndarray, r: int = 2,
               cap_factor: Optional[float] = None,
               values: Optional[jnp.ndarray] = None,
-              backend: str = "static"):
-    """Sort x of shape (t, m) across t virtual machines.
+              backend: str = "static",
+              substrate: Optional[Substrate] = None,
+              policy: Optional[CapacityPolicy] = None):
+    """Sort x of shape (t, m) across t machines on the given substrate.
 
-    Returns (sorted_global (<= t*C valid keys,), report: AlphaKReport).
+    Returns ((sorted_global, values_or_None), report: AlphaKReport).
     """
     t, m = x.shape
     n = t * m
-    body = functools.partial(smms_shard, axis_name="i", t=t, r=r,
-                             cap_factor=cap_factor, backend=backend)
-    if values is not None:
-        res = jax.vmap(body, axis_name="i")(x, values=values)
-    else:
-        res = jax.vmap(body, axis_name="i")(x)
+    if substrate is None:
+        substrate = VmapSubstrate(t)
+    assert substrate.t == t, (substrate, t)
+    if policy is None:
+        policy = (CapacityPolicy.fixed(cap_factor) if cap_factor is not None
+                  else CapacityPolicy.smms(n, t, r))
 
-    keys = np.asarray(res.keys)
-    counts = np.asarray(res.count)
+    def attempt(factor):
+        body = functools.partial(
+            smms_shard, axis_name=substrate.axis_name, t=t, r=r,
+            cap_factor=factor, backend=backend)
+        if values is not None:
+            run_body = lambda xl, vl, tape: body(xl, values=vl, tape=tape)
+            res, tape = substrate.run(run_body, x, values)
+        else:
+            run_body = lambda xl, tape: body(xl, tape=tape)
+            res, tape = substrate.run(run_body, x)
+        return (res, tape), int(np.asarray(res.dropped).reshape(-1)[0])
+
+    (res, tape), factor, attempts = run_with_capacity(attempt, policy)
+
+    keys = np.asarray(res.keys).reshape(t, -1)
+    counts = np.asarray(res.count).reshape(-1)
     flat = np.concatenate([keys[i, :counts[i]] for i in range(t)])
     vals = None
     if res.values is not None:
         v = np.asarray(res.values)
         vals = np.concatenate([v[i, :counts[i]] for i in range(t)])
 
-    s = r * t
-    phases = [
-        PhaseStats("round1->2 samples", sent=np.full(t, s + 1),
-                   received=np.full(t, t * (s + 1))),  # replicated Algorithm 1
-        PhaseStats("round2 boundaries", sent=np.zeros(t),
-                   received=np.zeros(t)),              # b computed locally
-        PhaseStats("round3 shuffle", sent=np.asarray(res.sent),
-                   received=counts),
-    ]
-    report = AlphaKReport(algorithm=f"SMMS(r={r})", t=t, n_in=n, n_out=n,
-                          workload=counts, phases=phases)
+    report = tape.report(algorithm=f"SMMS(r={r})", t=t, n_in=n, n_out=n,
+                         workload=counts)
     report.theoretical_workload_bound = smms_workload_bound(n, t, r)
-    report.total_dropped = int(np.asarray(res.dropped)[0])  # psum'd, equal
+    report.total_dropped = 0
+    report.cap_factor = factor
+    report.capacity_attempts = attempts
     return (flat, vals), report

@@ -11,7 +11,9 @@ Planner (faithful to §4.3.2-4.3.3):
     rectangles* along its longer side, as evenly as possible; the j-1
     largest go to fresh machines (each machine gets at most one big
     rectangle), the smallest (*residual*) joins the small pool when
-    MN < j W/t.
+    MN < j W/t.  All comparisons against the W/t threshold are done in
+    exact integer arithmetic (MN * t vs j * W) — W/t is a float whose
+    rounding would misclassify exact multiples.
   * Small results (and residuals) go one-by-one to the currently
     least-loaded machine.
 
@@ -20,8 +22,10 @@ bound is the static output-buffer capacity on TPU.
 
 Execution model mirrors the paper's MapReduce layout: the planner runs on
 tiny per-key statistics (the paper puts it in the map *setup* function —
-host-side here); tuple routing + the cross product are device code
-(vmapped/shard_mapped ``local_equijoin``).
+host-side here); tuple routing + the cross product are device code run on
+a repro.cluster substrate, with the route/stat phases recorded on the
+CollectiveTape (received counts measured in-program from the landed
+fragments).
 """
 from __future__ import annotations
 
@@ -33,8 +37,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster.collectives import CollectiveTape
+from repro.cluster.substrate import Substrate, VmapSubstrate
+
 from .localjoin import MASKED_KEY, local_equijoin
-from .alpha_k import AlphaKReport, PhaseStats, statjoin_workload_bound
+from .alpha_k import statjoin_workload_bound
 
 __all__ = [
     "JoinStatistics", "Rectangle", "collect_statistics", "plan_statjoin",
@@ -86,8 +93,10 @@ def plan_statjoin(stats: JoinStatistics, t: int) -> List[Rectangle]:
     w = stats.total
     if w == 0:
         return []
-    thresh = w / t
-    big_mask = stats.sizes > thresh
+    # Exact integer comparisons against the threshold W/t: MN > W/t iff
+    # MN * t > W.  (float W/t misclassifies exact multiples, e.g.
+    # MN = 21, W/t = 21/5: 5 * (21/5.) != 21.0 in binary floats.)
+    big_mask = stats.sizes * t > w
 
     rects: List[Rectangle] = []
     small_pool: List[Rectangle] = []  # machine=-1 until placed
@@ -98,7 +107,7 @@ def plan_statjoin(stats: JoinStatistics, t: int) -> List[Rectangle]:
     for key, m_k, n_k in zip(stats.keys[big_mask], stats.m[big_mask],
                              stats.n[big_mask]):
         mn = int(m_k) * int(n_k)
-        j = math.ceil(mn / thresh)
+        j = -(-mn * t // w)  # ceil(MN / (W/t)) in exact integers
         split_s = m_k >= n_k
         longer = int(m_k if split_s else n_k)
         j = min(j, longer)  # cannot split finer than one tuple per interval
@@ -111,7 +120,7 @@ def plan_statjoin(stats: JoinStatistics, t: int) -> List[Rectangle]:
             pieces.append((lo, lo + size))
             lo += size
         pieces.sort(key=lambda ab: ab[1] - ab[0], reverse=True)
-        exact = mn == j * thresh
+        exact = mn * t == j * w  # MN == j * W/t, exactly
         assigned = pieces if exact else pieces[:-1]
         residual = None if exact else pieces[-1]
         for (plo, phi) in assigned:
@@ -177,8 +186,14 @@ def _routing_tensors(keys: np.ndarray, rects: List[Rectangle], t: int,
 def statjoin(s_keys: np.ndarray, s_rows: np.ndarray,
              t_keys: np.ndarray, t_rows: np.ndarray,
              t_machines: int, out_cap_factor: float = 1.05,
-             stats: Optional[JoinStatistics] = None):
-    """Host wrapper: plan on statistics, execute vmapped per machine."""
+             stats: Optional[JoinStatistics] = None,
+             substrate: Optional[Substrate] = None,
+             out_capacity: Optional[int] = None):
+    """Host wrapper: plan on statistics, execute per machine on a substrate.
+
+    out_capacity overrides the Theorem-6-derived per-machine output
+    buffer (ceil(out_cap_factor * 2W/t)) when given.
+    """
     t = t_machines
     s_keys = np.asarray(s_keys, np.int32)
     t_keys = np.asarray(t_keys, np.int32)
@@ -186,6 +201,9 @@ def statjoin(s_keys: np.ndarray, s_rows: np.ndarray,
         stats = collect_statistics(s_keys, t_keys)
     rects = plan_statjoin(stats, t)
     w = stats.total
+    if substrate is None:
+        substrate = VmapSubstrate(t)
+    assert substrate.t == t, (substrate, t)
 
     s_idx, _ = _routing_tensors(s_keys, rects, t, "s")
     t_idx, _ = _routing_tensors(t_keys, rects, t, "t")
@@ -199,25 +217,34 @@ def statjoin(s_keys: np.ndarray, s_rows: np.ndarray,
     sk, sr = frag(s_keys, np.asarray(s_rows), s_idx)
     tk, tr = frag(t_keys, np.asarray(t_rows), t_idx)
 
-    capacity = max(1, math.ceil(
-        out_cap_factor * statjoin_workload_bound(w, t)))
-    out = jax.vmap(lambda a, b, c, d: local_equijoin(a, b, c, d, capacity))(
-        sk, sr, tk, tr)
-
-    counts = np.asarray(out.count)
+    capacity = (int(out_capacity) if out_capacity is not None
+                else max(1, math.ceil(
+                    out_cap_factor * statjoin_workload_bound(w, t))))
     n_in = len(s_keys) + len(t_keys)
-    phases = [
-        PhaseStats("rounds1-2 sort+stats", sent=np.full(t, n_in / t),
-                   received=np.full(t, n_in / t)),
-        PhaseStats("round3 stats->plan", sent=np.full(t, len(stats.keys)),
-                   received=np.full(t, len(stats.keys))),
-        PhaseStats("round3 route", sent=np.full(t, n_in / t),
-                   received=np.array([(s_idx[i] >= 0).sum()
-                                      + (t_idx[i] >= 0).sum()
-                                      for i in range(t)])),
-    ]
-    report = AlphaKReport(algorithm="StatJoin", t=t, n_in=n_in, n_out=w,
-                          workload=counts, phases=phases)
+    n_stat = len(stats.keys)
+
+    def body(a, b, c, d, tape):
+        # Rounds 1-2: the SMMS sort that produced the statistics — each
+        # tuple crosses the network once (n/t per machine, paper §4.3.1).
+        with tape.phase("rounds1-2 sort+stats"):
+            tape.record(sent=n_in / t, received=n_in / t)
+        # Round 3a: every machine learns the tiny per-key statistics so it
+        # can run the (deterministic, replicated) planner.
+        with tape.phase("round3 stats->plan"):
+            tape.record(sent=n_stat, received=n_stat)
+        # Round 3b: tuples routed per plan; the received count is measured
+        # in-program from the landed fragments (replicated tuples count
+        # once per copy — that is the paper's network cost of rectangles).
+        with tape.phase("round3 route"):
+            received = (jnp.sum(a != MASKED_KEY) + jnp.sum(c != MASKED_KEY))
+            tape.record(sent=n_in / t, received=received)
+            return local_equijoin(a, b, c, d, capacity)
+
+    out, tape = substrate.run(body, sk, sr, tk, tr)
+
+    counts = np.asarray(out.count).reshape(-1)
+    report = tape.report(algorithm="StatJoin", t=t, n_in=n_in, n_out=w,
+                         workload=counts)
     report.theoretical_workload_bound = statjoin_workload_bound(w, t)
     report.plan = rects
     return out, report

@@ -9,7 +9,9 @@ Round 3  bucketed shuffle; receiver sorts.
 
 Guarantee (Thm 3/4): |S_i| <= 5m + 1 w.p. >= 1 - 1/n, so the static
 receive capacity uses cap_factor ~ 5 (vs SMMS's ~< 2) — the weaker bound
-costs real buffer memory on TPU, which the benchmarks make visible.
+costs real buffer memory on TPU, which the benchmarks make visible.  The
+bound can *fail* (probability <= 1/n); the CapacityPolicy retry loop in
+repro.cluster is the recovery path.
 
 Note: the shuffle machinery requires contiguous per-destination segments,
 so we locally pre-sort before partitioning (the receiver still merges, and
@@ -27,10 +29,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.cluster.capacity import CapacityPolicy, run_with_capacity
+from repro.cluster.collectives import CollectiveTape
+from repro.cluster.substrate import Substrate, VmapSubstrate
+
 from .exchange import exchange_sorted_segments
 from .sampling import algorithm_s, terasort_sample_count
 from .smms import SortResult
-from .alpha_k import AlphaKReport, PhaseStats, terasort_workload_bound
+from .alpha_k import terasort_workload_bound
 
 __all__ = ["terasort_shard", "terasort_sort"]
 
@@ -38,57 +44,74 @@ __all__ = ["terasort_shard", "terasort_sort"]
 def terasort_shard(x_local: jnp.ndarray, rng: jax.Array, *, axis_name: str,
                    t: int, q: int, cap_factor: float = 5.5,
                    values: Optional[jnp.ndarray] = None,
-                   backend: str = "static") -> SortResult:
+                   backend: str = "static",
+                   tape: Optional[CollectiveTape] = None) -> SortResult:
     """Per-device Terasort body.  x_local: (m,), rng: per-device PRNG key."""
     m = x_local.shape[0]
+    if tape is None:
+        tape = CollectiveTape()
 
     # -- Round 1: Algorithm-S sampling --------------------------------------
-    samples = algorithm_s(rng, x_local, q)            # (q,)
+    with tape.phase("round1->2 samples"):
+        samples = algorithm_s(rng, x_local, q)            # (q,)
+        all_samples = jnp.sort(tape.all_gather(samples, axis_name).reshape(-1))
 
-    # -- Round 2: gather + pick every ceil(s/t)-th sample as boundary -------
-    all_samples = jnp.sort(lax.all_gather(samples, axis_name).reshape(-1))
-    s_tot = all_samples.shape[0]                      # t * q
-    i = jnp.arange(1, t)
-    idx = jnp.ceil(i * s_tot / t).astype(jnp.int32) - 1
-    interior = all_samples[idx]                       # b_1 .. b_{t-1}
+    # -- Round 2: every ceil(s/t)-th sample as boundary (replicated) --------
+    with tape.phase("round2 boundaries"):
+        s_tot = all_samples.shape[0]                      # t * q
+        i = jnp.arange(1, t)
+        idx = jnp.ceil(i * s_tot / t).astype(jnp.int32) - 1
+        interior = all_samples[idx]                       # b_1 .. b_{t-1}
 
     # -- Round 3: shuffle + sort --------------------------------------------
-    if values is not None:
-        order = jnp.argsort(x_local)
-        xs, values = x_local[order], values[order]
-    else:
-        xs = jnp.sort(x_local)
-    ex = exchange_sorted_segments(xs, interior, axis_name=axis_name, t=t,
-                                  cap_factor=cap_factor, values=values,
-                                  backend=backend, merge=True)
+    with tape.phase("round3 shuffle"):
+        if values is not None:
+            order = jnp.argsort(x_local)
+            xs, values = x_local[order], values[order]
+        else:
+            xs = jnp.sort(x_local)
+        ex = exchange_sorted_segments(xs, interior, axis_name=axis_name, t=t,
+                                      cap_factor=cap_factor, values=values,
+                                      backend=backend, merge=True, tape=tape)
     b = jnp.concatenate([all_samples[:1], interior, all_samples[-1:]])
     return SortResult(ex.keys, ex.values, ex.count, ex.sent, ex.dropped, b)
 
 
-def terasort_sort(x: jnp.ndarray, seed: int = 0, cap_factor: float = 5.5,
-                  backend: str = "static"):
-    """Host wrapper over t virtual machines.  x: (t, m)."""
+def terasort_sort(x: jnp.ndarray, seed: int = 0,
+                  cap_factor: Optional[float] = None,
+                  backend: str = "static",
+                  substrate: Optional[Substrate] = None,
+                  policy: Optional[CapacityPolicy] = None):
+    """Host wrapper over t machines on a substrate.  x: (t, m)."""
     t, m = x.shape
     n = t * m
     q = terasort_sample_count(n, t)
-    keys = jax.random.split(jax.random.key(seed), t)
-    body = functools.partial(terasort_shard, axis_name="i", t=t, q=q,
-                             cap_factor=cap_factor, backend=backend)
-    res = jax.vmap(body, axis_name="i")(x, keys)
+    rngs = jax.random.split(jax.random.key(seed), t)
+    if substrate is None:
+        substrate = VmapSubstrate(t)
+    assert substrate.t == t, (substrate, t)
+    if policy is None:
+        policy = (CapacityPolicy.fixed(cap_factor) if cap_factor is not None
+                  else CapacityPolicy.terasort(n, t, slack=1.1))
 
-    karr = np.asarray(res.keys)
-    counts = np.asarray(res.count)
+    def attempt(factor):
+        def body(xl, kl, tape):
+            return terasort_shard(xl, kl, axis_name=substrate.axis_name,
+                                  t=t, q=q, cap_factor=factor,
+                                  backend=backend, tape=tape)
+        res, tape = substrate.run(body, x, rngs)
+        return (res, tape), int(np.asarray(res.dropped).reshape(-1)[0])
+
+    (res, tape), factor, attempts = run_with_capacity(attempt, policy)
+
+    karr = np.asarray(res.keys).reshape(t, -1)
+    counts = np.asarray(res.count).reshape(-1)
     flat = np.concatenate([karr[i, :counts[i]] for i in range(t)])
 
-    phases = [
-        PhaseStats("round1->2 samples", sent=np.full(t, q),
-                   received=np.full(t, t * q)),
-        PhaseStats("round2 boundaries", sent=np.zeros(t), received=np.zeros(t)),
-        PhaseStats("round3 shuffle", sent=np.asarray(res.sent),
-                   received=counts),
-    ]
-    report = AlphaKReport(algorithm="Terasort+AlgS", t=t, n_in=n, n_out=n,
-                          workload=counts, phases=phases)
+    report = tape.report(algorithm="Terasort+AlgS", t=t, n_in=n, n_out=n,
+                         workload=counts)
     report.theoretical_workload_bound = terasort_workload_bound(n, t)
-    report.total_dropped = int(np.asarray(res.dropped)[0])
+    report.total_dropped = 0
+    report.cap_factor = factor
+    report.capacity_attempts = attempts
     return flat, report

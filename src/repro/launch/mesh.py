@@ -2,6 +2,8 @@
 
 Importing this module never touches jax device state — meshes are built
 inside functions only (the dry-run sets XLA_FLAGS before any jax import).
+Mesh construction goes through repro.cluster.compat so the axis-type
+handling tracks whatever this jax version supports.
 """
 from __future__ import annotations
 
@@ -14,23 +16,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     'data'  — batch + FSDP,
     'model' — TP / EP / sequence-sharded KV.
     """
-    import jax
-    from jax.sharding import AxisType
+    from repro.cluster.compat import make_mesh
 
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(t: int = 8):
     """Small mesh over however many (host) devices exist — examples/tests."""
     import jax
-    from jax.sharding import AxisType
+
+    from repro.cluster.compat import make_mesh
 
     n = len(jax.devices())
     t = min(t, n)
     data = max(1, t // 2) if t > 1 else 1
     model = t // data
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

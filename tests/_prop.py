@@ -1,0 +1,67 @@
+"""Property-test shim: hypothesis when installed, fixed examples otherwise.
+
+Every property test imports ``given``/``settings``/``st`` from here.  With
+``hypothesis`` installed you get the real thing (shrinking, the database,
+adaptive example generation).  Without it, ``@given`` degrades to running
+the test body on ``max_examples`` deterministic pseudo-random examples —
+no shrinking, but the properties still execute on every CI run instead of
+the whole module failing at import.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Integers:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def sample(self, rng: random.Random) -> int:
+            return rng.randint(self.lo, self.hi)
+
+    class _Floats:
+        def __init__(self, lo: float, hi: float, **_):
+            self.lo, self.hi = float(lo), float(hi)
+
+        def sample(self, rng: random.Random) -> float:
+            return rng.uniform(self.lo, self.hi)
+
+    class st:  # noqa: N801 — mimics `strategies as st`
+        integers = staticmethod(lambda lo, hi: _Integers(lo, hi))
+        floats = staticmethod(lambda lo, hi, **kw: _Floats(lo, hi, **kw))
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    def given(*strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest would follow __wrapped__
+            # to the original signature and demand fixtures for the
+            # drawn parameters.  The wrapper must look zero-argument.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(0xA1B2)  # deterministic across runs
+                for i in range(n):
+                    drawn = tuple(s.sample(rng) for s in strategies)
+                    try:
+                        fn(*drawn)
+                    except Exception as exc:  # surface the failing example
+                        raise AssertionError(
+                            f"fixed-example {i}/{n} failed with drawn "
+                            f"arguments {drawn!r}: {exc}") from exc
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

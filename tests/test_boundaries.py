@@ -2,7 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import boundaries_jax, boundaries_oracle, equidepth_samples
 from repro.core.boundaries import interval_pdf

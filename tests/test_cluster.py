@@ -1,0 +1,206 @@
+"""Cluster substrate: executor parity, instrumented tape, capacity retry,
+and the cluster.sort / cluster.join front door."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import cluster
+from repro.cluster import (CapacityOverflowError, CapacityPolicy,
+                           CollectiveTape, ShardMapSubstrate, VmapSubstrate,
+                           run_with_capacity)
+from repro.core.alpha_k import smms_k_bound, statjoin_workload_bound, \
+    terasort_k_bound
+from repro.data import uniform_keys, zipf_tables
+
+
+def oracle_join(s_keys, t_keys):
+    out = set()
+    byk = {}
+    for j, k in enumerate(t_keys):
+        byk.setdefault(int(k), []).append(j)
+    for i, k in enumerate(s_keys):
+        for j in byk.get(int(k), ()):
+            out.add((i, j))
+    return out
+
+
+def pairs(out):
+    s = np.asarray(out.s_rows).reshape(-1)
+    t = np.asarray(out.t_rows).reshape(-1)
+    v = np.asarray(out.valid).reshape(-1)
+    return set(zip(s[v].tolist(), t[v].tolist()))
+
+
+# ---------------------------------------------------------------------------
+# substrate parity: vmap virtual machines vs a shard_map mesh
+# ---------------------------------------------------------------------------
+
+def test_vmap_vs_shardmap_parity_single_device():
+    """Same input through both executors: identical output, equal k's.
+
+    In-process we only have one device, so the mesh is 1x1 — the
+    multi-device parity run lives in test_shardmap_parity.py (subprocess
+    with forced host devices).
+    """
+    m = 512
+    x = jnp.asarray(uniform_keys(m, seed=3).reshape(1, m))
+    (kv, _), rep_v = cluster.sort(x, substrate=VmapSubstrate(1))
+    (ks, _), rep_s = cluster.sort(x, substrate=ShardMapSubstrate(1))
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(ks))
+    assert rep_v.k_workload == rep_s.k_workload
+    assert rep_v.k_network == rep_s.k_network
+    assert rep_v.alpha == rep_s.alpha == 3
+
+
+def test_substrate_axis_metadata():
+    sub = VmapSubstrate(("a", 2), ("b", 4))
+    assert sub.t == 8 and sub.shape == (2, 4)
+    assert sub.axis_names == ("a", "b")
+    with pytest.raises(ValueError):
+        sub.axis_name  # ambiguous on 2D substrates
+    assert VmapSubstrate(8).axis_name == "i"
+
+
+# ---------------------------------------------------------------------------
+# instrumented collectives
+# ---------------------------------------------------------------------------
+
+def test_tape_records_inside_program():
+    """all_gather counters measured in-program match the hand count."""
+    t, k = 4, 5
+    sub = VmapSubstrate(t)
+
+    def body(xl, tape):
+        with tape.phase("gather"):
+            g = tape.all_gather(xl, sub.axis_name)
+        return jnp.sum(g)
+
+    x = jnp.arange(t * k, dtype=jnp.float32).reshape(t, k)
+    _, tape = sub.run(body, x)
+    [phase] = tape.phases(t)
+    np.testing.assert_array_equal(phase.sent, np.full(t, k))
+    np.testing.assert_array_equal(phase.received, np.full(t, t * k))
+
+
+def test_tape_alpha_counts_declared_phases():
+    sub = VmapSubstrate(2)
+
+    def body(xl, tape):
+        with tape.phase("p1"):
+            xl = tape.all_gather(xl, sub.axis_name).reshape(-1)
+        with tape.phase("p2(no traffic)"):
+            y = xl * 2
+        return jnp.sum(y)
+
+    _, tape = sub.run(body, jnp.ones((2, 3)))
+    rep = tape.report(algorithm="x", t=2, n_in=6, n_out=6,
+                      workload=np.array([3, 3]))
+    assert rep.alpha == 2  # the zero-traffic phase still counts
+
+
+def test_sort_reports_have_no_handbuilt_phases():
+    """Reports come from the tape: every phase has measured counters."""
+    t, m = 4, 256
+    x = jnp.asarray(uniform_keys(t * m, seed=5).reshape(t, m))
+    (_, _), rep = cluster.sort(x, algorithm="smms", r=2)
+    assert rep.alpha == 3
+    assert [p.name for p in rep.phases] == [
+        "round1->2 samples", "round2 boundaries", "round3 shuffle"]
+    # round-3 received counts equal the per-device workloads
+    np.testing.assert_array_equal(rep.phases[-1].received, rep.workload)
+
+
+# ---------------------------------------------------------------------------
+# capacity policy + retry loop
+# ---------------------------------------------------------------------------
+
+def test_capacity_policy_schedules():
+    pol = CapacityPolicy(base_factor=2.0, slack=1.0, growth=2.0,
+                         max_retries=2)
+    assert list(pol.factors()) == [2.0, 4.0, 8.0]
+    assert CapacityPolicy.smms(10_000, 10, 2).base_factor == pytest.approx(
+        1.0 + 2.0 / 2 + 100 / 10_000)
+    assert CapacityPolicy.statjoin().base_factor == 2.0
+
+
+def test_run_with_capacity_retries_then_succeeds():
+    calls = []
+
+    def attempt(factor):
+        calls.append(factor)
+        return ("ok", 0 if factor >= 4.0 else 7)
+
+    res, factor, attempts = run_with_capacity(
+        attempt, CapacityPolicy(base_factor=1.0, slack=1.0, growth=2.0,
+                                max_retries=3))
+    assert res == "ok" and attempts == 3 and factor == 4.0
+    assert calls == [1.0, 2.0, 4.0]
+
+
+def test_run_with_capacity_exhaustion_raises():
+    with pytest.raises(CapacityOverflowError) as ei:
+        run_with_capacity(lambda f: (None, 1),
+                          CapacityPolicy(base_factor=1.0, max_retries=1))
+    assert "still dropped" in str(ei.value)
+
+
+def test_sort_retry_on_adversarial_placement():
+    """Pre-sorted-by-machine placement overflows a tight per-pair capacity;
+    the policy loop must recover without caller involvement."""
+    t, m = 4, 512
+    x = np.sort(uniform_keys(t * m, seed=11)).reshape(t, m)
+    pol = CapacityPolicy(base_factor=1.2, slack=1.0, growth=2.0,
+                         max_retries=4)
+    (keys, _), rep = cluster.sort(jnp.asarray(x), policy=pol)
+    np.testing.assert_array_equal(np.sort(x.reshape(-1)), keys)
+    assert rep.capacity_attempts > 1           # it actually retried
+    assert rep.total_dropped == 0
+
+
+# ---------------------------------------------------------------------------
+# front door dispatch + theorem bounds via instrumented reports
+# ---------------------------------------------------------------------------
+
+def test_cluster_sort_dispatch_and_bounds():
+    t, m, r = 8, 1024, 2
+    n = t * m
+    x = jnp.asarray(uniform_keys(n, seed=7).reshape(t, m))
+    (ks, _), rep_s = cluster.sort(x, algorithm="smms", r=r)
+    (kt, _), rep_t = cluster.sort(x, algorithm="terasort", seed=0)
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(kt))
+    assert rep_s.check(smms_k_bound(n, t, r))
+    assert rep_t.check(terasort_k_bound(n, t))
+    with pytest.raises(ValueError, match="unknown sort algorithm"):
+        cluster.sort(x, algorithm="quicksort")
+
+
+@pytest.mark.parametrize("alg", ["randjoin", "statjoin", "repartition"])
+def test_cluster_join_dispatch_exact(alg):
+    n, t = 600, 6
+    s_keys, t_keys = zipf_tables(n, n, theta=0.2, seed=4, domain=80)
+    rows = np.arange(n)
+    out, rep = cluster.join(s_keys, rows, t_keys, rows, algorithm=alg,
+                            t_machines=t)
+    want = oracle_join(s_keys, t_keys)
+    assert pairs(out) == want
+    assert int(np.asarray(out.dropped).max()) == 0
+    if alg == "statjoin":
+        assert rep.alpha == 3
+        assert np.max(rep.workload) <= statjoin_workload_bound(len(want), t)
+    if alg == "randjoin":
+        assert rep.alpha == 1
+    with pytest.raises(ValueError, match="unknown join algorithm"):
+        cluster.join(s_keys, rows, t_keys, rows, algorithm="sortmerge",
+                     t_machines=t)
+
+
+def test_join_statjoin_on_shardmap_substrate():
+    """cluster.join runs under the mesh executor too (1-device mesh)."""
+    n = 200
+    s_keys, t_keys = zipf_tables(n, n, theta=0.3, seed=9, domain=40)
+    rows = np.arange(n)
+    out, rep = cluster.join(s_keys, rows, t_keys, rows, algorithm="statjoin",
+                            t_machines=1, substrate=ShardMapSubstrate(1))
+    assert pairs(out) == oracle_join(s_keys, t_keys)
+    assert rep.alpha == 3

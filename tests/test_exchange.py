@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.exchange import (PAD, build_send_buffer,
                                  exchange_sorted_segments, partition_sorted)
@@ -62,3 +62,57 @@ def test_property_exchange_conserves_or_drops(t, m, seed):
 
     counts, dropped = jax.vmap(body, axis_name="i")(jnp.asarray(x))
     assert int(counts.sum()) + int(dropped[0]) == t * m
+
+
+# ---------------------------------------------------------------------------
+# ragged backend: values routing (regression — values used to be silently
+# dropped) and version gating
+# ---------------------------------------------------------------------------
+
+def test_ragged_backend_does_not_silently_drop_values():
+    """backend='ragged' must either route values or fail loudly."""
+    from repro.cluster import compat
+    from repro.core.exchange import ragged_exchange
+
+    t, m = 4, 32
+    x = jnp.sort(jnp.asarray(np.random.default_rng(2).normal(size=m),
+                             jnp.float32))
+    vals = jnp.arange(m, dtype=jnp.int32)
+    interior = jnp.asarray([-0.5, 0.0, 0.5], jnp.float32)
+
+    def body(xl, vl):
+        r = exchange_sorted_segments(xl, interior, axis_name="i", t=t,
+                                     cap_factor=float(t), values=vl,
+                                     backend="ragged")
+        return r.keys, r.values
+
+    if not compat.HAS_RAGGED:
+        # this jax build has no ragged_all_to_all: loud error, not a
+        # silently values-less result
+        with pytest.raises(NotImplementedError, match="ragged_all_to_all"):
+            jax.vmap(body, axis_name="i")(jnp.tile(x, (t, 1)),
+                                          jnp.tile(vals, (t, 1)))
+        return
+
+    # op available: the lowered program must carry TWO ragged exchanges
+    # (keys + values) with the same size vectors
+    import jax as _jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    if len(_jax.devices()) < t:
+        pytest.skip("needs >= t devices for shard_map lowering")
+    mesh = _jax.make_mesh((t,), ("i",))
+    fn = _jax.jit(shard_map(
+        lambda xl, vl: body(xl[0], vl[0]),
+        mesh=mesh, in_specs=(P("i"), P("i")), out_specs=P("i")))
+    txt = fn.lower(jnp.tile(x, (t, 1)), jnp.tile(vals, (t, 1))).as_text()
+    assert txt.count("ragged-all-to-all") >= 2, txt
+
+
+def test_unknown_backend_rejected():
+    x = jnp.sort(jnp.asarray(np.random.default_rng(0).normal(size=8),
+                             jnp.float32))
+    with pytest.raises(ValueError, match="unknown exchange backend"):
+        jax.vmap(lambda xl: exchange_sorted_segments(
+            xl, jnp.asarray([0.0]), axis_name="i", t=2, cap_factor=2.0,
+            backend="bogus"), axis_name="i")(jnp.tile(x, (2, 1)))

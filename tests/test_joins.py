@@ -2,7 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import (choose_ab, collect_statistics, local_equijoin,
                         plan_statjoin, randjoin, repartition_join, statjoin)
@@ -165,3 +165,48 @@ def test_property_statjoin_exact_and_bounded(seed, t):
     if want:
         assert np.max(report.workload) <= statjoin_workload_bound(
             len(want), t) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# planner: integer-exact threshold arithmetic (regression: `mn == j*thresh`
+# compared an int against j * (W/t) in floats, misclassifying exact
+# multiples whenever W/t is not binary-representable)
+# ---------------------------------------------------------------------------
+
+def _plan_loads(stats, t):
+    loads = np.zeros(t, dtype=np.int64)
+    for r in plan_statjoin(stats, t):
+        assert 0 <= r.machine < t
+        loads[r.machine] += r.size
+    return loads
+
+
+def test_plan_exact_multiple_nonrepresentable_threshold():
+    """One key of size 21 with W=21, t=5: MN == 5 * (21/5) exactly in
+    rationals but not in floats.  The exact path must assign all j
+    rectangles (no residual) and still satisfy Theorem 6."""
+    from repro.core.statjoin import JoinStatistics
+    stats = JoinStatistics(keys=np.array([7]), m=np.array([21]),
+                           n=np.array([1]))
+    t = 5
+    loads = _plan_loads(stats, t)
+    assert loads.sum() == 21
+    # exact integer form of the Theorem-6 bound: load * t <= 2 * W
+    assert loads.max() * t <= 2 * stats.total
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 10))
+def test_property_plan_theorem6_integer_exact(seed, t):
+    """Per-machine planned load never exceeds 2W/t (exact rational
+    comparison), and the plan partitions the result exactly."""
+    rng = np.random.default_rng(seed)
+    nkeys = int(rng.integers(1, 12))
+    from repro.core.statjoin import JoinStatistics
+    stats = JoinStatistics(
+        keys=np.arange(nkeys),
+        m=rng.integers(1, 40, nkeys),
+        n=rng.integers(1, 40, nkeys))
+    loads = _plan_loads(stats, t)
+    assert loads.sum() == stats.total
+    assert loads.max() * t <= 2 * stats.total

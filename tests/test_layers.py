@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.models.layers import chunked_cross_entropy, rms_norm, rope
 
