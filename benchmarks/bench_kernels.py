@@ -11,8 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.bitonic import bitonic_sort
-from repro.kernels.bucketize import bucketize_histogram
+from repro.kernels.bitonic import bitonic_sort, merge_sorted_rows
+from repro.kernels.bucketize import bucketize_histogram, searchsorted
 from repro.kernels.flash_attention import flash_attention
 
 
@@ -37,6 +37,19 @@ def run(report_rows: List[str]) -> None:
     np.testing.assert_array_equal(ids, rids)
     np.testing.assert_array_equal(counts, rcounts)
     report_rows.append(f"kernel,bucketize,16k/64b,us={us:.0f},allclose=1")
+
+    srt = jnp.sort(jax.random.normal(jax.random.key(6), (16, 512)), axis=1)
+    got, us = _time(merge_sorted_rows, srt)
+    np.testing.assert_array_equal(got, jnp.sort(srt.reshape(-1)))
+    report_rows.append(f"kernel,merge_sorted_rows,16x512,us={us:.0f},"
+                       f"allclose=1")
+
+    a = jnp.sort(jax.random.normal(jax.random.key(7), (1 << 12,)))
+    qq = jax.random.normal(jax.random.key(8), (1 << 14,))
+    got, us = _time(lambda x, y: searchsorted(x, y, side="right"), a, qq)
+    np.testing.assert_array_equal(
+        got, jnp.searchsorted(a, qq, side="right").astype(jnp.int32))
+    report_rows.append(f"kernel,searchsorted,4k/16k,us={us:.0f},allclose=1")
 
     q = jax.random.normal(jax.random.key(3), (1, 4, 256, 64))
     k = jax.random.normal(jax.random.key(4), (1, 2, 256, 64))

@@ -7,6 +7,8 @@ in most cases; SMMS total runtime beats Terasort by ~25%.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import List
 
@@ -17,6 +19,10 @@ import jax.numpy as jnp
 from repro import cluster
 from repro.core.alpha_k import smms_workload_bound, terasort_workload_bound
 from repro.data import lidar_like, uniform_keys
+from repro.kernels import ops
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_sort.json")
 
 
 def run(report_rows: List[str]) -> None:
@@ -48,6 +54,96 @@ def run(report_rows: List[str]) -> None:
                 f"smms,{dt_s * 1e6:.0f},terasort={dt_t * 1e6:.0f}")
             assert rep_s.imbalance <= rep_t.imbalance + 0.05, (
                 "paper claim: SMMS balances better than Terasort")
+
+
+def run_kernel_compare(report_rows: List[str]) -> None:
+    """Kernel-dispatch layer on vs off through the REAL front door.
+
+    Each row times ``cluster.sort`` (and the raw ops) with
+    kernel_backend="pallas" vs "reference" and asserts the outputs are
+    bitwise identical — the differential contract, measured at benchmark
+    scale.  Results land in BENCH_sort.json.  On this CPU container the
+    Pallas path runs in interpret mode, so its latency is a correctness
+    datapoint, NOT TPU performance (the roofline suite models that).
+    """
+    entries = []
+
+    def timed(fn, *args, **kw):
+        out = jax.block_until_ready(fn(*args, **kw))
+        t0 = time.time()
+        out = jax.block_until_ready(fn(*args, **kw))
+        return out, (time.time() - t0) * 1e6
+
+    # ---- raw ops microcompare --------------------------------------------
+    for rows, n in ((8, 1024), (4, 4096)):
+        x = jax.random.normal(jax.random.key(rows * n), (rows, n))
+        ref, ref_us = timed(lambda a: ops.sort(a, backend="reference"), x)
+        ker, ker_us = timed(lambda a: ops.sort(a, backend="pallas"), x)
+        equal = bool(np.array_equal(np.asarray(ref), np.asarray(ker)))
+        assert equal, "kernel sort diverged from reference"
+        entries.append({"op": "ops.sort", "shape": f"{rows}x{n}",
+                        "reference_us": round(ref_us),
+                        "pallas_us": round(ker_us), "bitwise_equal": equal})
+        report_rows.append(
+            f"kernel_compare,ops.sort,{rows}x{n},ref_us={ref_us:.0f},"
+            f"pallas_us={ker_us:.0f},equal=1")
+
+    srt = jnp.sort(jax.random.normal(jax.random.key(5), (8, 512)), axis=1)
+    ref, ref_us = timed(lambda a: ops.merge_sorted_rows(a,
+                                                        backend="reference"),
+                        srt)
+    ker, ker_us = timed(lambda a: ops.merge_sorted_rows(a, backend="pallas"),
+                        srt)
+    equal = bool(np.array_equal(np.asarray(ref), np.asarray(ker)))
+    assert equal, "kernel merge diverged from reference"
+    entries.append({"op": "ops.merge_sorted_rows", "shape": "8x512",
+                    "reference_us": round(ref_us),
+                    "pallas_us": round(ker_us), "bitwise_equal": equal})
+    report_rows.append(
+        f"kernel_compare,ops.merge_sorted_rows,8x512,ref_us={ref_us:.0f},"
+        f"pallas_us={ker_us:.0f},equal=1")
+
+    # ---- end-to-end: the cluster front door ------------------------------
+    t, m = 8, 1 << 10
+    x = jnp.asarray(uniform_keys(t * m, seed=6).reshape(t, m))
+    for algorithm in ("smms", "terasort"):
+        (ref_keys, _), rep_ref = cluster.sort(x, algorithm=algorithm,
+                                              kernel_backend="reference")
+        t0 = time.time()
+        (ref_keys, _), rep_ref = cluster.sort(x, algorithm=algorithm,
+                                              kernel_backend="reference")
+        ref_us = (time.time() - t0) * 1e6
+        ops.reset_dispatch_counts()
+        (ker_keys, _), rep_ker = cluster.sort(x, algorithm=algorithm,
+                                              kernel_backend="pallas")
+        t0 = time.time()
+        (ker_keys, _), rep_ker = cluster.sort(x, algorithm=algorithm,
+                                              kernel_backend="pallas")
+        ker_us = (time.time() - t0) * 1e6
+        kernel_calls = sum(c for (op, path), c in ops.DISPATCH_COUNTS.items()
+                           if path == "pallas")
+        equal = bool(np.array_equal(np.asarray(ref_keys),
+                                    np.asarray(ker_keys)))
+        assert equal, f"{algorithm}: kernel path diverged from reference"
+        assert rep_ref.k_workload == rep_ker.k_workload
+        entries.append({"op": f"cluster.sort[{algorithm}]",
+                        "shape": f"{t}x{m}",
+                        "reference_us": round(ref_us),
+                        "pallas_us": round(ker_us),
+                        "pallas_dispatches": int(kernel_calls),
+                        "bitwise_equal": equal,
+                        "k_workload": rep_ker.k_workload})
+        report_rows.append(
+            f"kernel_compare,cluster.sort,{algorithm},t={t},"
+            f"ref_us={ref_us:.0f},pallas_us={ker_us:.0f},equal=1")
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"suite": "bench_sort.run_kernel_compare",
+                   "interpret_mode": ops.INTERPRET,
+                   "note": ("interpret-mode Pallas latencies are a "
+                            "correctness datapoint, not TPU performance"),
+                   "entries": entries}, f, indent=2)
+    report_rows.append(f"kernel_compare,json,{os.path.abspath(BENCH_JSON)}")
 
 
 def run_scaling(report_rows: List[str]) -> None:

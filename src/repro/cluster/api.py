@@ -28,8 +28,16 @@ def sort(x, *, algorithm: str = "smms",
          substrate: Optional[Substrate] = None,
          values=None, r: int = 2, seed: int = 0,
          cap_factor: Optional[float] = None,
-         backend: str = "static", policy=None):
-    """Distributed sort of x: (t, m).  Returns ((keys, values), report)."""
+         backend: str = "static", kernel_backend: Optional[str] = None,
+         policy=None):
+    """Distributed sort of x: (t, m).  Returns ((keys, values), report).
+
+    kernel_backend: "pallas" routes every local sort/partition/merge hot
+    loop through the Pallas kernels (repro.kernels.ops), "reference"
+    pins the jnp path, None uses ops.DEFAULT_BACKEND (the
+    REPRO_KERNEL_BACKEND env var).  Outputs and (alpha, k) reports are
+    bitwise-identical across kernel backends.
+    """
     if np.ndim(x) != 2:
         raise ValueError(
             f"sort expects x of shape (t, m) — one row per machine — got "
@@ -37,7 +45,8 @@ def sort(x, *, algorithm: str = "smms",
     if algorithm == "smms":
         from repro.core.smms import smms_sort
         return smms_sort(x, r=r, cap_factor=cap_factor, values=values,
-                         backend=backend, substrate=substrate, policy=policy)
+                         backend=backend, kernel_backend=kernel_backend,
+                         substrate=substrate, policy=policy)
     if algorithm == "terasort":
         if values is not None:
             raise NotImplementedError(
@@ -45,8 +54,9 @@ def sort(x, *, algorithm: str = "smms",
                 "use algorithm='smms'")
         from repro.core.terasort import terasort_sort
         flat, report = terasort_sort(x, seed=seed, cap_factor=cap_factor,
-                                     backend=backend, substrate=substrate,
-                                     policy=policy)
+                                     backend=backend,
+                                     kernel_backend=kernel_backend,
+                                     substrate=substrate, policy=policy)
         return (flat, None), report
     raise ValueError(f"unknown sort algorithm {algorithm!r}; "
                      f"expected one of {SORT_ALGORITHMS}")
@@ -56,8 +66,12 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
          t_machines: int, substrate: Optional[Substrate] = None,
          out_capacity: Optional[int] = None, seed: int = 0,
          in_cap_factor: float = 4.0, out_cap_factor: float = 1.05,
+         kernel_backend: Optional[str] = None,
          ab: Optional[Tuple[int, int]] = None, stats=None):
     """Distributed equi-join.  Returns (JoinOutput, report).
+
+    kernel_backend: as in :func:`sort` — routes the per-device sort and
+    binary-search hot loops through the Pallas kernels when "pallas".
 
     out_capacity defaults to the Theorem-6 bound ceil(2W/t) + slack for
     the algorithms that need an explicit buffer (randjoin/repartition) —
@@ -71,6 +85,7 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
         from repro.core.statjoin import statjoin
         return statjoin(s_keys, s_rows, t_keys, t_rows, t_machines=t_machines,
                         out_cap_factor=out_cap_factor, stats=stats,
+                        kernel_backend=kernel_backend,
                         substrate=substrate, out_capacity=out_capacity)
 
     defaulted_capacity = out_capacity is None
@@ -96,6 +111,7 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
                                 out_capacity=int(cap), seed=seed,
                                 in_cap_factor=in_cap_factor
                                 * (cap / out_capacity),
+                                kernel_backend=kernel_backend,
                                 ab=ab, substrate=substrate)
             return (out, rep), int(np.asarray(out.dropped).max())
 
@@ -114,4 +130,5 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
     from repro.core.repartition import repartition_join
     return repartition_join(s_keys, s_rows, t_keys, t_rows,
                             t_machines=t_machines, out_capacity=out_capacity,
+                            kernel_backend=kernel_backend,
                             substrate=substrate)

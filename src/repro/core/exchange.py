@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels import ops
+
 __all__ = [
     "PAD",
     "partition_sorted",
@@ -52,16 +54,23 @@ def _null_tape():
     return CollectiveTape()
 
 
-def partition_sorted(x_sorted: jnp.ndarray, interior: jnp.ndarray
+def partition_sorted(x_sorted: jnp.ndarray, interior: jnp.ndarray,
+                     kernel_backend: Optional[str] = None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Split a locally sorted vector into t contiguous destination segments.
 
     interior: (t-1,) interior boundaries b_1..b_{t-1}.  Element e goes to
     bucket k iff b_k <= e < b_{k+1} (b_0 = -inf, b_t = +inf).
     Returns (starts, lens), each (t,).
+
+    Both backends run the same t-1 binary searches over the (sorted)
+    local keys — `ops.searchsorted` dispatches them to the Pallas
+    branch-free search kernel — and agree bitwise: segment k holds
+    exactly the keys with b_k <= key < b_{k+1}.
     """
     m = x_sorted.shape[0]
-    cuts = jnp.searchsorted(x_sorted, interior, side="left")  # (t-1,)
+    cuts = ops.searchsorted(x_sorted, interior, side="left",
+                            backend=kernel_backend)            # (t-1,)
     starts = jnp.concatenate([jnp.zeros((1,), cuts.dtype), cuts])
     ends = jnp.concatenate([cuts, jnp.full((1,), m, cuts.dtype)])
     return starts, ends - starts
@@ -162,11 +171,20 @@ def exchange_sorted_segments(x_sorted: jnp.ndarray,
                              values: Optional[jnp.ndarray] = None,
                              backend: str = "static",
                              merge: bool = True,
+                             kernel_backend: Optional[str] = None,
                              tape=None) -> ExchangeResult:
     """Round-3 shuffle: deliver bucket k of every device to device k.
 
     x_sorted: (m,) locally sorted keys.  interior: (t-1,) boundaries.
     Output capacity = ceil(cap_factor * m) rounded up to a multiple of t.
+
+    kernel_backend routes the partition and the receive-side merge
+    through repro.kernels.ops ("pallas" = Pallas kernels, "reference" =
+    jnp, None = ops.DEFAULT_BACKEND).  On the static backend every
+    sender's tile row lands already sorted, so the merge is the fused
+    log-t bitonic merge kernel rather than a full re-sort; the ragged
+    backend's receive buffer has device-dependent run offsets, so it
+    re-sorts (still through ops, which may use the bitonic sort kernel).
     """
     if backend not in ("static", "ragged"):
         raise ValueError(f"unknown exchange backend {backend!r}; "
@@ -174,11 +192,13 @@ def exchange_sorted_segments(x_sorted: jnp.ndarray,
     m = x_sorted.shape[0]
     cap_total = int(-(-int(cap_factor * m) // t) * t)  # round up to mult of t
     cap_pair = cap_total // t
-    starts, lens = partition_sorted(x_sorted, interior)
+    starts, lens = partition_sorted(x_sorted, interior,
+                                    kernel_backend=kernel_backend)
     me = lax.axis_index(axis_name)
     sent = m - lens[me]  # objects leaving this device
     tape = tape if tape is not None else _null_tape()
 
+    recv2d = recv_v2d = None
     if backend == "ragged":
         recv, recv_v, count = ragged_exchange(
             x_sorted, starts, lens, axis_name, cap_total, values=values,
@@ -195,10 +215,15 @@ def exchange_sorted_segments(x_sorted: jnp.ndarray,
         dropped = tape.psum(local_drop, axis_name).astype(jnp.int32)
 
     if merge:
-        if recv_v is not None:
-            order = jnp.argsort(recv)
-            recv = recv[order]
-            recv_v = recv_v[order]
+        if recv2d is not None:          # static: per-sender rows are sorted
+            if recv_v2d is not None:
+                recv, recv_v = ops.merge_sorted_rows_kv(
+                    recv2d, recv_v2d, backend=kernel_backend)
+            else:
+                recv = ops.merge_sorted_rows(recv2d, backend=kernel_backend)
+        elif recv_v is not None:
+            recv, recv_v = ops.sort_kv(recv, recv_v, backend=kernel_backend)
         else:
-            recv = jnp.sort(recv)  # pads (=inf) land at the end
+            recv = ops.sort(recv, backend=kernel_backend)
+        # pads (= inf) land at the end in every path
     return ExchangeResult(recv, recv_v, count, sent, dropped)

@@ -7,13 +7,20 @@ its match range; output slot j is decoded back to (s index, offset) with a
 searchsorted over the cumulative match counts — three sorts/searches and
 two gathers, no data-dependent shapes anywhere.
 
+All three hot loops route through the kernel-dispatch layer
+(repro.kernels.ops): the T-side sort is the bitonic pair-sort kernel and
+the binary searches are the fused searchsorted kernel when
+``kernel_backend="pallas"``, with bitwise-identical jnp fallbacks.
+
 Masked tuples use key == MASKED_KEY (int sentinel) and never match.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
+
+from repro.kernels import ops
 
 __all__ = ["MASKED_KEY", "JoinOutput", "local_equijoin", "join_size"]
 
@@ -28,18 +35,21 @@ class JoinOutput(NamedTuple):
     dropped: jnp.ndarray  # scalar: results beyond capacity (0 == success)
 
 
-def join_size(s_keys: jnp.ndarray, t_keys: jnp.ndarray) -> jnp.ndarray:
+def join_size(s_keys: jnp.ndarray, t_keys: jnp.ndarray,
+              kernel_backend: Optional[str] = None) -> jnp.ndarray:
     """Exact |S >< T| for the local fragments (for capacity planning)."""
-    tk = jnp.sort(jnp.where(t_keys == MASKED_KEY, MASKED_KEY, t_keys))
-    lo = jnp.searchsorted(tk, s_keys, side="left")
-    hi = jnp.searchsorted(tk, s_keys, side="right")
+    tk = ops.sort(jnp.where(t_keys == MASKED_KEY, MASKED_KEY, t_keys),
+                  backend=kernel_backend)
+    lo = ops.searchsorted(tk, s_keys, side="left", backend=kernel_backend)
+    hi = ops.searchsorted(tk, s_keys, side="right", backend=kernel_backend)
     cnt = jnp.where(s_keys == MASKED_KEY, 0, hi - lo)
     return jnp.sum(cnt)
 
 
 def local_equijoin(s_keys: jnp.ndarray, s_rows: jnp.ndarray,
                    t_keys: jnp.ndarray, t_rows: jnp.ndarray,
-                   capacity: int) -> JoinOutput:
+                   capacity: int,
+                   kernel_backend: Optional[str] = None) -> JoinOutput:
     """Cross-product of equal keys, statically shaped.
 
     s_keys/t_keys: (ns,)/(nt,) int32 join keys (MASKED_KEY = absent).
@@ -49,12 +59,11 @@ def local_equijoin(s_keys: jnp.ndarray, s_rows: jnp.ndarray,
 
     # Sort T by key; masked tuples (sentinel = int max) sort to the end and
     # are excluded because searchsorted for any real key stops before them.
-    t_order = jnp.argsort(t_keys)
-    tk = t_keys[t_order]
-    tv = t_rows[t_order]
+    tk, tv = ops.sort_kv(t_keys, t_rows, backend=kernel_backend)
 
-    lo = jnp.searchsorted(tk, s_keys, side="left")     # (ns,)
-    hi = jnp.searchsorted(tk, s_keys, side="right")
+    lo = ops.searchsorted(tk, s_keys, side="left",
+                          backend=kernel_backend)     # (ns,)
+    hi = ops.searchsorted(tk, s_keys, side="right", backend=kernel_backend)
     cnt = jnp.where(s_keys == MASKED_KEY, 0, hi - lo)  # matches per S tuple
 
     cum = jnp.cumsum(cnt)                              # inclusive
@@ -63,7 +72,8 @@ def local_equijoin(s_keys: jnp.ndarray, s_rows: jnp.ndarray,
 
     out_j = jnp.arange(capacity)
     # slot j belongs to the S tuple whose [excl, cum) window contains j
-    src_s = jnp.searchsorted(cum, out_j, side="right")
+    src_s = ops.searchsorted(cum, out_j, side="right",
+                             backend=kernel_backend)
     src_s = jnp.clip(src_s, 0, ns - 1)
     within = out_j - excl[src_s]
     t_idx = jnp.clip(lo[src_s] + within, 0, tk.shape[0] - 1)

@@ -31,6 +31,7 @@ from jax import lax
 
 from repro.cluster.collectives import CollectiveTape
 from repro.cluster.substrate import Substrate, VmapSubstrate
+from repro.kernels import ops
 
 from .exchange import PAD, build_send_buffer, static_exchange
 from .localjoin import MASKED_KEY, JoinOutput, local_equijoin
@@ -53,17 +54,20 @@ def choose_ab(t: int, size_s: int, size_t: int) -> Tuple[int, int]:
 
 def route_to_interval(keys: jnp.ndarray, rows: jnp.ndarray,
                       assign: jnp.ndarray, n_dst: int, axis_name: str,
-                      cap_pair: int, tape: Optional[CollectiveTape] = None):
+                      cap_pair: int, tape: Optional[CollectiveTape] = None,
+                      kernel_backend: Optional[str] = None):
     """all_to_all tuples to their assigned interval along ``axis_name``.
 
     Returns (join_keys, payload_rows, dropped, valid_count); masked slots
     have join_key == MASKED_KEY.
     """
-    order = jnp.argsort(assign)
-    a_sorted = assign[order].astype(jnp.float32)
-    payload = jnp.stack([keys[order], rows[order]], axis=-1)   # (m, 2) int32
+    pairs = jnp.stack([keys, rows], axis=-1)                   # (m, 2) int32
+    assign_sorted, payload = ops.sort_kv(assign, pairs,
+                                         backend=kernel_backend)
+    a_sorted = assign_sorted.astype(jnp.float32)
     interior = jnp.arange(1, n_dst, dtype=jnp.float32) - 0.5
-    cuts = jnp.searchsorted(a_sorted, interior, side="left")
+    cuts = ops.searchsorted(a_sorted, interior, side="left",
+                            backend=kernel_backend)
     starts = jnp.concatenate([jnp.zeros((1,), cuts.dtype), cuts])
     ends = jnp.concatenate([cuts, jnp.full((1,), a_sorted.shape[0], cuts.dtype)])
     lens = ends - starts
@@ -83,6 +87,7 @@ def route_to_interval(keys: jnp.ndarray, rows: jnp.ndarray,
 def randjoin_shard(s_keys, s_rows, t_keys, t_rows, rng, *,
                    axis_a: str, axis_b: str, a: int, b: int,
                    out_capacity: int, in_cap_factor: float = 2.0,
+                   kernel_backend: Optional[str] = None,
                    tape: Optional[CollectiveTape] = None) -> JoinOutput:
     """Per-device RandJoin body.  Local fragments: (ms,), (mt,) int32."""
     ms, mt = s_keys.shape[0], t_keys.shape[0]
@@ -98,19 +103,22 @@ def randjoin_shard(s_keys, s_rows, t_keys, t_rows, rng, *,
         # ---- route S to its row (all_to_all over 'a'), replicate over 'b' --
         cap_s = max(1, math.ceil(in_cap_factor * ms / a))
         sk, sr, sdrop, s_count = route_to_interval(
-            s_keys, s_rows, i_assign, a, axis_a, cap_s, tape=tape)
+            s_keys, s_rows, i_assign, a, axis_a, cap_s, tape=tape,
+            kernel_backend=kernel_backend)
         sk = tape.all_gather(sk, axis_b, count=s_count).reshape(-1)
         sr = tape.all_gather(sr, axis_b, track=False).reshape(-1)
 
         # ---- route T to its column (all_to_all over 'b'), replicate over 'a'
         cap_t = max(1, math.ceil(in_cap_factor * mt / b))
         tk, tr, tdrop, t_count = route_to_interval(
-            t_keys, t_rows, j_assign, b, axis_b, cap_t, tape=tape)
+            t_keys, t_rows, j_assign, b, axis_b, cap_t, tape=tape,
+            kernel_backend=kernel_backend)
         tk = tape.all_gather(tk, axis_a, count=t_count).reshape(-1)
         tr = tape.all_gather(tr, axis_a, track=False).reshape(-1)
 
         # ---- reduce phase: local cross product (same round — no barrier) ---
-        out = local_equijoin(sk, sr, tk, tr, out_capacity)
+        out = local_equijoin(sk, sr, tk, tr, out_capacity,
+                             kernel_backend=kernel_backend)
         dropped = out.dropped + tape.psum(sdrop + tdrop,
                                           axis_a if a > 1 else axis_b)
     return out._replace(dropped=dropped.astype(jnp.int32))
@@ -121,6 +129,7 @@ def randjoin(s_keys: np.ndarray, s_rows: np.ndarray,
              t_machines: int, out_capacity: int,
              seed: int = 0, in_cap_factor: float = 2.0,
              ab: Optional[Tuple[int, int]] = None,
+             kernel_backend: Optional[str] = None,
              substrate: Optional[Substrate] = None):
     """Host wrapper: the a x b machine matrix on a 2-axis substrate.
 
@@ -149,7 +158,8 @@ def randjoin(s_keys: np.ndarray, s_rows: np.ndarray,
 
     body = functools.partial(randjoin_shard, axis_a=axis_a, axis_b=axis_b,
                              a=a, b=b, out_capacity=out_capacity,
-                             in_cap_factor=in_cap_factor)
+                             in_cap_factor=in_cap_factor,
+                             kernel_backend=kernel_backend)
     run_body = lambda *args, tape: body(*args, tape=tape)
     out, tape = substrate.run(run_body, sk, sr, tk, tr, rngs)
 

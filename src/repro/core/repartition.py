@@ -10,10 +10,8 @@ received count measured in-program.
 """
 from __future__ import annotations
 
-import math
-from typing import Optional, Tuple
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -27,6 +25,7 @@ __all__ = ["repartition_join"]
 def repartition_join(s_keys: np.ndarray, s_rows: np.ndarray,
                      t_keys: np.ndarray, t_rows: np.ndarray,
                      t_machines: int, out_capacity: int,
+                     kernel_backend: Optional[str] = None,
                      substrate: Optional[Substrate] = None):
     """Hash-partition both tables by key; join per machine."""
     t = t_machines
@@ -55,7 +54,8 @@ def repartition_join(s_keys: np.ndarray, s_rows: np.ndarray,
         with tape.phase("shuffle"):
             received = jnp.sum(a != MASKED_KEY) + jnp.sum(c != MASKED_KEY)
             tape.record(sent=received, received=received)
-            return local_equijoin(a, b, c, d, out_capacity)
+            return local_equijoin(a, b, c, d, out_capacity,
+                                  kernel_backend=kernel_backend)
 
     out, tape = substrate.run(body, sk, sr, tk, tr)
     counts = np.asarray(out.count).reshape(-1)

@@ -30,6 +30,7 @@ from jax import lax
 from repro.cluster.capacity import CapacityPolicy, run_with_capacity
 from repro.cluster.collectives import CollectiveTape
 from repro.cluster.substrate import Substrate, VmapSubstrate
+from repro.kernels import ops
 
 from .boundaries import boundaries_jax, equidepth_samples
 from .exchange import ExchangeResult, exchange_sorted_segments
@@ -56,9 +57,17 @@ def smms_shard(x_local: jnp.ndarray, *, axis_name: str, t: int, r: int = 2,
                cap_factor: Optional[float] = None,
                values: Optional[jnp.ndarray] = None,
                backend: str = "static",
-               local_sort=jnp.sort,
+               local_sort=None,
+               kernel_backend: Optional[str] = None,
                tape: Optional[CollectiveTape] = None) -> SortResult:
-    """Per-device SMMS body.  x_local: (m,) this machine's objects."""
+    """Per-device SMMS body.  x_local: (m,) this machine's objects.
+
+    kernel_backend picks the implementation of every sort/partition/merge
+    hot loop ("pallas" = the Pallas kernels via repro.kernels.ops,
+    "reference" = jnp, None = ops.DEFAULT_BACKEND); results are bitwise
+    identical either way.  An explicit ``local_sort`` callable overrides
+    the Round-1 keys-only sort (test hook).
+    """
     m = x_local.shape[0]
     n = m * t
     s = r * t
@@ -70,11 +79,11 @@ def smms_shard(x_local: jnp.ndarray, *, axis_name: str, t: int, r: int = 2,
     # -- Round 1: local sort + equi-depth samples ---------------------------
     with tape.phase("round1->2 samples"):
         if values is not None:
-            order = jnp.argsort(x_local)
-            xs = x_local[order]
-            values = values[order]
-        else:
+            xs, values = ops.sort_kv(x_local, values, backend=kernel_backend)
+        elif local_sort is not None:
             xs = local_sort(x_local)
+        else:
+            xs = ops.sort(x_local, backend=kernel_backend)
         lam = equidepth_samples(xs, s)                    # (s+1,)
         lam_all = tape.all_gather(lam, axis_name)         # (t, s+1)
 
@@ -86,7 +95,8 @@ def smms_shard(x_local: jnp.ndarray, *, axis_name: str, t: int, r: int = 2,
     with tape.phase("round3 shuffle"):
         ex: ExchangeResult = exchange_sorted_segments(
             xs, b[1:-1], axis_name=axis_name, t=t, cap_factor=cap_factor,
-            values=values, backend=backend, merge=True, tape=tape)
+            values=values, backend=backend, merge=True,
+            kernel_backend=kernel_backend, tape=tape)
     return SortResult(ex.keys, ex.values, ex.count, ex.sent, ex.dropped, b)
 
 
@@ -98,6 +108,7 @@ def smms_sort(x: jnp.ndarray, r: int = 2,
               cap_factor: Optional[float] = None,
               values: Optional[jnp.ndarray] = None,
               backend: str = "static",
+              kernel_backend: Optional[str] = None,
               substrate: Optional[Substrate] = None,
               policy: Optional[CapacityPolicy] = None):
     """Sort x of shape (t, m) across t machines on the given substrate.
@@ -116,7 +127,8 @@ def smms_sort(x: jnp.ndarray, r: int = 2,
     def attempt(factor):
         body = functools.partial(
             smms_shard, axis_name=substrate.axis_name, t=t, r=r,
-            cap_factor=factor, backend=backend)
+            cap_factor=factor, backend=backend,
+            kernel_backend=kernel_backend)
         if values is not None:
             run_body = lambda xl, vl, tape: body(xl, values=vl, tape=tape)
             res, tape = substrate.run(run_body, x, values)

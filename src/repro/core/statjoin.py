@@ -187,6 +187,7 @@ def statjoin(s_keys: np.ndarray, s_rows: np.ndarray,
              t_keys: np.ndarray, t_rows: np.ndarray,
              t_machines: int, out_cap_factor: float = 1.05,
              stats: Optional[JoinStatistics] = None,
+             kernel_backend: Optional[str] = None,
              substrate: Optional[Substrate] = None,
              out_capacity: Optional[int] = None):
     """Host wrapper: plan on statistics, execute per machine on a substrate.
@@ -238,7 +239,8 @@ def statjoin(s_keys: np.ndarray, s_rows: np.ndarray,
         with tape.phase("round3 route"):
             received = (jnp.sum(a != MASKED_KEY) + jnp.sum(c != MASKED_KEY))
             tape.record(sent=n_in / t, received=received)
-            return local_equijoin(a, b, c, d, capacity)
+            return local_equijoin(a, b, c, d, capacity,
+                                  kernel_backend=kernel_backend)
 
     out, tape = substrate.run(body, sk, sr, tk, tr)
 

@@ -32,6 +32,7 @@ from jax import lax
 from repro.cluster.capacity import CapacityPolicy, run_with_capacity
 from repro.cluster.collectives import CollectiveTape
 from repro.cluster.substrate import Substrate, VmapSubstrate
+from repro.kernels import ops
 
 from .exchange import exchange_sorted_segments
 from .sampling import algorithm_s, terasort_sample_count
@@ -45,6 +46,7 @@ def terasort_shard(x_local: jnp.ndarray, rng: jax.Array, *, axis_name: str,
                    t: int, q: int, cap_factor: float = 5.5,
                    values: Optional[jnp.ndarray] = None,
                    backend: str = "static",
+                   kernel_backend: Optional[str] = None,
                    tape: Optional[CollectiveTape] = None) -> SortResult:
     """Per-device Terasort body.  x_local: (m,), rng: per-device PRNG key."""
     m = x_local.shape[0]
@@ -66,13 +68,13 @@ def terasort_shard(x_local: jnp.ndarray, rng: jax.Array, *, axis_name: str,
     # -- Round 3: shuffle + sort --------------------------------------------
     with tape.phase("round3 shuffle"):
         if values is not None:
-            order = jnp.argsort(x_local)
-            xs, values = x_local[order], values[order]
+            xs, values = ops.sort_kv(x_local, values, backend=kernel_backend)
         else:
-            xs = jnp.sort(x_local)
+            xs = ops.sort(x_local, backend=kernel_backend)
         ex = exchange_sorted_segments(xs, interior, axis_name=axis_name, t=t,
                                       cap_factor=cap_factor, values=values,
-                                      backend=backend, merge=True, tape=tape)
+                                      backend=backend, merge=True,
+                                      kernel_backend=kernel_backend, tape=tape)
     b = jnp.concatenate([all_samples[:1], interior, all_samples[-1:]])
     return SortResult(ex.keys, ex.values, ex.count, ex.sent, ex.dropped, b)
 
@@ -80,6 +82,7 @@ def terasort_shard(x_local: jnp.ndarray, rng: jax.Array, *, axis_name: str,
 def terasort_sort(x: jnp.ndarray, seed: int = 0,
                   cap_factor: Optional[float] = None,
                   backend: str = "static",
+                  kernel_backend: Optional[str] = None,
                   substrate: Optional[Substrate] = None,
                   policy: Optional[CapacityPolicy] = None):
     """Host wrapper over t machines on a substrate.  x: (t, m)."""
@@ -98,7 +101,8 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
         def body(xl, kl, tape):
             return terasort_shard(xl, kl, axis_name=substrate.axis_name,
                                   t=t, q=q, cap_factor=factor,
-                                  backend=backend, tape=tape)
+                                  backend=backend,
+                                  kernel_backend=kernel_backend, tape=tape)
         res, tape = substrate.run(body, x, rngs)
         return (res, tape), int(np.asarray(res.dropped).reshape(-1)[0])
 

@@ -1,9 +1,11 @@
 """Pallas TPU kernels for the compute hot spots (validated in interpret
 mode on CPU; Mosaic-compiled on real TPUs via ops.INTERPRET = False)."""
 from . import ops, ref
-from .bitonic import bitonic_sort, bitonic_sort_kv
-from .bucketize import bucketize_histogram
+from .bitonic import (bitonic_sort, bitonic_sort_kv, merge_sorted_rows,
+                      sort_sentinel)
+from .bucketize import bucketize_histogram, searchsorted
 from .flash_attention import flash_attention
 
 __all__ = ["ops", "ref", "bitonic_sort", "bitonic_sort_kv",
-           "bucketize_histogram", "flash_attention"]
+           "merge_sorted_rows", "sort_sentinel", "bucketize_histogram",
+           "searchsorted", "flash_attention"]

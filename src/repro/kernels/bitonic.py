@@ -1,4 +1,4 @@
-"""Bitonic sort network as a Pallas TPU kernel — SMMS Round-1 local sort.
+"""Bitonic sort / merge networks as Pallas TPU kernels — the SMMS hot path.
 
 The paper's hot spot is the per-machine sort (O((n/t) log(n/t)) of the
 total cost).  On TPU the comparison network must be *vectorial*: a scalar
@@ -13,9 +13,26 @@ reshape (rows, n/(2d), 2, d) so no gathers are needed — Mosaic lowers the
 (2, d) split into sublane/lane rotations.  The direction bit of stage k
 depends only on the run index (position >> (k+1)), a broadcast compare.
 
-Cost: n log^2 n compare-exchanges; for the m = n/t <= 64k row blocks SMMS
-uses, the whole row fits VMEM (64k f32 = 256 KiB << 16 MiB) and the sort
-is memory-light (one HBM read + write per row).
+Three kernels:
+
+* ``bitonic_sort``     — full row sort, n log^2 n compare-exchanges.
+* ``bitonic_sort_kv``  — pair sort, keys primary / values tie-break
+  (lexicographic).  Feeding ``arange(n)`` as the value channel makes the
+  result *bitwise equal to a stable argsort* — how the dispatch layer in
+  ``repro.kernels.ops`` routes payload-carrying sorts.
+* ``merge_sorted_rows`` — fused merge of t already-sorted rows (the
+  Round-3 receive buffer: every sender's segment lands sorted).  log t
+  pairwise bitonic-merge levels, n log n total — asymptotically cheaper
+  than re-sorting the receive buffer from scratch.
+
+Cost: for the m = n/t <= 64k row blocks SMMS uses, the whole row fits
+VMEM (64k f32 = 256 KiB << 16 MiB) and each kernel is memory-light (one
+HBM read + write per row).
+
+Sentinel discipline: rows are padded to a power of two with the dtype's
+``sort sentinel`` — +inf for floats, iinfo.max for ints — so padding
+sorts strictly last (or ties with real sentinels, which is harmless: the
+first n output slots are still exactly the sorted real data).
 """
 from __future__ import annotations
 
@@ -26,24 +43,65 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["bitonic_sort", "bitonic_sort_kv", "sort_network_block"]
+__all__ = [
+    "bitonic_sort",
+    "bitonic_sort_kv",
+    "merge_sorted_rows",
+    "merge_sorted_rows_argsort",
+    "sort_network_block",
+    "merge_network_block",
+    "sort_sentinel",
+]
 
 
-def _compare_exchange(x, d: int, k: int, descending_runs: jnp.ndarray):
-    """One substage: exchange partners at distance d inside runs of 2^(k+1).
+def sort_sentinel(dtype) -> jnp.ndarray:
+    """The value that sorts last for ``dtype``: +inf (floats), max (ints)."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+
+
+def _compare_exchange(x, d: int, descending_runs: jnp.ndarray):
+    """One substage: exchange partners at distance d.
 
     x: (rows, n). descending_runs: (n/(2d),) bool — per partner-group
-    direction (precomputed for this (k, d))."""
+    direction (precomputed for this substage).  Swap-based rather than
+    min/max so a NaN never propagates to its partner: an unordered pair
+    simply doesn't swap, which preserves the input multiset (NaN keys
+    are outside the bitwise-parity contract but must not corrupt their
+    neighbours)."""
     rows, n = x.shape
     xr = x.reshape(rows, n // (2 * d), 2, d)
     a = xr[:, :, 0, :]
     b = xr[:, :, 1, :]
-    mn = jnp.minimum(a, b)
-    mx = jnp.maximum(a, b)
-    down = descending_runs[None, :, None]
-    lo = jnp.where(down, mx, mn)
-    hi = jnp.where(down, mn, mx)
+    swap = (a > b) != descending_runs[None, :, None]
+    lo = jnp.where(swap, b, a)
+    hi = jnp.where(swap, a, b)
     return jnp.stack([lo, hi], axis=2).reshape(rows, n)
+
+
+def _compare_exchange_kv(keys, vals, d: int, descending_runs):
+    """Lexicographic (key, value) compare-exchange at distance d."""
+    rows, n = keys.shape
+    kr = keys.reshape(rows, n // (2 * d), 2, d)
+    vr = vals.reshape(rows, n // (2 * d), 2, d)
+    ka, kb = kr[:, :, 0, :], kr[:, :, 1, :]
+    va, vb = vr[:, :, 0, :], vr[:, :, 1, :]
+    gt = (ka > kb) | ((ka == kb) & (va > vb))   # pair a sorts after pair b
+    swap = gt != descending_runs[None, :, None]
+    klo = jnp.where(swap, kb, ka)
+    khi = jnp.where(swap, ka, kb)
+    vlo = jnp.where(swap, vb, va)
+    vhi = jnp.where(swap, va, vb)
+    return (jnp.stack([klo, khi], axis=2).reshape(rows, n),
+            jnp.stack([vlo, vhi], axis=2).reshape(rows, n))
+
+
+def _directions(n: int, d: int, k: int) -> jnp.ndarray:
+    """Per partner-group descending bit for stage k, distance d."""
+    group = jnp.arange(n // (2 * d)) * (2 * d)      # first elt of each group
+    return ((group >> (k + 1)) & 1) == 1
 
 
 def sort_network_block(x: jnp.ndarray) -> jnp.ndarray:
@@ -58,9 +116,30 @@ def sort_network_block(x: jnp.ndarray) -> jnp.ndarray:
     for k in range(logn):               # runs of length 2^(k+1) get sorted
         for j in range(k, -1, -1):      # exchange distance 2^j
             d = 1 << j
-            group = jnp.arange(n // (2 * d)) * (2 * d)  # first elt of group
-            down = ((group >> (k + 1)) & 1) == 1        # direction per run
-            x = _compare_exchange(x, d, k, down)
+            x = _compare_exchange(x, d, _directions(n, d, k))
+    return x
+
+
+def merge_network_block(x: jnp.ndarray, run: int) -> jnp.ndarray:
+    """Merge rows of x whose length-``run`` chunks are each sorted ascending.
+
+    x: (rows, n); n and run powers of 2, run divides n.  log2(n/run)
+    pairwise bitonic-merge levels — n log n work instead of the full
+    network's n log^2 n.  Pure jnp, usable inside a kernel body.
+    """
+    rows, n = x.shape
+    lvl = run
+    while lvl < n:
+        xr = x.reshape(rows, n // (2 * lvl), 2, lvl)
+        a = xr[:, :, 0, :]
+        b = xr[:, :, 1, :][:, :, ::-1]          # reverse -> bitonic sequence
+        y = jnp.concatenate([a, b], axis=-1).reshape(rows, n)
+        d = lvl
+        while d >= 1:                            # all-ascending merge stages
+            y = _compare_exchange(y, d, jnp.zeros(n // (2 * d), bool))
+            d //= 2
+        x = y
+        lvl *= 2
     return x
 
 
@@ -76,19 +155,34 @@ def _sort_kv_kernel(k_ref, v_ref, ok_ref, ov_ref):
     for k in range(logn):
         for j in range(k, -1, -1):
             d = 1 << j
-            group = jnp.arange(n // (2 * d)) * (2 * d)
-            down = (((group >> (k + 1)) & 1) == 1)[None, :, None]
-            kr = keys.reshape(rows, n // (2 * d), 2, d)
-            vr = vals.reshape(rows, n // (2 * d), 2, d)
-            ka, kb = kr[:, :, 0, :], kr[:, :, 1, :]
-            va, vb = vr[:, :, 0, :], vr[:, :, 1, :]
-            swap = (ka > kb) != down    # branch-free compare-exchange
-            klo = jnp.where(swap, kb, ka)
-            khi = jnp.where(swap, ka, kb)
-            vlo = jnp.where(swap, vb, va)
-            vhi = jnp.where(swap, va, vb)
-            keys = jnp.stack([klo, khi], axis=2).reshape(rows, n)
-            vals = jnp.stack([vlo, vhi], axis=2).reshape(rows, n)
+            keys, vals = _compare_exchange_kv(keys, vals, d,
+                                              _directions(n, d, k))
+    ok_ref[...] = keys
+    ov_ref[...] = vals
+
+
+def _merge_kernel(x_ref, o_ref, *, run: int):
+    o_ref[...] = merge_network_block(x_ref[...], run)
+
+
+def _merge_kv_kernel(k_ref, v_ref, ok_ref, ov_ref, *, run: int):
+    keys = k_ref[...]
+    vals = v_ref[...]
+    rows, n = keys.shape
+    lvl = run
+    while lvl < n:
+        kr = keys.reshape(rows, n // (2 * lvl), 2, lvl)
+        vr = vals.reshape(rows, n // (2 * lvl), 2, lvl)
+        keys = jnp.concatenate([kr[:, :, 0, :], kr[:, :, 1, :][:, :, ::-1]],
+                               axis=-1).reshape(rows, n)
+        vals = jnp.concatenate([vr[:, :, 0, :], vr[:, :, 1, :][:, :, ::-1]],
+                               axis=-1).reshape(rows, n)
+        d = lvl
+        while d >= 1:
+            keys, vals = _compare_exchange_kv(
+                keys, vals, d, jnp.zeros(n // (2 * d), bool))
+            d //= 2
+        lvl *= 2
     ok_ref[...] = keys
     ov_ref[...] = vals
 
@@ -102,13 +196,14 @@ def bitonic_sort(x: jnp.ndarray, block_rows: int = 8,
                  interpret: bool = True) -> jnp.ndarray:
     """Row-wise ascending sort via the Pallas bitonic kernel.
 
-    x: (rows, n).  n is padded to a power of 2 with +inf (stripped after).
-    interpret=True validates on CPU; on TPU pass interpret=False.
+    x: (rows, n).  n is padded to a power of 2 with the dtype's sort
+    sentinel (stripped after).  interpret=True validates on CPU; on TPU
+    pass interpret=False.
     """
     rows, n = x.shape
     np2 = max(2, _next_pow2(n))
     rpad = (-rows) % block_rows
-    big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
+    big = sort_sentinel(x.dtype)
     xp = jnp.pad(x, ((0, rpad), (0, np2 - n)), constant_values=big)
     out = pl.pallas_call(
         _sort_kernel,
@@ -124,13 +219,18 @@ def bitonic_sort(x: jnp.ndarray, block_rows: int = 8,
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def bitonic_sort_kv(keys: jnp.ndarray, values: jnp.ndarray,
                     block_rows: int = 8, interpret: bool = True):
-    """Row-wise key-value sort. keys/values: (rows, n), same shape."""
+    """Row-wise (key, value) pair sort, values breaking key ties.
+
+    keys/values: (rows, n), same shape.  Sorting (keys, arange(n)) yields
+    the stable argsort permutation in the value channel.
+    """
     rows, n = keys.shape
     np2 = max(2, _next_pow2(n))
     rpad = (-rows) % block_rows
-    big = jnp.asarray(jnp.finfo(keys.dtype).max, keys.dtype)
-    kp = jnp.pad(keys, ((0, rpad), (0, np2 - n)), constant_values=big)
-    vp = jnp.pad(values, ((0, rpad), (0, np2 - n)))
+    kp = jnp.pad(keys, ((0, rpad), (0, np2 - n)),
+                 constant_values=sort_sentinel(keys.dtype))
+    vp = jnp.pad(values, ((0, rpad), (0, np2 - n)),
+                 constant_values=sort_sentinel(values.dtype))
     spec = pl.BlockSpec((block_rows, np2), lambda i: (i, 0))
     ok, ov = pl.pallas_call(
         _sort_kv_kernel,
@@ -142,3 +242,60 @@ def bitonic_sort_kv(keys: jnp.ndarray, values: jnp.ndarray,
         interpret=interpret,
     )(kp, vp)
     return ok[:rows, :n], ov[:rows, :n]
+
+
+def _pad_sorted_rows(x: jnp.ndarray, sentinel) -> jnp.ndarray:
+    """Pad (t, c) sorted rows to (pow2, pow2) — rows stay sorted."""
+    t, c = x.shape
+    tp2 = max(1, _next_pow2(t))
+    cp2 = max(2, _next_pow2(c))
+    return jnp.pad(x, ((0, tp2 - t), (0, cp2 - c)), constant_values=sentinel)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_sorted_rows(x: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Merge t sorted rows into one sorted vector.  x: (t, c), rows asc.
+
+    Returns (t*c,) — bitwise equal to ``jnp.sort(x.reshape(-1))``.
+    """
+    t, c = x.shape
+    xp = _pad_sorted_rows(x, sort_sentinel(x.dtype))
+    tp2, cp2 = xp.shape
+    flat = xp.reshape(1, tp2 * cp2)
+    out = pl.pallas_call(
+        functools.partial(_merge_kernel, run=cp2),
+        grid=(1,),
+        in_specs=[pl.BlockSpec(flat.shape, lambda i: (0, 0))],
+        out_specs=pl.BlockSpec(flat.shape, lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, x.dtype),
+        interpret=interpret,
+    )(flat)
+    return out[0, :t * c]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_sorted_rows_argsort(keys: jnp.ndarray, interpret: bool = True):
+    """Merge t sorted rows carrying the stable permutation.  keys: (t, c).
+
+    Returns (merged_keys (t*c,), order (t*c,) int32) where ``order`` is
+    the flat index into ``keys.reshape(-1)`` — bitwise equal to a stable
+    ``jnp.argsort(keys.reshape(-1))`` (ties resolve by buffer position).
+    """
+    t, c = keys.shape
+    kp = _pad_sorted_rows(keys, sort_sentinel(keys.dtype))
+    tp2, cp2 = kp.shape
+    iota = jnp.arange(t * c, dtype=jnp.int32).reshape(t, c)
+    ip = _pad_sorted_rows(iota, sort_sentinel(jnp.int32))
+    kflat = kp.reshape(1, tp2 * cp2)
+    iflat = ip.reshape(1, tp2 * cp2)
+    spec = pl.BlockSpec(kflat.shape, lambda i: (0, 0))
+    ok, oi = pl.pallas_call(
+        functools.partial(_merge_kv_kernel, run=cp2),
+        grid=(1,),
+        in_specs=[spec, spec],
+        out_specs=(spec, spec),
+        out_shape=(jax.ShapeDtypeStruct(kflat.shape, keys.dtype),
+                   jax.ShapeDtypeStruct(iflat.shape, jnp.int32)),
+        interpret=interpret,
+    )(kflat, iflat)
+    return ok[0, :t * c], oi[0, :t * c]

@@ -7,8 +7,15 @@ histogram pass (two HBM sweeps over the keys).  This kernel fuses both:
 one sweep, bucket ids and per-block partial counts come out together; the
 caller sums partial counts over blocks (a (blocks, t) reduction, tiny).
 
-Binary search is branch-free: log2(t) broadcast compare/select steps over
-the whole key block, with the boundary vector resident in VMEM.
+Binary search is branch-free: ceil(log2(n_bounds+1)) broadcast
+compare/select steps over the whole key block, with the boundary vector
+resident in VMEM.  The boundary vector is padded to a power of two with
+the dtype's sort sentinel so the block shape is lane-friendly regardless
+of t; the search itself runs over the *real* length with a ``lo < hi``
+guard, so neither the padding nor duplicate/repeated boundaries (heavy-
+hitter keys collapsing several quantiles onto one value) can push the
+result out of range.  The same search backs a plain ``searchsorted``
+kernel (both sides) used by the local-join and partition hot paths.
 """
 from __future__ import annotations
 
@@ -19,31 +26,64 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["bucketize_histogram"]
+from .bitonic import _next_pow2, sort_sentinel
+
+__all__ = ["bucketize_histogram", "searchsorted"]
+
+
+def _bin_search_block(keys: jnp.ndarray, bounds: jnp.ndarray, n_bounds: int,
+                      side: str) -> jnp.ndarray:
+    """#bounds <= key (side='right') or #bounds < key (side='left').
+
+    keys: (1, block_n); bounds: (1, P) with P >= n_bounds (padding past
+    n_bounds is never read).  Pure jnp, usable inside a kernel body.
+    Branch-free binary search over the n_bounds+1 possible answers; the
+    ``lo < hi`` guard makes the fixed iteration count safe even when the
+    interval closes early (duplicate boundaries) and keeps ``lo`` in
+    [0, n_bounds] by construction.
+    """
+    lo = jnp.zeros(keys.shape, jnp.int32)
+    hi = jnp.full(keys.shape, n_bounds, jnp.int32)
+    steps = max(1, math.ceil(math.log2(n_bounds + 1)))
+    for _ in range(steps):
+        mid = jnp.minimum((lo + hi) // 2, n_bounds - 1)
+        b_mid = jnp.take_along_axis(bounds, mid, axis=-1)
+        if side == "right":
+            pred = b_mid <= keys
+        else:
+            pred = b_mid < keys
+        go_right = pred & (lo < hi)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+        hi = jnp.maximum(hi, lo)   # keep lo <= hi when the interval closed
+    return lo
 
 
 def _bucketize_kernel(keys_ref, bounds_ref, ids_ref, counts_ref, *, t: int,
                       n_bounds: int):
     keys = keys_ref[...]                   # (1, block_n)
-    bounds = bounds_ref[...]               # (1, n_bounds) padded to pow2-1
-    block_n = keys.shape[-1]
-
-    # branch-free binary search: id = #bounds <= key  (side='right')
-    lo = jnp.zeros(keys.shape, jnp.int32)
-    hi = jnp.full(keys.shape, n_bounds, jnp.int32)
-    steps = max(1, math.ceil(math.log2(n_bounds + 1)))
-    for _ in range(steps):
-        mid = (lo + hi) // 2
-        b_mid = jnp.take_along_axis(bounds, mid, axis=-1)
-        go_right = b_mid <= keys
-        lo = jnp.where(go_right, mid + 1, lo)
-        hi = jnp.where(go_right, hi, mid)
-    ids = lo                               # in [0, t-1] given real bounds
-    ids_ref[...] = ids
+    bounds = bounds_ref[...]               # (1, P) sentinel-padded
+    ids = _bin_search_block(keys, bounds, n_bounds, "right")
+    ids_ref[...] = ids                     # in [0, n_bounds] = [0, t-1]
 
     # per-block histogram: one-hot accumulate (block_n, t) -> (1, t)
     onehot = (ids[0, :, None] == jnp.arange(t)[None, :]).astype(jnp.int32)
     counts_ref[...] = jnp.sum(onehot, axis=0, keepdims=True)
+
+
+def _searchsorted_kernel(q_ref, bounds_ref, ids_ref, *, n_bounds: int,
+                         side: str):
+    ids_ref[...] = _bin_search_block(q_ref[...], bounds_ref[...], n_bounds,
+                                     side)
+
+
+def _pad_bounds(boundaries: jnp.ndarray):
+    """(n_bounds,) -> (1, P) with P a power of two, sentinel-padded."""
+    n_bounds = boundaries.shape[0]
+    p = max(2, _next_pow2(n_bounds))
+    bp = jnp.pad(boundaries, (0, p - n_bounds),
+                 constant_values=sort_sentinel(boundaries.dtype))
+    return bp[None, :]
 
 
 @functools.partial(jax.jit, static_argnames=("t", "block_n", "interpret"))
@@ -52,20 +92,25 @@ def bucketize_histogram(keys: jnp.ndarray, boundaries: jnp.ndarray, t: int,
     """keys: (n,), boundaries: (t-1,) ascending. Returns (ids (n,), counts (t,)).
 
     Buckets are [b_k, b_{k+1}): id = searchsorted(boundaries, key, 'right').
+    Duplicate boundaries (heavy hitters) leave their middle buckets empty,
+    exactly as the jnp reference does; t need not be a power of two.
     """
     n = keys.shape[0]
     n_bounds = boundaries.shape[0]
+    if n_bounds == 0:                       # t == 1: everything in bucket 0
+        return (jnp.zeros((n,), jnp.int32),
+                jnp.full((1,), n, jnp.int32))
     pad = (-n) % block_n
-    big = jnp.asarray(jnp.finfo(keys.dtype).max, keys.dtype)
-    kp = jnp.pad(keys, (0, pad), constant_values=big)[None, :]  # (1, N)
-    bp = boundaries[None, :]
+    kp = jnp.pad(keys, (0, pad),
+                 constant_values=sort_sentinel(keys.dtype))[None, :]
+    bp = _pad_bounds(boundaries)
     blocks = kp.shape[1] // block_n
 
     ids, partial = pl.pallas_call(
         functools.partial(_bucketize_kernel, t=t, n_bounds=n_bounds),
         grid=(blocks,),
         in_specs=[pl.BlockSpec((1, block_n), lambda i: (0, i)),
-                  pl.BlockSpec((1, n_bounds), lambda i: (0, 0))],
+                  pl.BlockSpec((1, bp.shape[1]), lambda i: (0, 0))],
         out_specs=(pl.BlockSpec((1, block_n), lambda i: (0, i)),
                    pl.BlockSpec((1, t), lambda i: (i, 0))),
         out_shape=(jax.ShapeDtypeStruct(kp.shape, jnp.int32),
@@ -74,6 +119,36 @@ def bucketize_histogram(keys: jnp.ndarray, boundaries: jnp.ndarray, t: int,
     )(kp, bp)
     counts = jnp.sum(partial, axis=0)
     if pad:
-        # padded keys (=dtype max) land in the last bucket; remove them
+        # padded keys (= sort sentinel) land in the last bucket; remove them
         counts = counts.at[t - 1].add(-pad)
     return ids[0, :n], counts
+
+
+@functools.partial(jax.jit, static_argnames=("side", "block_n", "interpret"))
+def searchsorted(sorted_arr: jnp.ndarray, queries: jnp.ndarray,
+                 side: str = "left", block_n: int = 1024,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Kernel-backed ``jnp.searchsorted(sorted_arr, queries, side)``.
+
+    sorted_arr: (n,) ascending (duplicates fine); queries: (q,).  The
+    sorted array lives in VMEM whole; queries stream through in blocks.
+    """
+    nq = queries.shape[0]
+    n = sorted_arr.shape[0]
+    if n == 0 or nq == 0:
+        return jnp.zeros((nq,), jnp.int32)
+    pad = (-nq) % block_n
+    qp = jnp.pad(queries, (0, pad),
+                 constant_values=sort_sentinel(queries.dtype))[None, :]
+    bp = _pad_bounds(sorted_arr)
+    blocks = qp.shape[1] // block_n
+    ids = pl.pallas_call(
+        functools.partial(_searchsorted_kernel, n_bounds=n, side=side),
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((1, block_n), lambda i: (0, i)),
+                  pl.BlockSpec((1, bp.shape[1]), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, jnp.int32),
+        interpret=interpret,
+    )(qp, bp)
+    return ids[0, :nq]

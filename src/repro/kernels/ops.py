@@ -1,12 +1,44 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Shape-aware kernel dispatch — the switch between Pallas and jnp paths.
+
+This module is the single entry the cluster hot loops call (`ops.sort`,
+`ops.sort_kv`, `ops.searchsorted`, `ops.bucketize_histogram`,
+`ops.merge_sorted_rows[_kv]`).  Each call picks one of two backends:
+
+* ``"reference"`` — the plain jnp implementation (``jnp.sort``,
+  ``jnp.argsort``, ``jnp.searchsorted``).  Always available, always the
+  semantic contract.
+* ``"pallas"``    — the purpose-built kernels in ``bitonic.py`` /
+  ``bucketize.py``, with the dispatch layer handling pad-to-pow2 with
+  sort sentinels, key/index packing for stable payload sorts, dtype and
+  shape eligibility checks, and **automatic fallback** to the reference
+  for anything a kernel cannot take (exotic dtypes, >2D operands, rows
+  too long for VMEM residency).
+
+Every kernel-path result is bitwise-identical to the reference path —
+payload-carrying sorts route through a (key, arange) lexicographic pair
+sort, which reproduces the *stable* argsort permutation exactly; the
+differential suite in ``tests/test_kernel_dispatch.py`` pins this.
+The parity contract covers NaN-free keys (the cluster pipeline's
+standing precondition: keys strictly below the PAD sentinel).  NaN keys
+cannot be ordered by a comparison network — the kernels then return a
+permutation of the input (swap-based compare-exchange never fabricates
+or duplicates values) while jnp.sort moves NaNs last.
+
+``backend=None`` resolves to the module default (``DEFAULT_BACKEND``,
+seeded from the ``REPRO_KERNEL_BACKEND`` env var, ``"reference"`` when
+unset) so a whole test run can be flipped to the kernel path without
+touching call sites.  Dispatch decisions are counted in
+``DISPATCH_COUNTS`` (one tick per *trace*, not per execution) so tests
+can prove which path actually ran.
 
 On this CPU container the kernels run with interpret=True (the kernel
 body executes in Python/XLA on CPU — correctness path).  On a real TPU
-runtime set ``repro.kernels.ops.INTERPRET = False`` (or the
-REPRO_PALLAS_INTERPRET env var) and the same calls compile with Mosaic.
+runtime set ``repro.kernels.ops.INTERPRET = False`` (or export
+``REPRO_PALLAS_INTERPRET=0``) and the same calls compile with Mosaic.
 """
 from __future__ import annotations
 
+import collections
 import os
 
 import jax
@@ -16,29 +48,191 @@ from . import bitonic, bucketize, flash_attention as fa
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
-__all__ = ["sort", "sort_kv", "bucketize_histogram", "flash_attention",
-           "INTERPRET"]
+BACKENDS = ("reference", "pallas")
+DEFAULT_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "reference")
+
+# Largest padded lane count a VMEM-resident kernel row may occupy (64k f32
+# = 256 KiB, comfortably under the ~16 MiB VMEM budget with headroom for
+# double buffering).  Longer rows fall back to the reference path.
+MAX_KERNEL_LANES = 1 << 16
+
+# (op, path) -> number of dispatch decisions, counted at trace time.
+DISPATCH_COUNTS: collections.Counter = collections.Counter()
+
+_KERNEL_KEY_DTYPES = frozenset(
+    jnp.dtype(d) for d in (jnp.float32, jnp.bfloat16, jnp.int32))
+
+__all__ = [
+    "sort", "sort_kv", "searchsorted", "bucketize_histogram",
+    "merge_sorted_rows", "merge_sorted_rows_kv", "flash_attention",
+    "resolve_backend", "reset_dispatch_counts",
+    "INTERPRET", "BACKENDS", "DEFAULT_BACKEND", "DISPATCH_COUNTS",
+    "MAX_KERNEL_LANES",
+]
 
 
-def sort(x: jnp.ndarray, block_rows: int = 8) -> jnp.ndarray:
-    """Row-wise ascending sort (bitonic network kernel)."""
-    return bitonic.bitonic_sort(x, block_rows=block_rows,
-                                interpret=INTERPRET)
+def resolve_backend(backend) -> str:
+    """None -> module default; otherwise validate the explicit choice."""
+    b = DEFAULT_BACKEND if backend is None else backend
+    if b not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {b!r}; "
+                         f"expected one of {BACKENDS}")
+    return b
 
 
-def sort_kv(keys: jnp.ndarray, values: jnp.ndarray, block_rows: int = 8):
-    """Row-wise key-value sort (bitonic network kernel)."""
-    return bitonic.bitonic_sort_kv(keys, values, block_rows=block_rows,
+def reset_dispatch_counts() -> None:
+    DISPATCH_COUNTS.clear()
+
+
+def _tick(op: str, path: str) -> None:
+    DISPATCH_COUNTS[(op, path)] += 1
+
+
+_next_pow2 = bitonic._next_pow2
+
+
+def _key_dtype_ok(x) -> bool:
+    return jnp.dtype(x.dtype) in _KERNEL_KEY_DTYPES
+
+
+def _lanes_ok(n: int) -> bool:
+    return 1 <= _next_pow2(n) <= MAX_KERNEL_LANES
+
+
+# ---------------------------------------------------------------------------
+# sort / sort_kv
+# ---------------------------------------------------------------------------
+
+def sort(x: jnp.ndarray, *, backend=None, block_rows: int = 8) -> jnp.ndarray:
+    """Ascending sort along the last axis.  x: (n,) or (rows, n)."""
+    b = resolve_backend(backend)
+    if (b == "pallas" and x.ndim in (1, 2) and _key_dtype_ok(x)
+            and _lanes_ok(x.shape[-1])):
+        _tick("sort", "pallas")
+        x2 = x[None, :] if x.ndim == 1 else x
+        out = bitonic.bitonic_sort(x2, block_rows=min(block_rows, x2.shape[0]),
                                    interpret=INTERPRET)
+        return out[0] if x.ndim == 1 else out
+    _tick("sort", "reference")
+    return jnp.sort(x, axis=-1)
+
+
+def sort_kv(keys: jnp.ndarray, values, *, backend=None, block_rows: int = 8):
+    """Stable sort of (keys, values) by key: returns (sorted, permuted).
+
+    keys: (n,); values: any array with leading dim n (extra trailing dims
+    ride along).  Both backends realize ``order = jnp.argsort(keys)``
+    (stable) exactly: the kernel path pair-sorts (key, arange) with a
+    lexicographic network, so key ties keep input order bitwise.
+    """
+    b = resolve_backend(backend)
+    if (b == "pallas" and keys.ndim == 1 and _key_dtype_ok(keys)
+            and _lanes_ok(keys.shape[0]) and values.shape[:1] == keys.shape):
+        _tick("sort_kv", "pallas")
+        n = keys.shape[0]
+        iota = jnp.arange(n, dtype=jnp.int32)
+        ks, order = bitonic.bitonic_sort_kv(keys[None, :], iota[None, :],
+                                            block_rows=1,
+                                            interpret=INTERPRET)
+        return ks[0], values[order[0]]
+    _tick("sort_kv", "reference")
+    order = jnp.argsort(keys, axis=-1)
+    if keys.ndim == 1:
+        return keys[order], values[order]
+    return (jnp.take_along_axis(keys, order, axis=-1),
+            jnp.take_along_axis(values, order, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# searchsorted / bucketize
+# ---------------------------------------------------------------------------
+
+def searchsorted(sorted_arr: jnp.ndarray, queries: jnp.ndarray, *,
+                 side: str = "left", backend=None,
+                 block_n: int = 1024) -> jnp.ndarray:
+    """``jnp.searchsorted(sorted_arr, queries, side)`` with kernel dispatch."""
+    if side not in ("left", "right"):
+        raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+    b = resolve_backend(backend)
+    if (b == "pallas" and sorted_arr.ndim == 1 and queries.ndim == 1
+            and sorted_arr.shape[0] > 0 and queries.shape[0] > 0
+            and _key_dtype_ok(sorted_arr)
+            and jnp.dtype(sorted_arr.dtype) == jnp.dtype(queries.dtype)
+            and _lanes_ok(sorted_arr.shape[0])):
+        _tick("searchsorted", "pallas")
+        return bucketize.searchsorted(sorted_arr, queries, side=side,
+                                      block_n=block_n, interpret=INTERPRET)
+    _tick("searchsorted", "reference")
+    return jnp.searchsorted(sorted_arr, queries, side=side).astype(jnp.int32)
 
 
 def bucketize_histogram(keys: jnp.ndarray, boundaries: jnp.ndarray, t: int,
-                        block_n: int = 1024):
-    """Fused bucket-id + histogram (SMMS Round-3 planning)."""
-    return bucketize.bucketize_histogram(keys, boundaries, t,
-                                         block_n=block_n,
-                                         interpret=INTERPRET)
+                        *, backend=None, block_n: int = 1024):
+    """Fused bucket-id + histogram (SMMS Round-3 planning).
 
+    keys: (n,); boundaries: (t-1,) ascending interior boundaries.
+    Returns (ids (n,) int32, counts (t,) int32), ids per
+    ``searchsorted(boundaries, key, side='right')``.
+    """
+    b = resolve_backend(backend)
+    if (b == "pallas" and keys.ndim == 1 and boundaries.ndim == 1
+            and _key_dtype_ok(keys)
+            and jnp.dtype(keys.dtype) == jnp.dtype(boundaries.dtype)
+            and _lanes_ok(max(1, boundaries.shape[0]))):
+        _tick("bucketize_histogram", "pallas")
+        return bucketize.bucketize_histogram(keys, boundaries, t,
+                                             block_n=block_n,
+                                             interpret=INTERPRET)
+    _tick("bucketize_histogram", "reference")
+    ids = jnp.searchsorted(boundaries, keys, side="right").astype(jnp.int32)
+    counts = jnp.zeros((t,), jnp.int32).at[jnp.clip(ids, 0, t - 1)].add(1)
+    return ids, counts
+
+
+# ---------------------------------------------------------------------------
+# merge of sorted segments (the Round-3 receive side)
+# ---------------------------------------------------------------------------
+
+def merge_sorted_rows(x: jnp.ndarray, *, backend=None) -> jnp.ndarray:
+    """Merge already-sorted rows into one sorted vector.  x: (t, c).
+
+    Bitwise equal to ``jnp.sort(x.reshape(-1))``; the kernel path runs the
+    fused log-t pairwise bitonic merge instead of a full re-sort.
+    """
+    b = resolve_backend(backend)
+    t, c = x.shape
+    if (b == "pallas" and _key_dtype_ok(x)
+            and _lanes_ok(_next_pow2(t) * _next_pow2(max(2, c)))):
+        _tick("merge_sorted_rows", "pallas")
+        return bitonic.merge_sorted_rows(x, interpret=INTERPRET)
+    _tick("merge_sorted_rows", "reference")
+    return jnp.sort(x.reshape(-1))
+
+
+def merge_sorted_rows_kv(keys: jnp.ndarray, values, *, backend=None):
+    """Merge sorted rows carrying payload.  keys: (t, c); values: (t, c, ...).
+
+    Returns (merged_keys (t*c,), merged_values (t*c, ...)).  Both backends
+    realize the *stable* flat argsort (ties keep buffer order), so the
+    kernel path is bitwise-identical to the reference."""
+    b = resolve_backend(backend)
+    t, c = keys.shape
+    vflat = values.reshape(t * c, *values.shape[2:])
+    if (b == "pallas" and _key_dtype_ok(keys)
+            and _lanes_ok(_next_pow2(t) * _next_pow2(max(2, c)))):
+        _tick("merge_sorted_rows_kv", "pallas")
+        merged, order = bitonic.merge_sorted_rows_argsort(keys,
+                                                          interpret=INTERPRET)
+        return merged, vflat[order]
+    _tick("merge_sorted_rows_kv", "reference")
+    kflat = keys.reshape(-1)
+    order = jnp.argsort(kflat)
+    return kflat[order], vflat[order]
+
+
+# ---------------------------------------------------------------------------
+# attention (unchanged: no jnp twin in the hot path)
+# ---------------------------------------------------------------------------
 
 def flash_attention(q, k, v, causal: bool = True, window=None,
                     block_q: int = 128, block_k: int = 128):

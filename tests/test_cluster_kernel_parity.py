@@ -1,0 +1,150 @@
+"""End-to-end kernel-backend parity: cluster.sort / cluster.join with the
+Pallas path on vs off produce identical outputs AND identical (alpha, k)
+reports, on uniform and Zipf-skewed inputs, on both substrates."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import cluster
+from repro.cluster import ShardMapSubstrate, VmapSubstrate
+from repro.data import uniform_keys, zipf_tables
+from repro.kernels import ops
+
+T, M = 4, 192          # deliberately non-power-of-two row length
+
+
+def zipf_keys(n: int, seed: int) -> np.ndarray:
+    """Skewed float sort keys: many ties, heavy hitters -> duplicate
+    Algorithm-1 boundaries (the adversarial case for the bucketize path)."""
+    s, _ = zipf_tables(n, 1, theta=0.7, seed=seed, domain=37)
+    return s.astype(np.float32)
+
+
+def assert_reports_equal(a, b):
+    assert a.alpha == b.alpha
+    np.testing.assert_array_equal(a.workload, b.workload)
+    assert a.k_workload == b.k_workload
+    assert a.k_network == b.k_network
+    assert [p.name for p in a.phases] == [p.name for p in b.phases]
+    for pa, pb in zip(a.phases, b.phases):
+        np.testing.assert_array_equal(pa.sent, pb.sent)
+        np.testing.assert_array_equal(pa.received, pb.received)
+
+
+def run_sort_both(x, algorithm, substrate_factory, **kw):
+    (kr, vr), rep_r = cluster.sort(x, algorithm=algorithm,
+                                   kernel_backend="reference",
+                                   substrate=substrate_factory(), **kw)
+    ops.reset_dispatch_counts()
+    (kp, vp), rep_p = cluster.sort(x, algorithm=algorithm,
+                                   kernel_backend="pallas",
+                                   substrate=substrate_factory(), **kw)
+    # the kernel path must actually have run — not silently fallen back
+    assert sum(c for (op, path), c in ops.DISPATCH_COUNTS.items()
+               if path == "pallas") > 0, dict(ops.DISPATCH_COUNTS)
+    return (kr, vr, rep_r), (kp, vp, rep_p)
+
+
+@pytest.mark.parametrize("algorithm", ["smms", "terasort"])
+@pytest.mark.parametrize("gen", ["uniform", "zipf"])
+def test_sort_parity_vmap(algorithm, gen):
+    if gen == "uniform":
+        x = uniform_keys(T * M, seed=11).reshape(T, M)
+    else:
+        x = zipf_keys(T * M, seed=12).reshape(T, M)
+    (kr, _, rep_r), (kp, _, rep_p) = run_sort_both(
+        jnp.asarray(x), algorithm, lambda: VmapSubstrate(T))
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(kp))
+    assert_reports_equal(rep_r, rep_p)
+
+
+def test_sort_parity_with_values():
+    x = zipf_keys(T * M, seed=3).reshape(T, M)       # ties stress stability
+    v = np.arange(T * M, dtype=np.int32).reshape(T, M)
+    (kr, vr, rep_r), (kp, vp, rep_p) = run_sort_both(
+        jnp.asarray(x), "smms", lambda: VmapSubstrate(T),
+        values=jnp.asarray(v))
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(kp))
+    np.testing.assert_array_equal(np.asarray(vr), np.asarray(vp))
+    assert_reports_equal(rep_r, rep_p)
+
+
+def test_sort_parity_shardmap_single_device():
+    """The mesh executor drives the same kernels (1x1 mesh in-process)."""
+    x = uniform_keys(M, seed=7).reshape(1, M)
+    (kr, _, rep_r), (kp, _, rep_p) = run_sort_both(
+        jnp.asarray(x), "smms", lambda: ShardMapSubstrate(1))
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(kp))
+    assert_reports_equal(rep_r, rep_p)
+
+
+def join_pairs(out):
+    s = np.asarray(out.s_rows).reshape(-1)
+    t = np.asarray(out.t_rows).reshape(-1)
+    v = np.asarray(out.valid).reshape(-1)
+    return set(zip(s[v].tolist(), t[v].tolist()))
+
+
+@pytest.mark.parametrize("theta", [0.2, 0.8])      # mild and heavy skew
+def test_join_repartition_parity(theta):
+    n, t = 360, 6
+    s_keys, t_keys = zipf_tables(n, n, theta=theta, seed=4, domain=60)
+    rows = np.arange(n)
+    results = {}
+    for kb in ("reference", "pallas"):
+        if kb == "pallas":
+            ops.reset_dispatch_counts()
+        out, rep = cluster.join(s_keys, rows, t_keys, rows,
+                                algorithm="repartition", t_machines=t,
+                                kernel_backend=kb)
+        results[kb] = (out, rep)
+    assert sum(c for (op, path), c in ops.DISPATCH_COUNTS.items()
+               if path == "pallas") > 0
+    out_r, rep_r = results["reference"]
+    out_p, rep_p = results["pallas"]
+    # identical outputs, slot for slot (not just as sets)
+    np.testing.assert_array_equal(np.asarray(out_r.s_rows),
+                                  np.asarray(out_p.s_rows))
+    np.testing.assert_array_equal(np.asarray(out_r.t_rows),
+                                  np.asarray(out_p.t_rows))
+    np.testing.assert_array_equal(np.asarray(out_r.valid),
+                                  np.asarray(out_p.valid))
+    assert join_pairs(out_r) == join_pairs(out_p)
+    assert_reports_equal(rep_r, rep_p)
+
+
+def test_join_repartition_parity_shardmap_single_device():
+    n = 150
+    s_keys, t_keys = zipf_tables(n, n, theta=0.4, seed=8, domain=30)
+    rows = np.arange(n)
+    outs = []
+    for kb in ("reference", "pallas"):
+        out, _ = cluster.join(s_keys, rows, t_keys, rows,
+                              algorithm="repartition", t_machines=1,
+                              kernel_backend=kb,
+                              substrate=ShardMapSubstrate(1))
+        outs.append(out)
+    np.testing.assert_array_equal(np.asarray(outs[0].s_rows),
+                                  np.asarray(outs[1].s_rows))
+    np.testing.assert_array_equal(np.asarray(outs[0].t_rows),
+                                  np.asarray(outs[1].t_rows))
+    assert join_pairs(outs[0]) == join_pairs(outs[1])
+
+
+def test_join_statjoin_and_randjoin_parity():
+    """The other two algorithms route localjoin/randjoin kernels too."""
+    n, t = 240, 4
+    s_keys, t_keys = zipf_tables(n, n, theta=0.5, seed=13, domain=40)
+    rows = np.arange(n)
+    for alg in ("statjoin", "randjoin"):
+        got = []
+        for kb in ("reference", "pallas"):
+            out, _ = cluster.join(s_keys, rows, t_keys, rows, algorithm=alg,
+                                  t_machines=t, kernel_backend=kb)
+            got.append(out)
+        np.testing.assert_array_equal(np.asarray(got[0].s_rows),
+                                      np.asarray(got[1].s_rows))
+        np.testing.assert_array_equal(np.asarray(got[0].t_rows),
+                                      np.asarray(got[1].t_rows))
+        np.testing.assert_array_equal(np.asarray(got[0].valid),
+                                      np.asarray(got[1].valid))

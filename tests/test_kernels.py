@@ -69,6 +69,66 @@ def test_bucketize_boundary_exact_keys():
     np.testing.assert_array_equal(counts, [1, 1, 2, 1])
 
 
+@pytest.mark.parametrize("t", [2, 3, 5, 6, 7, 12, 33])
+def test_bucketize_non_pow2_t_pins_searchsorted(t):
+    """Regression: t-1 boundaries with t NOT a power of two used to hit the
+    kernel's padded-length assumptions.  Bucket ids must agree with
+    jnp.searchsorted(side='right') for every t."""
+    rng = np.random.default_rng(t)
+    keys = jnp.asarray(rng.normal(size=515).astype(np.float32) * 10)
+    bounds = jnp.sort(jnp.asarray(rng.normal(size=t - 1).astype(np.float32) * 8))
+    ids, counts = bucketize_histogram(keys, bounds, t, block_n=128)
+    want = jnp.searchsorted(bounds, keys, side="right")
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(counts), np.bincount(np.asarray(want), minlength=t))
+    assert int(counts.sum()) == keys.shape[0]
+
+
+def test_bucketize_duplicate_boundaries_heavy_hitter():
+    """Repeated boundaries (a heavy-hitter key collapsing several quantiles
+    onto one value) leave the middle buckets empty, exactly like the jnp
+    reference; keys equal to the repeated boundary go right of ALL copies."""
+    bounds = jnp.asarray([1.0, 2.0, 2.0, 2.0, 5.0])     # t = 6
+    keys = jnp.asarray([0.0, 1.0, 1.5, 2.0, 2.0, 3.0, 5.0, 9.0])
+    ids, counts = bucketize_histogram(keys, bounds, 6, block_n=8)
+    want = jnp.searchsorted(bounds, keys, side="right")
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(ids), [0, 1, 1, 4, 4, 4, 5, 5])
+    np.testing.assert_array_equal(np.asarray(counts), [1, 2, 0, 0, 3, 2])
+
+
+def test_bucketize_all_boundaries_equal():
+    """Fully degenerate boundary vector (one hot key dominates the sample)."""
+    bounds = jnp.full((7,), 3.0)                         # t = 8
+    keys = jnp.asarray([1.0, 3.0, 4.0])
+    ids, counts = bucketize_histogram(keys, bounds, 8, block_n=4)
+    np.testing.assert_array_equal(np.asarray(ids), [0, 7, 7])
+    np.testing.assert_array_equal(np.asarray(counts), [1, 0, 0, 0, 0, 0, 0, 2])
+
+
+def test_bucketize_int32_keys():
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(rng.integers(-100, 100, size=300), jnp.int32)
+    bounds = jnp.sort(jnp.asarray(rng.integers(-80, 80, size=9), jnp.int32))
+    ids, counts = bucketize_histogram(keys, bounds, 10, block_n=64)
+    want = jnp.searchsorted(bounds, keys, side="right")
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(want))
+    assert int(counts.sum()) == 300
+
+
+def test_searchsorted_kernel_both_sides():
+    from repro.kernels.bucketize import searchsorted as ss_kernel
+    rng = np.random.default_rng(9)
+    a = jnp.sort(jnp.asarray(rng.integers(0, 20, size=57), jnp.int32))
+    q = jnp.asarray(rng.integers(-3, 23, size=131), jnp.int32)
+    for side in ("left", "right"):
+        got = ss_kernel(a, q, side=side, block_n=32)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.searchsorted(np.asarray(a), np.asarray(q),
+                                             side=side))
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
