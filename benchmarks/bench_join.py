@@ -1,7 +1,12 @@
 """Paper Figs 11-14: join workload distribution + runtime, Zipf + scalar
-skew; RandJoin & StatJoin vs the Standard-Repartition baseline."""
+skew; RandJoin & StatJoin vs the Standard-Repartition baseline.  Plus
+the beyond-paper planner grid: ``algorithm="auto"`` vs every fixed
+algorithm (mispick rate, predicted-vs-measured k, planner overhead) ->
+BENCH_join.json."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import List
 
@@ -10,6 +15,9 @@ import numpy as np
 from repro import cluster
 from repro.core.alpha_k import statjoin_workload_bound
 from repro.data import scalar_skew_tables, zipf_tables
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_join.json")
 
 
 def _join_size(s_keys, t_keys):
@@ -98,3 +106,122 @@ def run_statjoin_overhead(report_rows: List[str]) -> None:
         f"total_us={dt_total*1e6:.0f},pct={pct:.1f}")
     # paper: statistics collection is a small fraction (0.6%-7%)
     assert pct < 25.0, pct
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: the adaptive planner vs every fixed algorithm
+# ---------------------------------------------------------------------------
+
+def _planner_join_grid():
+    """The acceptance grid: uniform, Zipf(1.1), Zipf(1.5), one hot key.
+
+    zipf_tables' theta parametrizes Z ∝ 1/rank^(1-theta), so Zipf
+    exponent s maps to theta = 1 - s."""
+    n = 2048
+    return {
+        "uniform": zipf_tables(n, n, theta=1.0, seed=31, domain=256),
+        "zipf1.1": zipf_tables(n, n, theta=1.0 - 1.1, seed=32, domain=256),
+        "zipf1.5": zipf_tables(n, n, theta=1.0 - 1.5, seed=33, domain=256),
+        "one-heavy-key": scalar_skew_tables(n, 300, 100, seed=34),
+    }
+
+
+def run_planner_compare(report_rows: List[str]) -> None:
+    """Auto vs each fixed algorithm on the skew grid -> BENCH_join.json.
+
+    Records per cell: every fixed algorithm's measured k and wall time,
+    auto's choice, measured and predicted k, and whether auto mispicked
+    (measured k more than 10% above the best fixed choice).  Also times
+    the planner itself (sketch + score, warm) against an end-to-end
+    auto sort at t=8, m=4096 — the <10% overhead budget.
+    """
+    from repro.planner import clear_plan_cache
+
+    t = 8
+    entries = []
+    mispicks = 0
+    for cell, (s_keys, t_keys) in _planner_join_grid().items():
+        rows_s = np.arange(len(s_keys))
+        rows_t = np.arange(len(t_keys))
+        fixed = {}
+        for alg in cluster.JOIN_ALGORITHMS:
+            t0 = time.time()
+            _, rep = cluster.join(s_keys, rows_s, t_keys, rows_t,
+                                  algorithm=alg, t_machines=t)
+            fixed[alg] = {"k": max(rep.k_workload, rep.k_network),
+                          "us": round((time.time() - t0) * 1e6)}
+        clear_plan_cache()
+        t0 = time.time()
+        _, rep_a = cluster.join(s_keys, rows_s, t_keys, rows_t,
+                                algorithm="auto", t_machines=t)
+        auto_us = round((time.time() - t0) * 1e6)
+        auto_k = max(rep_a.k_workload, rep_a.k_network)
+        best_k = min(v["k"] for v in fixed.values())
+        mispick = auto_k > 1.10 * best_k + 1e-9
+        mispicks += int(mispick)
+        entries.append({
+            "cell": cell, "t": t, "fixed": fixed,
+            "auto_choice": rep_a.query_plan.algorithm,
+            "auto_k": auto_k, "best_fixed_k": best_k,
+            "predicted_k": rep_a.predicted_k,
+            "predicted_alpha": rep_a.predicted_alpha,
+            "measured_alpha": rep_a.alpha,
+            "auto_us": auto_us, "mispick": bool(mispick),
+        })
+        report_rows.append(
+            f"planner_compare,{cell},auto={rep_a.query_plan.algorithm},"
+            f"auto_k={auto_k:.3f},best_k={best_k:.3f},"
+            f"pred_k={rep_a.predicted_k:.3f},mispick={int(mispick)}")
+        assert 0.5 <= rep_a.predicted_k / max(rep_a.k_workload, 1e-9) <= 2.0, (
+            cell, rep_a.predicted_k, rep_a.k_workload)
+
+    mispick_rate = mispicks / len(entries)
+    assert mispick_rate == 0.0, [e for e in entries if e["mispick"]]
+
+    # ---- planner overhead: sketch + score vs end-to-end auto join ----------
+    # The acceptance budget: at t=8, m=4096 rows per machine (32768-row
+    # tables), sketching + scoring costs <10% of the end-to-end join.
+    from repro.planner import plan_join_query
+
+    m = 4096
+    n = t * m
+    rng = np.random.default_rng(36)
+    s_big = rng.integers(0, n // 8, n).astype(np.int32)
+    t_big = rng.integers(0, n // 8, n).astype(np.int32)
+    rows_big = np.arange(n)
+    clear_plan_cache()
+    cluster.join(s_big, rows_big, t_big, rows_big, algorithm="auto",
+                 t_machines=t)              # warm every jit cache
+    plan_s, total_s = [], []
+    plan = None
+    for _ in range(5):                      # best-of-5 damps timer noise
+        clear_plan_cache()
+        t0 = time.time()
+        plan, _ = plan_join_query(s_big, t_big, t_machines=t)
+        plan_s.append(time.time() - t0)
+        clear_plan_cache()
+        t0 = time.time()
+        cluster.join(s_big, rows_big, t_big, rows_big, algorithm="auto",
+                     t_machines=t)
+        total_s.append(time.time() - t0)
+    # best-of-N on BOTH sides: comparing min-plan against max-total
+    # would bias the ratio low and let a >10% overhead sneak past
+    plan_s, total_s = min(plan_s), min(total_s)
+    pct = 100.0 * plan_s / total_s
+    entries.append({"cell": f"join_overhead(t={t},m={m})",
+                    "plan_us": round(plan_s * 1e6),
+                    "total_us": round(total_s * 1e6),
+                    "overhead_pct": round(pct, 2),
+                    "chosen": plan.algorithm})
+    report_rows.append(
+        f"planner_overhead,join,t={t},m={m},plan_us={plan_s*1e6:.0f},"
+        f"total_us={total_s*1e6:.0f},pct={pct:.1f}")
+    assert pct < 10.0, pct
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"suite": "bench_join.run_planner_compare",
+                   "mispick_rate": mispick_rate,
+                   "note": ("auto vs fixed algorithms on the skew grid; "
+                            "k = max(k_workload, k_network) per report"),
+                   "entries": entries}, f, indent=2)
+    report_rows.append(f"planner_compare,json,{os.path.abspath(BENCH_JSON)}")

@@ -42,9 +42,17 @@ def main():
           f"repartition {reports['repartition'].imbalance:.2f}  "
           f"randjoin {reports['randjoin'].imbalance:.2f}  "
           f"statjoin {reports['statjoin'].imbalance:.2f}  "
+          f"broadcast {reports['broadcast'].imbalance:.2f}  "
           f"(lower = better, 1.0 ideal)")
-    print("Repartition pins the hot key to ONE machine; RandJoin/StatJoin "
-          "spread it (Cor 3 / Thm 6).")
+    print("Repartition pins the hot key to ONE machine; the others "
+          "spread it (Cor 3 / Thm 6 / replication).")
+
+    # ---- 4. Or let the planner decide --------------------------------------
+    _, rep = cluster.join(s_keys, rows, t_keys, rows, algorithm="auto",
+                          t_machines=8)
+    print(f"auto     : planner chose {rep.query_plan.algorithm!r} "
+          f"(predicted k={rep.predicted_k:.2f}, "
+          f"measured k={rep.k_workload:.2f})")
 
 
 if __name__ == "__main__":

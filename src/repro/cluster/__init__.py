@@ -10,11 +10,13 @@ One runtime, two executors, uniform accounting:
 * :mod:`capacity`    — theorem-derived static receive capacities and the
   retry-on-overflow loop.
 * :mod:`api`         — ``cluster.sort`` / ``cluster.join`` dispatch over
-  all four algorithms (SMMS, Terasort+AlgS, RandJoin, StatJoin) plus the
-  repartition baseline.
+  all the algorithms (SMMS, Terasort+AlgS, RandJoin, StatJoin, the
+  broadcast small-table join) plus the repartition baseline — and
+  ``algorithm="auto"``, which hands the choice to the sketch-driven
+  planner in :mod:`repro.planner`.
 """
 from . import compat
-from .api import JOIN_ALGORITHMS, SORT_ALGORITHMS, join, sort
+from .api import AUTO, JOIN_ALGORITHMS, SORT_ALGORITHMS, join, sort
 from .capacity import CapacityOverflowError, CapacityPolicy, run_with_capacity
 from .collectives import CollectiveTape
 from .substrate import (ShardMapSubstrate, Substrate, VmapSubstrate,
@@ -22,7 +24,7 @@ from .substrate import (ShardMapSubstrate, Substrate, VmapSubstrate,
 
 __all__ = [
     "compat",
-    "sort", "join", "SORT_ALGORITHMS", "JOIN_ALGORITHMS",
+    "sort", "join", "SORT_ALGORITHMS", "JOIN_ALGORITHMS", "AUTO",
     "CapacityPolicy", "CapacityOverflowError", "run_with_capacity",
     "CollectiveTape",
     "Substrate", "VmapSubstrate", "ShardMapSubstrate", "default_substrate",

@@ -1,9 +1,20 @@
-"""The cluster front door: one dispatch for all four (alpha, k) algorithms.
+"""The cluster front door: one dispatch for all (alpha, k) algorithms.
 
     from repro import cluster
     (keys, values), report = cluster.sort(x, algorithm="smms")
     out, report = cluster.join(sk, sr, tk, tr, algorithm="statjoin",
                                t_machines=8)
+
+``algorithm="auto"`` hands the choice to the planner (repro.planner):
+a one-pass on-device sketch phase profiles the input, the theorem-bound
+cost model scores every candidate, and the query dispatches to the
+winner — bitwise-identical to calling that algorithm directly.  The
+report then carries the chosen :class:`~repro.planner.plan.QueryPlan`
+(``report.query_plan``), the predicted (alpha, k)
+(``report.predicted_alpha`` / ``report.predicted_k``) next to the
+measured ones, and the sketch round's tape entries
+(``report.sketch_phases``).  Plans are cached under a shard
+fingerprint, so repeating a query over unchanged data skips the sketch.
 
 Every algorithm runs on a Substrate (vmap virtual machines by default,
 shard_map real mesh when requested) and returns the AlphaKReport
@@ -18,10 +29,20 @@ import numpy as np
 
 from .substrate import Substrate
 
-__all__ = ["sort", "join", "SORT_ALGORITHMS", "JOIN_ALGORITHMS"]
+__all__ = ["sort", "join", "SORT_ALGORITHMS", "JOIN_ALGORITHMS", "AUTO"]
 
 SORT_ALGORITHMS = ("smms", "terasort")
-JOIN_ALGORITHMS = ("randjoin", "statjoin", "repartition")
+JOIN_ALGORITHMS = ("randjoin", "statjoin", "repartition", "broadcast")
+AUTO = "auto"
+
+
+def _attach_plan(report, plan, sketch_phases) -> None:
+    """Decorate an AlphaKReport with the planner's decision + prediction."""
+    report.query_plan = plan
+    report.predicted_alpha = plan.predicted.alpha
+    report.predicted_k = plan.predicted.k_workload
+    report.predicted_k_network = plan.predicted.k_network
+    report.sketch_phases = list(sketch_phases)
 
 
 def sort(x, *, algorithm: str = "smms",
@@ -31,6 +52,10 @@ def sort(x, *, algorithm: str = "smms",
          backend: str = "static", kernel_backend: Optional[str] = None,
          policy=None):
     """Distributed sort of x: (t, m).  Returns ((keys, values), report).
+
+    algorithm: one of SORT_ALGORITHMS, or "auto" to let the planner
+    sketch the shards and pick (the dispatched call is bitwise-identical
+    to naming the winner explicitly).
 
     kernel_backend: "pallas" routes every local sort/partition/merge hot
     loop through the Pallas kernels (repro.kernels.ops), "reference"
@@ -42,24 +67,36 @@ def sort(x, *, algorithm: str = "smms",
         raise ValueError(
             f"sort expects x of shape (t, m) — one row per machine — got "
             f"shape {np.shape(x)}; reshape with x.reshape(t, -1)")
+    if algorithm == AUTO:
+        from repro.planner import plan_sort_query
+        plan, sketch_phases = plan_sort_query(
+            x, t=int(np.shape(x)[0]), r=r, kernel_backend=kernel_backend,
+            substrate=substrate)
+        out, report = sort(x, algorithm=plan.algorithm, substrate=substrate,
+                           values=values, r=r, seed=seed,
+                           cap_factor=cap_factor, backend=backend,
+                           kernel_backend=kernel_backend, policy=policy)
+        _attach_plan(report, plan, sketch_phases)
+        return out, report
     if algorithm == "smms":
         from repro.core.smms import smms_sort
         return smms_sort(x, r=r, cap_factor=cap_factor, values=values,
                          backend=backend, kernel_backend=kernel_backend,
                          substrate=substrate, policy=policy)
     if algorithm == "terasort":
-        if values is not None:
-            raise NotImplementedError(
-                "terasort host wrapper does not carry values yet; "
-                "use algorithm='smms'")
         from repro.core.terasort import terasort_sort
+        if values is not None:
+            return terasort_sort(x, seed=seed, cap_factor=cap_factor,
+                                 backend=backend, values=values,
+                                 kernel_backend=kernel_backend,
+                                 substrate=substrate, policy=policy)
         flat, report = terasort_sort(x, seed=seed, cap_factor=cap_factor,
                                      backend=backend,
                                      kernel_backend=kernel_backend,
                                      substrate=substrate, policy=policy)
         return (flat, None), report
     raise ValueError(f"unknown sort algorithm {algorithm!r}; "
-                     f"expected one of {SORT_ALGORITHMS}")
+                     f"expected one of {SORT_ALGORITHMS + (AUTO,)}")
 
 
 def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
@@ -67,20 +104,41 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
          out_capacity: Optional[int] = None, seed: int = 0,
          in_cap_factor: float = 4.0, out_cap_factor: float = 1.05,
          kernel_backend: Optional[str] = None,
-         ab: Optional[Tuple[int, int]] = None, stats=None):
+         ab: Optional[Tuple[int, int]] = None, stats=None,
+         mem_budget: Optional[int] = None, small_side: Optional[str] = None):
     """Distributed equi-join.  Returns (JoinOutput, report).
+
+    algorithm: one of JOIN_ALGORITHMS, or "auto" — sketch both tables in
+    one on-device pass, score StatJoin/RandJoin/Broadcast/Repartition
+    through the theorem cost model, dispatch to the winner.
 
     kernel_backend: as in :func:`sort` — routes the per-device sort and
     binary-search hot loops through the Pallas kernels when "pallas".
 
     out_capacity defaults to the Theorem-6 bound ceil(2W/t) + slack for
-    the algorithms that need an explicit buffer (randjoin/repartition) —
-    computing W from exact statistics, the same information StatJoin's
-    planner uses.
+    the algorithms that need an explicit buffer (randjoin/repartition/
+    broadcast) — computing W from exact statistics, the same
+    information StatJoin's planner uses.  mem_budget caps the broadcast
+    small side (planner feasibility, objects); small_side forces the
+    broadcast orientation.
     """
+    if algorithm == AUTO:
+        from repro.planner import plan_join_query
+        plan, sketch_phases = plan_join_query(
+            s_keys, t_keys, t_machines=t_machines, mem_budget=mem_budget,
+            kernel_backend=kernel_backend, substrate=substrate)
+        out, report = join(s_keys, s_rows, t_keys, t_rows,
+                           algorithm=plan.algorithm, t_machines=t_machines,
+                           substrate=substrate, out_capacity=out_capacity,
+                           seed=seed, in_cap_factor=in_cap_factor,
+                           out_cap_factor=out_cap_factor,
+                           kernel_backend=kernel_backend, ab=ab, stats=stats,
+                           mem_budget=mem_budget, small_side=small_side)
+        _attach_plan(report, plan, sketch_phases)
+        return out, report
     if algorithm not in JOIN_ALGORITHMS:
         raise ValueError(f"unknown join algorithm {algorithm!r}; "
-                         f"expected one of {JOIN_ALGORITHMS}")
+                         f"expected one of {JOIN_ALGORITHMS + (AUTO,)}")
     if algorithm == "statjoin":
         from repro.core.statjoin import statjoin
         return statjoin(s_keys, s_rows, t_keys, t_rows, t_machines=t_machines,
@@ -125,6 +183,28 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
         # capacities grow with the same factor as the output buffer).
         (out, rep), _, _ = run_with_capacity(
             attempt_randjoin,
+            CapacityPolicy.fixed(out_capacity, max_retries=3))
+        return out, rep
+    if algorithm == "broadcast":
+        from repro.cluster.capacity import CapacityPolicy, run_with_capacity
+        from repro.core.broadcastjoin import broadcast_join
+
+        def attempt_broadcast(cap):
+            out, rep = broadcast_join(s_keys, s_rows, t_keys, t_rows,
+                                      t_machines=t_machines,
+                                      out_capacity=int(cap),
+                                      kernel_backend=kernel_backend,
+                                      substrate=substrate,
+                                      small_side=small_side)
+            return (out, rep), int(np.asarray(out.dropped).max())
+
+        if not defaulted_capacity:
+            return attempt_broadcast(out_capacity)[0]
+        # broadcast's per-machine output is not theorem-bounded (the big
+        # side's deal decides it); the Theorem-6-style default plus the
+        # shared retry loop recovers from the unlucky layouts.
+        (out, rep), _, _ = run_with_capacity(
+            attempt_broadcast,
             CapacityPolicy.fixed(out_capacity, max_retries=3))
         return out, rep
     from repro.core.repartition import repartition_join

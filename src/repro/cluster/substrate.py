@@ -91,9 +91,21 @@ class Substrate:
 
 
 class VmapSubstrate(Substrate):
-    """t virtual machines on one device — nested vmap with axis names."""
+    """t virtual machines on one device — nested vmap with axis names.
 
-    def run(self, shard_fn: Callable, *args):
+    ``jit=True`` compiles the vmapped program and caches it per
+    (shard_fn, arg signature), exactly like ShardMapSubstrate — worth
+    it for bodies of many small ops (the planner's sketch pass) where
+    eager per-op dispatch dominates.  The cache keys on shard_fn
+    *identity*, so callers must pass a stable function object to hit it.
+    """
+
+    def __init__(self, *axes: AxisSpec, jit: bool = False):
+        super().__init__(*axes)
+        self._jit = jit
+        self._compiled = {}
+
+    def _build(self, shard_fn: Callable):
         tape = CollectiveTape()
 
         def wrapper(*local):
@@ -104,6 +116,20 @@ class VmapSubstrate(Substrate):
         fn = wrapper
         for name, _ in reversed(self.axes):
             fn = jax.vmap(fn, axis_name=name)
+        return fn, tape
+
+    def run(self, shard_fn: Callable, *args):
+        if not self._jit:
+            fn, tape = self._build(shard_fn)
+        else:
+            key = (shard_fn,
+                   tuple((jnp.shape(a), str(getattr(a, "dtype", type(a))))
+                         for a in args))
+            cached = self._compiled.get(key)
+            if cached is None:
+                fn, tape = self._build(shard_fn)
+                cached = self._compiled[key] = (jax.jit(fn), tape)
+            fn, tape = cached
         out, frames = fn(*args)
         tape.bind(jax.tree.map(np.asarray, frames))
         return out, tape

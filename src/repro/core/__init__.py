@@ -8,6 +8,7 @@ from .alpha_k import (AlphaKReport, PhaseStats, randjoin_k_bound,
                       smms_k_bound, statjoin_k_bound, terasort_k_bound)
 from .boundaries import (boundaries_jax, boundaries_oracle,
                          equidepth_samples, interval_pdf)
+from .broadcastjoin import broadcast_join
 from .exchange import (PAD, ExchangeResult, exchange_sorted_segments,
                        partition_sorted)
 from .localjoin import MASKED_KEY, JoinOutput, join_size, local_equijoin
@@ -25,7 +26,8 @@ __all__ = [
     "boundaries_jax", "boundaries_oracle", "equidepth_samples",
     "interval_pdf", "PAD", "ExchangeResult", "exchange_sorted_segments",
     "partition_sorted", "MASKED_KEY", "JoinOutput", "join_size",
-    "local_equijoin", "choose_ab", "randjoin", "randjoin_shard",
+    "local_equijoin", "broadcast_join", "choose_ab", "randjoin",
+    "randjoin_shard",
     "repartition_join", "algorithm_s", "terasort_sample_count",
     "SortResult", "default_cap_factor", "smms_shard", "smms_sort",
     "JoinStatistics", "Rectangle", "collect_statistics", "plan_statjoin",

@@ -84,8 +84,15 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
                   backend: str = "static",
                   kernel_backend: Optional[str] = None,
                   substrate: Optional[Substrate] = None,
-                  policy: Optional[CapacityPolicy] = None):
-    """Host wrapper over t machines on a substrate.  x: (t, m)."""
+                  policy: Optional[CapacityPolicy] = None,
+                  values: Optional[jnp.ndarray] = None):
+    """Host wrapper over t machines on a substrate.  x: (t, m).
+
+    ``values`` (same leading (t, m) shape) ride along through the
+    Round-1 ``ops.sort_kv`` pair sort and the Round-3 exchange, exactly
+    as in SMMS.  Returns ``((keys, values), report)`` when values are
+    given, ``(keys, report)`` otherwise (the historical signature).
+    """
     t, m = x.shape
     n = t * m
     q = terasort_sample_count(n, t)
@@ -103,7 +110,16 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
                                   t=t, q=q, cap_factor=factor,
                                   backend=backend,
                                   kernel_backend=kernel_backend, tape=tape)
-        res, tape = substrate.run(body, x, rngs)
+
+        def body_v(xl, kl, vl, tape):
+            return terasort_shard(xl, kl, axis_name=substrate.axis_name,
+                                  t=t, q=q, cap_factor=factor,
+                                  values=vl, backend=backend,
+                                  kernel_backend=kernel_backend, tape=tape)
+        if values is not None:
+            res, tape = substrate.run(body_v, x, rngs, values)
+        else:
+            res, tape = substrate.run(body, x, rngs)
         return (res, tape), int(np.asarray(res.dropped).reshape(-1)[0])
 
     (res, tape), factor, attempts = run_with_capacity(attempt, policy)
@@ -111,6 +127,10 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
     karr = np.asarray(res.keys).reshape(t, -1)
     counts = np.asarray(res.count).reshape(-1)
     flat = np.concatenate([karr[i, :counts[i]] for i in range(t)])
+    vals = None
+    if res.values is not None:
+        v = np.asarray(res.values)
+        vals = np.concatenate([v[i, :counts[i]] for i in range(t)])
 
     report = tape.report(algorithm="Terasort+AlgS", t=t, n_in=n, n_out=n,
                          workload=counts)
@@ -118,4 +138,6 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
     report.total_dropped = 0
     report.cap_factor = factor
     report.capacity_attempts = attempts
+    if values is not None:
+        return (flat, vals), report
     return flat, report

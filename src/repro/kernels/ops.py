@@ -65,7 +65,7 @@ _KERNEL_KEY_DTYPES = frozenset(
 __all__ = [
     "sort", "sort_kv", "searchsorted", "bucketize_histogram",
     "merge_sorted_rows", "merge_sorted_rows_kv", "flash_attention",
-    "resolve_backend", "reset_dispatch_counts",
+    "resolve_backend", "reset_dispatch_counts", "kernel_eligible",
     "INTERPRET", "BACKENDS", "DEFAULT_BACKEND", "DISPATCH_COUNTS",
     "MAX_KERNEL_LANES",
 ]
@@ -99,6 +99,38 @@ def _lanes_ok(n: int) -> bool:
     return 1 <= _next_pow2(n) <= MAX_KERNEL_LANES
 
 
+def kernel_eligible(op: str, x, y=None) -> bool:
+    """Would the Pallas path take these operands?  Shape/dtype gate only.
+
+    The dispatchers below call this before routing to a kernel; callers
+    that pick between *algorithms* depending on kernel availability (the
+    planner's sketch layer chooses its sorted-runs heavy-hitter pass vs
+    the O(k)-memory Misra-Gries scan) consult it without dispatching.
+    ``y`` is the second operand where the op has one (sort_kv values,
+    searchsorted queries, merge payload).
+    """
+    if op == "sort":
+        return x.ndim in (1, 2) and _key_dtype_ok(x) and _lanes_ok(x.shape[-1])
+    if op == "sort_kv":
+        return (x.ndim == 1 and _key_dtype_ok(x) and _lanes_ok(x.shape[0])
+                and (y is None or y.shape[:1] == x.shape))
+    if op == "searchsorted":
+        return (x.ndim == 1 and y is not None and y.ndim == 1
+                and x.shape[0] > 0 and y.shape[0] > 0 and _key_dtype_ok(x)
+                and jnp.dtype(x.dtype) == jnp.dtype(y.dtype)
+                and _lanes_ok(x.shape[0]))
+    if op == "bucketize_histogram":
+        return (x.ndim == 1 and y is not None and y.ndim == 1
+                and _key_dtype_ok(x)
+                and jnp.dtype(x.dtype) == jnp.dtype(y.dtype)
+                and _lanes_ok(max(1, y.shape[0])))
+    if op in ("merge_sorted_rows", "merge_sorted_rows_kv"):
+        t, c = x.shape
+        return (_key_dtype_ok(x)
+                and _lanes_ok(_next_pow2(t) * _next_pow2(max(2, c))))
+    raise ValueError(f"unknown op {op!r}")
+
+
 # ---------------------------------------------------------------------------
 # sort / sort_kv
 # ---------------------------------------------------------------------------
@@ -106,8 +138,7 @@ def _lanes_ok(n: int) -> bool:
 def sort(x: jnp.ndarray, *, backend=None, block_rows: int = 8) -> jnp.ndarray:
     """Ascending sort along the last axis.  x: (n,) or (rows, n)."""
     b = resolve_backend(backend)
-    if (b == "pallas" and x.ndim in (1, 2) and _key_dtype_ok(x)
-            and _lanes_ok(x.shape[-1])):
+    if b == "pallas" and kernel_eligible("sort", x):
         _tick("sort", "pallas")
         x2 = x[None, :] if x.ndim == 1 else x
         out = bitonic.bitonic_sort(x2, block_rows=min(block_rows, x2.shape[0]),
@@ -126,8 +157,7 @@ def sort_kv(keys: jnp.ndarray, values, *, backend=None, block_rows: int = 8):
     lexicographic network, so key ties keep input order bitwise.
     """
     b = resolve_backend(backend)
-    if (b == "pallas" and keys.ndim == 1 and _key_dtype_ok(keys)
-            and _lanes_ok(keys.shape[0]) and values.shape[:1] == keys.shape):
+    if b == "pallas" and kernel_eligible("sort_kv", keys, values):
         _tick("sort_kv", "pallas")
         n = keys.shape[0]
         iota = jnp.arange(n, dtype=jnp.int32)
@@ -154,11 +184,7 @@ def searchsorted(sorted_arr: jnp.ndarray, queries: jnp.ndarray, *,
     if side not in ("left", "right"):
         raise ValueError(f"side must be 'left' or 'right', got {side!r}")
     b = resolve_backend(backend)
-    if (b == "pallas" and sorted_arr.ndim == 1 and queries.ndim == 1
-            and sorted_arr.shape[0] > 0 and queries.shape[0] > 0
-            and _key_dtype_ok(sorted_arr)
-            and jnp.dtype(sorted_arr.dtype) == jnp.dtype(queries.dtype)
-            and _lanes_ok(sorted_arr.shape[0])):
+    if b == "pallas" and kernel_eligible("searchsorted", sorted_arr, queries):
         _tick("searchsorted", "pallas")
         return bucketize.searchsorted(sorted_arr, queries, side=side,
                                       block_n=block_n, interpret=INTERPRET)
@@ -175,10 +201,8 @@ def bucketize_histogram(keys: jnp.ndarray, boundaries: jnp.ndarray, t: int,
     ``searchsorted(boundaries, key, side='right')``.
     """
     b = resolve_backend(backend)
-    if (b == "pallas" and keys.ndim == 1 and boundaries.ndim == 1
-            and _key_dtype_ok(keys)
-            and jnp.dtype(keys.dtype) == jnp.dtype(boundaries.dtype)
-            and _lanes_ok(max(1, boundaries.shape[0]))):
+    if b == "pallas" and kernel_eligible("bucketize_histogram", keys,
+                                         boundaries):
         _tick("bucketize_histogram", "pallas")
         return bucketize.bucketize_histogram(keys, boundaries, t,
                                              block_n=block_n,
@@ -200,9 +224,7 @@ def merge_sorted_rows(x: jnp.ndarray, *, backend=None) -> jnp.ndarray:
     fused log-t pairwise bitonic merge instead of a full re-sort.
     """
     b = resolve_backend(backend)
-    t, c = x.shape
-    if (b == "pallas" and _key_dtype_ok(x)
-            and _lanes_ok(_next_pow2(t) * _next_pow2(max(2, c)))):
+    if b == "pallas" and kernel_eligible("merge_sorted_rows", x):
         _tick("merge_sorted_rows", "pallas")
         return bitonic.merge_sorted_rows(x, interpret=INTERPRET)
     _tick("merge_sorted_rows", "reference")
@@ -218,8 +240,7 @@ def merge_sorted_rows_kv(keys: jnp.ndarray, values, *, backend=None):
     b = resolve_backend(backend)
     t, c = keys.shape
     vflat = values.reshape(t * c, *values.shape[2:])
-    if (b == "pallas" and _key_dtype_ok(keys)
-            and _lanes_ok(_next_pow2(t) * _next_pow2(max(2, c)))):
+    if b == "pallas" and kernel_eligible("merge_sorted_rows_kv", keys):
         _tick("merge_sorted_rows_kv", "pallas")
         merged, order = bitonic.merge_sorted_rows_argsort(keys,
                                                           interpret=INTERPRET)

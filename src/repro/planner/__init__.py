@@ -1,0 +1,28 @@
+"""Skew-aware adaptive query planner — sketches, cost model, plan cache.
+
+The paper answers *which* (alpha, k)-minimal algorithm to run with a
+hand-picked ``algorithm=`` string.  This subsystem answers it from the
+data: a one-pass on-device sketch phase (Misra-Gries heavy hitters,
+CountMin frequencies, KMV distinct counts) summarizes every shard into a
+:class:`~repro.planner.sketch.TableProfile`, the cost model in
+:mod:`repro.planner.cost` turns the paper's theorem bounds into a
+predicted (alpha, k, bytes-shuffled, peak-receive) per algorithm, and
+:mod:`repro.planner.plan` scores the candidates, caches the decision
+under a shard fingerprint, and hands ``cluster.sort`` / ``cluster.join``
+the winner when the caller says ``algorithm="auto"``.
+"""
+from .cost import CostEstimate, join_costs, select, sort_costs
+from .plan import (QueryPlan, clear_plan_cache, plan_join_query,
+                   plan_sort_query, planner_stats)
+from .sketch import (DataProfile, TableProfile, countmin_query, misra_gries,
+                     profile_join_tables, profile_sorted_shards,
+                     shard_sketch, sketch_table)
+
+__all__ = [
+    "CostEstimate", "sort_costs", "join_costs", "select",
+    "QueryPlan", "plan_sort_query", "plan_join_query", "clear_plan_cache",
+    "planner_stats",
+    "TableProfile", "DataProfile", "misra_gries", "countmin_query",
+    "shard_sketch", "sketch_table", "profile_join_tables",
+    "profile_sorted_shards",
+]

@@ -1,0 +1,203 @@
+"""The (alpha, k) cost model — theorem bounds turned into predictions.
+
+Every candidate algorithm gets a :class:`CostEstimate`: predicted alpha
+(rounds), predicted k (workload and network), total bytes shuffled and
+peak per-machine receive.  The *bounds* come straight from the paper —
+Theorem 1/2 (SMMS), Theorem 3/4 (Terasort+AlgS), Corollary 3/Theorem 5
+(RandJoin), Theorem 6/7 (StatJoin) — but a bound is a worst case, and a
+planner that predicts the worst case always overshoots the measured k
+by the full slack.  Predictions therefore sit at the *expected-case*
+point of each theorem's interval (half the sampling slack for SMMS, the
+``TERASORT_EXPECTED_K`` midpoint for Terasort's 5m+1, the midpoint of
+[W/t, 2W/t] for StatJoin/RandJoin outputs), floored at the skew terms
+the sketches expose: a key's duplicates can never be split across
+boundary buckets, and a repartitioned hot key's whole result lands on
+one machine.
+
+Selection minimizes a per-machine wall-clock proxy in object units:
+``peak_workload + peak_receive + ROUND_COST_OBJECTS * alpha`` —
+workload and network weighted equally (the paper's Ineq. 1/2 treat
+them symmetrically) plus a small per-round synchronization charge so a
+(1, k) algorithm beats a (3, k) algorithm on otherwise-equal costs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from repro.core.sampling import terasort_sample_count
+
+__all__ = [
+    "ROUND_COST_OBJECTS", "BROADCAST_MEM_BUDGET", "TERASORT_EXPECTED_K",
+    "CostEstimate", "sort_costs", "join_costs", "select",
+]
+
+# Objects-equivalent charge of one synchronized round (barrier latency).
+ROUND_COST_OBJECTS = 64.0
+# Per-machine memory budget (objects) a broadcast table must fit in.
+BROADCAST_MEM_BUDGET = 1 << 20
+# Expected-case max-load factor for Terasort's sampled boundaries
+# (Theorem 3 bounds it at 5; the paper's Figs 8-10 measure 1.5-2.5).
+TERASORT_EXPECTED_K = 2.0
+# Hash-partition balance penalty: with d distinct keys over t machines
+# the max bucket overshoots the mean by ~c/sqrt(d/t) (balls-in-bins),
+# on TOP of the hot-key pinning term.  Repartition has no theorem
+# shielding it; the other algorithms price their theorem bounds.
+REPARTITION_VARIANCE = 3.0
+OBJECT_BYTES = 4.0
+
+# Deterministic tie-break: prefer deterministic bounds over randomized,
+# fewer rounds over more, when scores tie exactly.
+_PREFERENCE = ("statjoin", "broadcast", "smms", "randjoin", "terasort",
+               "repartition")
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEstimate:
+    """Predicted (alpha, k, bytes-shuffled, peak-receive) for one algorithm."""
+    algorithm: str
+    alpha: int                 # predicted synchronized rounds
+    k_workload: float          # predicted max_i W_i / (W_seq / t)
+    k_network: float           # predicted max_i N_i / (N / t)
+    bytes_shuffled: float      # total bytes crossing the network
+    peak_receive: float        # max per-machine objects received, any round
+    peak_workload: float       # max per-machine workload (objects)
+    w_seq: float               # normalizer used for k_workload
+    feasible: bool = True
+    note: str = ""
+
+    @property
+    def score(self) -> float:
+        """Per-machine wall-clock proxy in object units (lower = better)."""
+        if not self.feasible:
+            return math.inf
+        return (self.peak_workload + self.peak_receive
+                + ROUND_COST_OBJECTS * self.alpha)
+
+
+# ---------------------------------------------------------------------------
+# sort: SMMS (Thm 1/2) vs Terasort+AlgS (Thm 3/4)
+# ---------------------------------------------------------------------------
+
+def sort_costs(profile, t: int, r: int = 2) -> Dict[str, CostEstimate]:
+    """Candidate costs for sorting the profiled (t, m) input."""
+    n = max(profile.n, 1)
+    m = n / t
+    n_total = 2.0 * n           # every object in + out
+    top = profile.top_count     # duplicates of one key cannot be split
+
+    # SMMS, Theorem 1: round-3 receive <= (1 + 2/r + t^2/n) m.  Expected
+    # case sits at half the 2/r sampling slack; a heavy duplicate run
+    # floors it (equal keys share a bucket).  Every machine also gathers
+    # all t * (rt + 1) equi-depth samples in round 1 — the term that
+    # makes SMMS lose when t^3 outgrows n (Thm 2's r t^3/n).
+    smms_peak = max(m * (1.0 + 1.0 / r + t * t / n), top)
+    smms_recv = max(smms_peak, float(t * (r * t + 1)))
+    smms = CostEstimate(
+        algorithm="smms", alpha=3,
+        k_workload=smms_peak / m,
+        k_network=(smms_recv + m) / (n_total / t),
+        bytes_shuffled=OBJECT_BYTES * (n + t * t * (r * t + 1)),
+        peak_receive=smms_recv, peak_workload=smms_peak, w_seq=float(n),
+        note=f"Thm 1 bound {(1 + 2 / r + t * t / n):.3f}m")
+
+    # Terasort, Theorem 3: receive <= 5m + 1 w.h.p.; measured max loads
+    # cluster around TERASORT_EXPECTED_K * m (paper Figs 8-10).  Its
+    # round-1 gather is only t*q = t*ceil(ln nt) samples (Thm 4's t^3/n
+    # has no r factor) — the regime where Terasort beats SMMS.
+    q = terasort_sample_count(n, t)
+    tera_peak = max(m * min(5.0 + 1.0 / m, TERASORT_EXPECTED_K), top)
+    tera_recv = max(tera_peak, float(t * q))
+    tera = CostEstimate(
+        algorithm="terasort", alpha=3,
+        k_workload=tera_peak / m,
+        k_network=(tera_recv + m) / (n_total / t),
+        bytes_shuffled=OBJECT_BYTES * (n + t * t * q),
+        peak_receive=tera_recv, peak_workload=tera_peak, w_seq=float(n),
+        note=f"Thm 3 bound 5m+1, q={q}")
+    return {"smms": smms, "terasort": tera}
+
+
+# ---------------------------------------------------------------------------
+# join: StatJoin (Thm 6/7), RandJoin (Cor 3/Thm 5), Broadcast, Repartition
+# ---------------------------------------------------------------------------
+
+def join_costs(profile, t: int,
+               mem_budget: Optional[int] = None) -> Dict[str, CostEstimate]:
+    """Candidate costs for joining the profiled table pair."""
+    from repro.core.randjoin import choose_ab
+
+    mem_budget = BROADCAST_MEM_BUDGET if mem_budget is None else mem_budget
+    ns, nt = profile.s.n, profile.t.n
+    n_in = max(ns + nt, 1)
+    w = max(profile.est_join_size, 1.0)
+    w_seq = max(float(n_in), w)
+    n_total = n_in + w
+    maxprod = profile.max_heavy_product
+
+    def mk(algorithm, alpha, peak_workload, peak_receive, moved, note=""):
+        return CostEstimate(
+            algorithm=algorithm, alpha=alpha,
+            k_workload=peak_workload / (w_seq / t),
+            k_network=2.0 * peak_receive / (n_total / t),
+            bytes_shuffled=OBJECT_BYTES * moved,
+            peak_receive=peak_receive, peak_workload=peak_workload,
+            w_seq=w_seq, note=note)
+
+    # Repartition: hash-partition both sides; a hot key's entire result
+    # (and all its input tuples) pins to one machine — the baseline the
+    # paper's Fig 11/13 exhibits — and even keyset-uniform inputs pay
+    # balls-in-bins variance on the per-machine key count.
+    top_in = profile.s.top_count + profile.t.top_count
+    distinct = max(profile.s.distinct, profile.t.distinct, 1.0)
+    balance = 1.0 + REPARTITION_VARIANCE / math.sqrt(max(distinct / t, 1.0))
+    repart = mk("repartition", 1,
+                peak_workload=(w / t) * balance + maxprod,
+                peak_receive=n_in / t + top_in,
+                moved=float(n_in),
+                note="skew-vulnerable: hot key -> one machine")
+
+    # StatJoin, Theorem 6: output <= 2W/t deterministically; rounds 1-2
+    # sort both tables (n/t each way), round 3 routes per rectangle plan.
+    stat = mk("statjoin", 3,
+              peak_workload=1.5 * w / t,
+              peak_receive=n_in / t,
+              moved=2.0 * n_in + t * max(profile.s.distinct,
+                                         profile.t.distinct),
+              note="Thm 6: <= 2W/t deterministic")
+
+    # RandJoin, Cor 3: output < 2W/t w.h.p.; replication moves
+    # b|S| + a|T| objects and every machine receives |S|/a + |T|/b.
+    a, b = choose_ab(t, ns, nt)
+    rand_recv = ns / a + nt / b
+    rand = mk("randjoin", 1,
+              peak_workload=1.5 * w / t,
+              peak_receive=rand_recv,
+              moved=float(b * ns + a * nt),
+              note=f"Cor 3, machine matrix {a}x{b}")
+
+    # Broadcast: replicate the small side everywhere, big side never
+    # moves; feasible only when the small side fits per-machine memory.
+    small = min(ns, nt)
+    bcast = CostEstimate(
+        algorithm="broadcast", alpha=1,
+        k_workload=(w / t) / (w_seq / t),
+        k_network=2.0 * small / (n_total / t),
+        bytes_shuffled=OBJECT_BYTES * t * small,
+        peak_receive=float(small), peak_workload=w / t + small,
+        w_seq=w_seq, feasible=small <= mem_budget,
+        note=f"small side {small} objects"
+             + ("" if small <= mem_budget else " > memory budget"))
+
+    return {"repartition": repart, "statjoin": stat, "randjoin": rand,
+            "broadcast": bcast}
+
+
+def select(costs: Dict[str, CostEstimate]) -> CostEstimate:
+    """Deterministic argmin of the score; infeasible candidates excluded."""
+    feasible = [c for c in costs.values() if c.feasible]
+    if not feasible:
+        raise ValueError("no feasible candidate algorithm")
+    return min(feasible, key=lambda c: (c.score,
+                                        _PREFERENCE.index(c.algorithm)))

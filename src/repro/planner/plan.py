@@ -1,0 +1,172 @@
+"""Plan selection + the plan cache — the planner's front half.
+
+``plan_sort_query`` / ``plan_join_query`` run the sketch pass on a
+substrate, score every candidate through the cost model, and return a
+:class:`QueryPlan`.  Plans are cached under a **shard fingerprint** — a
+content hash of (dtype, shape, bytes) of the inputs plus the query
+parameters — so a repeated query over the same data skips the sketch
+pass entirely.  Content-addressed keys make invalidation trivial:
+changed data hashes to a different key, so a stale entry can never be
+served; the cache is a bounded LRU (``PLAN_CACHE_MAX`` entries) and the
+oldest plans simply fall out.
+
+``planner_stats()`` exposes sketch-run / cache-hit counters so tests
+and benchmarks can prove the cache actually short-circuits the sketch.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import hashlib
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.cluster.substrate import Substrate, VmapSubstrate
+
+from .cost import CostEstimate, join_costs, select, sort_costs
+from .sketch import profile_join_tables, profile_sorted_shards
+
+__all__ = [
+    "QueryPlan", "fingerprint_arrays", "plan_sort_query", "plan_join_query",
+    "clear_plan_cache", "planner_stats", "PLAN_CACHE_MAX",
+]
+
+PLAN_CACHE_MAX = 128
+
+_PLAN_CACHE: "collections.OrderedDict[str, QueryPlan]" = \
+    collections.OrderedDict()
+_STATS = collections.Counter()
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    """One planning decision: profile, all candidate costs, the winner."""
+    kind: str                        # "sort" | "join"
+    algorithm: str                   # the chosen JOIN_/SORT_ALGORITHMS entry
+    t: int
+    fingerprint: str
+    predicted: CostEstimate          # candidates[algorithm]
+    candidates: Dict[str, CostEstimate]
+    profile: object                  # TableProfile | DataProfile
+    cached: bool = False             # served from the plan cache
+
+    def summary(self) -> str:
+        ranked = sorted(self.candidates.values(), key=lambda c: c.score)
+        lines = [f"plan[{self.kind}] -> {self.algorithm}"
+                 f" (cached={self.cached}, fp={self.fingerprint[:12]})"]
+        for c in ranked:
+            mark = "*" if c.algorithm == self.algorithm else " "
+            lines.append(
+                f"  {mark} {c.algorithm:11s} alpha={c.alpha} "
+                f"k_w={c.k_workload:6.2f} k_n={c.k_network:6.2f} "
+                f"recv={c.peak_receive:10.0f} "
+                f"bytes={c.bytes_shuffled:12.0f}"
+                + ("" if c.feasible else "  [infeasible]"))
+        return "\n".join(lines)
+
+
+def fingerprint_arrays(*arrays, extra: str = "") -> str:
+    """Content hash of (dtype, shape, bytes) per array + query params."""
+    h = hashlib.blake2b(digest_size=16)
+    for a in arrays:
+        a = np.ascontiguousarray(np.asarray(a))
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    h.update(extra.encode())
+    return h.hexdigest()
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _STATS.clear()
+
+
+def planner_stats() -> Dict[str, int]:
+    """Counters: sketch_runs, cache_hits, cache_misses."""
+    return dict(_STATS)
+
+
+def _cache_get(key: str) -> Optional[QueryPlan]:
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        _STATS["cache_misses"] += 1
+        return None
+    _PLAN_CACHE.move_to_end(key)
+    _STATS["cache_hits"] += 1
+    return dataclasses.replace(plan, cached=True)
+
+
+def _cache_put(key: str, plan: QueryPlan) -> None:
+    _PLAN_CACHE[key] = plan
+    while len(_PLAN_CACHE) > PLAN_CACHE_MAX:
+        _PLAN_CACHE.popitem(last=False)
+
+
+@functools.lru_cache(maxsize=32)
+def _sketch_substrate(t: int) -> VmapSubstrate:
+    """One jit-compiling vmap substrate per machine count — the compiled
+    sketch program is cached inside it, so repeated plans over same-shaped
+    (but different) data pay eager dispatch exactly once."""
+    return VmapSubstrate(t, jit=True)
+
+
+def plan_sort_query(x, *, t: int, r: int = 2,
+                    kernel_backend: Optional[str] = None,
+                    substrate: Optional[Substrate] = None):
+    """Sketch -> score -> choose for ``cluster.sort(algorithm="auto")``.
+
+    Returns ``(QueryPlan, sketch_phases)``; the phases are [] on a
+    cache hit (no sketch ran)."""
+    key = fingerprint_arrays(x, extra=f"sort|t={t}|r={r}")
+    plan = _cache_get(key)
+    if plan is not None:
+        return plan, []
+    sub = substrate if (substrate is not None and substrate.t == t
+                        and len(substrate.axes) == 1) \
+        else _sketch_substrate(t)
+    _STATS["sketch_runs"] += 1
+    profile, tape = profile_sorted_shards(x, sub,
+                                          kernel_backend=kernel_backend)
+    costs = sort_costs(profile, t, r=r)
+    chosen = select(costs)
+    plan = QueryPlan(kind="sort", algorithm=chosen.algorithm, t=t,
+                     fingerprint=key, predicted=chosen, candidates=costs,
+                     profile=profile)
+    _cache_put(key, plan)
+    return plan, tape.phases(t)
+
+
+def plan_join_query(s_keys, t_keys, *, t_machines: int,
+                    mem_budget: Optional[int] = None,
+                    kernel_backend: Optional[str] = None,
+                    substrate: Optional[Substrate] = None):
+    """Sketch -> score -> choose for ``cluster.join(algorithm="auto")``.
+
+    Returns ``(QueryPlan, sketch_phases)``."""
+    from repro.core.localjoin import MASKED_KEY
+
+    t = t_machines
+    key = fingerprint_arrays(s_keys, t_keys,
+                             extra=f"join|t={t}|mem={mem_budget}")
+    plan = _cache_get(key)
+    if plan is not None:
+        return plan, []
+    sub = substrate if (substrate is not None and substrate.t == t
+                        and len(substrate.axes) == 1) \
+        else _sketch_substrate(t)
+    _STATS["sketch_runs"] += 1
+    s32 = np.asarray(s_keys, np.int32)
+    t32 = np.asarray(t_keys, np.int32)
+    profile, tape = profile_join_tables(s32, t32, t, sub,
+                                        masked=int(MASKED_KEY),
+                                        kernel_backend=kernel_backend)
+    costs = join_costs(profile, t, mem_budget=mem_budget)
+    chosen = select(costs)
+    plan = QueryPlan(kind="join", algorithm=chosen.algorithm, t=t,
+                     fingerprint=key, predicted=chosen, candidates=costs,
+                     profile=profile)
+    _cache_put(key, plan)
+    return plan, tape.phases(t)

@@ -1,0 +1,19 @@
+"""Shared fixtures: cross-test isolation for module-level counters."""
+import pytest
+
+from repro.kernels import ops
+
+
+@pytest.fixture(autouse=True)
+def _reset_kernel_dispatch_counts():
+    """Kernel-dispatch assertions must never see another test's ticks.
+
+    DISPATCH_COUNTS is module-global and ticks at trace time, so without
+    this reset a test asserting "the pallas path ran" could pass on
+    counts leaked from a previously-run test file (or fail on a
+    reference-mode leak).  Reset before AND after: before isolates this
+    test, after leaves nothing behind for non-pytest callers.
+    """
+    ops.reset_dispatch_counts()
+    yield
+    ops.reset_dispatch_counts()

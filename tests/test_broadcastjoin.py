@@ -1,0 +1,104 @@
+"""Broadcast join: exactness, orientation, alpha=1, balance, front door."""
+import numpy as np
+import pytest
+
+from repro import cluster
+from repro.core import broadcast_join, repartition_join
+from repro.data import scalar_skew_tables, zipf_tables
+
+
+def oracle_join(s_keys, t_keys):
+    out = set()
+    byk = {}
+    for j, k in enumerate(t_keys):
+        byk.setdefault(int(k), []).append(j)
+    for i, k in enumerate(s_keys):
+        for j in byk.get(int(k), ()):
+            out.add((i, j))
+    return out
+
+
+def pairs(out):
+    s = np.asarray(out.s_rows).reshape(-1)
+    t = np.asarray(out.t_rows).reshape(-1)
+    v = np.asarray(out.valid).reshape(-1)
+    return set(zip(s[v].tolist(), t[v].tolist()))
+
+
+@pytest.mark.parametrize("t", [4, 7])
+@pytest.mark.parametrize("small_side", ["s", "t"])
+def test_broadcast_exact_both_orientations(t, small_side):
+    """Either table may be the broadcast side; (s_row, t_row) orientation
+    must survive the swap."""
+    rng = np.random.default_rng(t)
+    ns, nt = 90, 260
+    s_keys = rng.integers(0, 40, ns).astype(np.int32)
+    t_keys = rng.integers(0, 40, nt).astype(np.int32)
+    want = oracle_join(s_keys, t_keys)
+    out, report = broadcast_join(s_keys, np.arange(ns), t_keys, np.arange(nt),
+                                 t_machines=t,
+                                 out_capacity=2 * len(want) // t + 64,
+                                 small_side=small_side)
+    assert pairs(out) == want
+    assert int(np.asarray(out.dropped).max()) == 0
+    assert report.alpha == 1
+    assert [p.name for p in report.phases] == ["broadcast+join"]
+
+
+def test_broadcast_one_round_network_counts():
+    """The single phase's received count is the whole small table (valid
+    rows only, pads excluded), on every machine."""
+    ns, nt, t = 40, 400, 4
+    rng = np.random.default_rng(0)
+    s_keys = rng.integers(0, 30, ns).astype(np.int32)
+    t_keys = rng.integers(0, 30, nt).astype(np.int32)
+    want = oracle_join(s_keys, t_keys)
+    out, report = broadcast_join(s_keys, np.arange(ns), t_keys, np.arange(nt),
+                                 t_machines=t, out_capacity=len(want) + 8)
+    [phase] = report.phases
+    np.testing.assert_array_equal(phase.received, np.full(t, ns))
+
+
+def test_broadcast_spreads_contiguous_hot_key():
+    """Round-robin dealing: a contiguous run of hot-key tuples in the big
+    table spreads across machines — broadcast stays balanced where
+    repartition pins the result to one machine."""
+    n, mh, nh = 3000, 400, 60
+    s_keys, t_keys = scalar_skew_tables(n, mh, nh, seed=5)
+    # make the hot rows contiguous in the big table (worst case for a
+    # contiguous deal, handled by the round-robin deal)
+    t_keys = np.sort(t_keys)
+    w = len(oracle_join(s_keys, t_keys))
+    t = 6
+    out_b, rep_b = broadcast_join(s_keys, np.arange(n), t_keys, np.arange(n),
+                                  t_machines=t, out_capacity=w,
+                                  small_side="s")
+    _, rep_p = repartition_join(s_keys, np.arange(n), t_keys, np.arange(n),
+                                t_machines=t, out_capacity=w + 64)
+    assert pairs(out_b) == oracle_join(s_keys, t_keys)
+    assert rep_b.imbalance < rep_p.imbalance
+    assert rep_b.imbalance < 2.0
+
+
+def test_broadcast_overflow_reported():
+    """Tiny explicit capacity: drops surface in out.dropped, not silently."""
+    s_keys = np.full(8, 3, np.int32)
+    t_keys = np.full(8, 3, np.int32)
+    out, _ = broadcast_join(s_keys, np.arange(8), t_keys, np.arange(8),
+                            t_machines=2, out_capacity=4)
+    assert int(np.asarray(out.dropped).max()) > 0
+
+
+def test_front_door_broadcast_dispatch_and_retry():
+    """cluster.join(algorithm='broadcast'): default capacity from exact
+    stats + the shared retry loop; exact output."""
+    assert "broadcast" in cluster.JOIN_ALGORITHMS
+    s_keys, t_keys = zipf_tables(400, 2000, theta=0.4, seed=8, domain=60)
+    want = oracle_join(s_keys, t_keys)
+    out, report = cluster.join(s_keys, np.arange(400), t_keys,
+                               np.arange(2000), algorithm="broadcast",
+                               t_machines=8)
+    assert pairs(out) == want
+    assert int(np.asarray(out.dropped).max()) == 0
+    assert report.algorithm.startswith("BroadcastJoin")
+    assert report.alpha == 1

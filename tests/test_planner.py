@@ -1,0 +1,321 @@
+"""Planner subsystem: sketches, cost model, auto dispatch, plan cache."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import cluster
+from repro.cluster.substrate import VmapSubstrate
+from repro.core.localjoin import MASKED_KEY
+from repro.data import scalar_skew_tables, uniform_keys, zipf_tables
+from repro.planner import (clear_plan_cache, countmin_query, join_costs,
+                           misra_gries, plan_join_query, plan_sort_query,
+                           planner_stats, profile_join_tables, select,
+                           shard_sketch, sketch_table, sort_costs)
+from repro.planner.sketch import (CM_WIDTH, KMV_K, SKETCH_PHASE,
+                                  merge_shard_sketches, sketch_size)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_plan_cache():
+    clear_plan_cache()
+    yield
+    clear_plan_cache()
+
+
+def oracle_join_size(s_keys, t_keys):
+    import collections
+    cs = collections.Counter(s_keys.tolist())
+    ct = collections.Counter(t_keys.tolist())
+    return sum(cs[k] * ct[k] for k in cs if k in ct)
+
+
+def pairs(out):
+    s = np.asarray(out.s_rows).reshape(-1)
+    t = np.asarray(out.t_rows).reshape(-1)
+    v = np.asarray(out.valid).reshape(-1)
+    return set(zip(s[v].tolist(), t[v].tolist()))
+
+
+# ---------------------------------------------------------------------------
+# sketches
+# ---------------------------------------------------------------------------
+
+def test_misra_gries_finds_planted_heavy_hitter():
+    """Any key with count > n/(k+1) must occupy a slot; slot counts never
+    overcount."""
+    rng = np.random.default_rng(0)
+    n, k = 600, 8
+    keys = rng.integers(0, 10_000, n).astype(np.int32)
+    keys[: n // 3] = 777                       # > n/(k+1) occurrences
+    rng.shuffle(keys)
+    sk, sc = misra_gries(jnp.asarray(keys), k)
+    sk, sc = np.asarray(sk), np.asarray(sc)
+    assert 777 in sk[sc > 0]
+    true = int((keys == 777).sum())
+    got = int(sc[sk == 777][0])
+    assert got <= true
+    assert got >= true - n // (k + 1)          # the MG undercount bound
+
+
+def test_misra_gries_skips_masked():
+    keys = np.asarray([5, MASKED_KEY, 5, MASKED_KEY, 5], np.int32)
+    sk, sc = misra_gries(jnp.asarray(keys), 4, masked=MASKED_KEY)
+    sk, sc = np.asarray(sk), np.asarray(sc)
+    assert sc.sum() == 3 and sk[np.argmax(sc)] == 5
+
+
+def test_shard_sketch_sorted_runs_exact_counts():
+    """Kernel-eligible shards take the sorted-runs pass: per-shard heavy
+    counts are exact, and agree with the Misra-Gries slots' guarantee."""
+    rng = np.random.default_rng(1)
+    keys = rng.integers(0, 20, 512).astype(np.int32)
+    sk = shard_sketch(jnp.asarray(keys))
+    vals, counts = np.unique(keys, return_counts=True)
+    order = np.argsort(-counts, kind="stable")
+    top_true = dict(zip(vals[order][:8].tolist(), counts[order][:8].tolist()))
+    got = dict(zip(np.asarray(sk.heavy_keys).tolist(),
+                   np.asarray(sk.heavy_counts).tolist()))
+    for key, cnt in got.items():
+        assert cnt == int((keys == key).sum())
+    assert max(top_true.values()) == max(got.values())
+
+
+def test_countmin_never_undercounts():
+    rng = np.random.default_rng(2)
+    keys = rng.integers(0, 5000, 2048).astype(np.int32)
+    sk = shard_sketch(jnp.asarray(keys))
+    cm = np.asarray(sk.countmin, np.int64)
+    probe = np.unique(keys)[:64]
+    est = countmin_query(cm, probe)
+    true = np.asarray([(keys == p).sum() for p in probe])
+    assert np.all(est >= true)
+    # collision excess is bounded by the table load n/width per row
+    assert np.all(est - true <= 4 * len(keys) / CM_WIDTH + 8)
+
+
+def test_countmin_query_matches_device_hash():
+    """The numpy host-side query must index exactly the cells the
+    on-device _cm_hash populated — for int32 AND float32 keys."""
+    from repro.planner.sketch import _cm_hash, _to_u32
+    rng = np.random.default_rng(7)
+    for keys in (rng.integers(-2**31, 2**31 - 1, 256).astype(np.int32),
+                 rng.normal(size=256).astype(np.float32)):
+        cm = np.asarray(shard_sketch(jnp.asarray(keys)).countmin, np.int64)
+        dev_h = np.asarray(_cm_hash(_to_u32(jnp.asarray(keys)),
+                                    cm.shape[0], cm.shape[1]))
+        dev_est = np.min(cm[np.arange(cm.shape[0])[:, None], dev_h], axis=0)
+        np.testing.assert_array_equal(countmin_query(cm, keys), dev_est)
+
+
+def test_kmv_distinct_exact_when_small_and_close_when_large():
+    small = np.arange(40, dtype=np.int32)           # 40 < KMV_K distincts
+    sk = shard_sketch(jnp.asarray(np.repeat(small, 8)))
+    prof = merge_shard_sketches(jax.tree.map(lambda a: a[None], sk))
+    assert prof.distinct == 40
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 1000, 4096).astype(np.int32)
+    true_d = len(np.unique(keys))
+    sk = shard_sketch(jnp.asarray(keys))
+    prof = merge_shard_sketches(jax.tree.map(lambda a: a[None], sk))
+    assert abs(prof.distinct - true_d) / true_d < 0.35
+    assert KMV_K <= 4096
+    # the derived profile signals the cost model keys off
+    assert prof.duplication == pytest.approx(prof.n / prof.distinct)
+    assert prof.top_share == pytest.approx(prof.heavy_counts[0] / prof.n)
+
+
+def test_sketch_table_merges_shards_and_tapes_the_phase():
+    """(t, m) shards merged host-side; the sketch round is on the tape
+    with the all_gather cost of t fixed-size sketches."""
+    t, m = 4, 256
+    rng = np.random.default_rng(4)
+    x = rng.integers(100, 10_000, (t, m)).astype(np.int32)
+    x[:, :100] = 7                                  # global heavy hitter
+    prof, tape = sketch_table(jnp.asarray(x), VmapSubstrate(t))
+    assert prof.n == t * m
+    assert prof.heavy_keys[0] == 7
+    # exact per-shard runs, summed across shards (key 7 is in every
+    # shard's top-k, so the MG-merged count is exact)
+    assert int(prof.heavy_counts[0]) == int((x == 7).sum()) == 400
+    [phase] = tape.phases(t)
+    assert phase.name == SKETCH_PHASE
+    np.testing.assert_array_equal(phase.sent, np.full(t, sketch_size()))
+    np.testing.assert_array_equal(phase.received,
+                                  np.full(t, t * sketch_size()))
+
+
+def test_profile_join_tables_estimates_join_size():
+    """CountMin inner product: >= W, within 2x on uniform AND skewed."""
+    for theta in (1.0, -0.5):
+        s_keys, t_keys = zipf_tables(2000, 2000, theta=theta, seed=5,
+                                     domain=120)
+        w = oracle_join_size(s_keys, t_keys)
+        prof, _ = profile_join_tables(s_keys, t_keys, 4, VmapSubstrate(4),
+                                      masked=int(MASKED_KEY))
+        assert prof.est_join_size >= 0.9 * w      # CM dot is >= W up to
+        assert prof.est_join_size <= 2.0 * w      # heavy-key CM rounding
+        assert prof.s.n == 2000 and prof.t.n == 2000
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_cost_model_broadcast_feasibility_gate():
+    s_keys = np.arange(100, dtype=np.int32)
+    t_keys = np.arange(5000, dtype=np.int32)
+    prof, _ = profile_join_tables(s_keys, t_keys, 4, VmapSubstrate(4),
+                                  masked=int(MASKED_KEY))
+    costs = join_costs(prof, 4, mem_budget=50)
+    assert not costs["broadcast"].feasible
+    chosen = select(costs)
+    assert chosen.algorithm != "broadcast"
+    costs = join_costs(prof, 4, mem_budget=1 << 20)
+    assert costs["broadcast"].feasible
+
+
+def test_cost_model_skew_rules_out_repartition():
+    s_keys, t_keys = scalar_skew_tables(1500, 250, 80, seed=14)
+    prof, _ = profile_join_tables(s_keys, t_keys, 8, VmapSubstrate(8),
+                                  masked=int(MASKED_KEY))
+    costs = join_costs(prof, 8)
+    chosen = select(costs)
+    assert chosen.algorithm != "repartition"
+    # the hot key's product dominates repartition's predicted peak
+    assert costs["repartition"].k_workload > 2 * costs["statjoin"].k_workload
+
+
+def test_sort_cost_crossover_smms_vs_terasort():
+    """t^3 << n: SMMS wins on its tighter bound.  t^3 >> n: the r*t^2
+    sample gather sinks SMMS and Terasort's ln(nt) sampling wins —
+    Theorem 2's t^3 <= n applicability condition, discovered by the
+    cost model from the sketch alone."""
+    big = uniform_keys(8 * 2048, seed=6).reshape(8, 2048)
+    plan, _ = plan_sort_query(jnp.asarray(big), t=8)
+    assert plan.algorithm == "smms"
+    tiny = uniform_keys(16 * 64, seed=7).reshape(16, 64)
+    plan, _ = plan_sort_query(jnp.asarray(tiny), t=16)
+    assert plan.algorithm == "terasort"
+
+
+def test_sort_costs_have_the_paper_shapes():
+    prof, _ = sketch_table(
+        jnp.asarray(uniform_keys(4 * 512, seed=8).reshape(4, 512)),
+        VmapSubstrate(4))
+    costs = sort_costs(prof, 4, r=2)
+    assert costs["smms"].alpha == costs["terasort"].alpha == 3
+    assert costs["smms"].k_workload < costs["terasort"].k_workload
+    for c in costs.values():
+        assert c.bytes_shuffled > 0 and c.peak_receive > 0
+
+
+# ---------------------------------------------------------------------------
+# auto dispatch: parity, reports, cache
+# ---------------------------------------------------------------------------
+
+def test_auto_join_bitwise_parity_with_chosen_fixed():
+    s_keys, t_keys = zipf_tables(900, 900, theta=0.2, seed=9, domain=90)
+    rows = np.arange(900)
+    out_a, rep_a = cluster.join(s_keys, rows, t_keys, rows,
+                                algorithm="auto", t_machines=6)
+    chosen = rep_a.query_plan.algorithm
+    out_f, rep_f = cluster.join(s_keys, rows, t_keys, rows,
+                                algorithm=chosen, t_machines=6)
+    for a, f in zip(out_a, out_f):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(f))
+    assert rep_a.k_workload == rep_f.k_workload
+    assert rep_a.k_network == rep_f.k_network
+    assert rep_a.alpha == rep_f.alpha
+
+
+def test_auto_sort_bitwise_parity_with_chosen_fixed():
+    x = jnp.asarray(uniform_keys(8 * 512, seed=10).reshape(8, 512))
+    (ka, va), rep_a = cluster.sort(x, algorithm="auto")
+    (kf, vf), rep_f = cluster.sort(x, algorithm=rep_a.query_plan.algorithm)
+    np.testing.assert_array_equal(np.asarray(ka), np.asarray(kf))
+    assert rep_a.k_workload == rep_f.k_workload
+    np.testing.assert_array_equal(np.sort(np.asarray(x).reshape(-1)),
+                                  np.asarray(ka))
+
+
+def test_auto_report_carries_plan_and_predictions():
+    s_keys, t_keys = zipf_tables(600, 600, theta=0.5, seed=12, domain=60)
+    rows = np.arange(600)
+    _, rep = cluster.join(s_keys, rows, t_keys, rows, algorithm="auto",
+                          t_machines=4)
+    plan = rep.query_plan
+    assert plan.algorithm in cluster.JOIN_ALGORITHMS
+    assert set(plan.candidates) == {"randjoin", "statjoin", "repartition",
+                                    "broadcast"}
+    assert rep.predicted_alpha == plan.predicted.alpha == rep.alpha
+    assert rep.predicted_k == plan.predicted.k_workload
+    assert len(rep.sketch_phases) == 1          # the sketch round, taped
+    assert rep.sketch_phases[0].name == SKETCH_PHASE
+    assert "plan[join]" in plan.summary()
+
+
+def test_plan_cache_skips_resketch_and_invalidates_on_new_data():
+    x = jnp.asarray(uniform_keys(4 * 256, seed=13).reshape(4, 256))
+    cluster.sort(x, algorithm="auto")
+    assert planner_stats()["sketch_runs"] == 1
+    _, rep2 = cluster.sort(x, algorithm="auto")
+    st = planner_stats()
+    assert st["sketch_runs"] == 1 and st["cache_hits"] == 1
+    assert rep2.query_plan.cached
+    assert rep2.sketch_phases == []             # no sketch round ran
+    # different bytes -> different fingerprint -> fresh sketch
+    y = jnp.asarray(uniform_keys(4 * 256, seed=14).reshape(4, 256))
+    cluster.sort(y, algorithm="auto")
+    assert planner_stats()["sketch_runs"] == 2
+
+
+def test_unknown_algorithms_still_rejected():
+    x = jnp.asarray(uniform_keys(4 * 64, seed=0).reshape(4, 64))
+    with pytest.raises(ValueError, match="unknown sort algorithm"):
+        cluster.sort(x, algorithm="quicksort")
+    with pytest.raises(ValueError, match="unknown join algorithm"):
+        cluster.join(np.arange(4), np.arange(4), np.arange(4), np.arange(4),
+                     algorithm="sortmerge", t_machines=2)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance grid: no catastrophic mispick, predictions within 2x
+# ---------------------------------------------------------------------------
+
+GRID = {
+    "uniform": lambda: zipf_tables(1500, 1500, theta=1.0, seed=11,
+                                   domain=150),
+    "zipf1.5": lambda: zipf_tables(1200, 1200, theta=-0.5, seed=13,
+                                   domain=150),
+    "hotkey": lambda: scalar_skew_tables(1500, 250, 80, seed=14),
+}
+
+
+@pytest.mark.parametrize("cell", sorted(GRID))
+def test_auto_within_10pct_of_best_fixed(cell):
+    """The acceptance criterion: on every grid cell auto's measured k
+    (max of Ineq. 1 and 2) is within 10% of the best fixed choice, and
+    its predicted k is within 2x of measured."""
+    s_keys, t_keys = GRID[cell]()
+    rows_s, rows_t = np.arange(len(s_keys)), np.arange(len(t_keys))
+    t = 8
+    measured = {}
+    outputs = {}
+    for alg in cluster.JOIN_ALGORITHMS:
+        out, rep = cluster.join(s_keys, rows_s, t_keys, rows_t,
+                                algorithm=alg, t_machines=t)
+        measured[alg] = max(rep.k_workload, rep.k_network)
+        outputs[alg] = out
+    out_a, rep_a = cluster.join(s_keys, rows_s, t_keys, rows_t,
+                                algorithm="auto", t_machines=t)
+    auto_k = max(rep_a.k_workload, rep_a.k_network)
+    best = min(measured.values())
+    assert auto_k <= 1.10 * best + 1e-9, (
+        cell, rep_a.query_plan.algorithm, auto_k, measured)
+    # predicted within 2x of measured, both directions
+    ratio = rep_a.predicted_k / max(rep_a.k_workload, 1e-9)
+    assert 0.5 <= ratio <= 2.0, (cell, ratio)
+    # parity with the algorithm it selected
+    for a, f in zip(out_a, outputs[rep_a.query_plan.algorithm]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(f))

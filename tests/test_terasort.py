@@ -62,5 +62,36 @@ def test_smms_beats_terasort_balance():
         rep_sm.imbalance, rep_ts.imbalance)
 
 
+def test_values_ride_along():
+    """Key-value Terasort: payload follows its key through the Round-1
+    ops.sort_kv pair sort and the Round-3 exchange (the planner needs
+    both sort algorithms to accept values to route freely)."""
+    t, m = 4, 512
+    x = uniform_keys(t * m, seed=9)  # distinct with overwhelming probability
+    v = np.arange(t * m, dtype=np.int32)
+    (keys, vals), report = terasort_sort(
+        jnp.asarray(x.reshape(t, m)), seed=2,
+        values=jnp.asarray(v.reshape(t, m)))
+    order = np.argsort(x, kind="stable")
+    np.testing.assert_array_equal(keys, x[order])
+    np.testing.assert_array_equal(vals, v[order])
+    assert report.alpha == 3
+
+
+def test_front_door_terasort_values():
+    """cluster.sort(algorithm='terasort', values=...) — the historical
+    NotImplementedError is gone and smms/terasort agree on the result."""
+    from repro import cluster
+    t, m = 4, 256
+    x = uniform_keys(t * m, seed=21).reshape(t, m)
+    v = np.arange(t * m, dtype=np.int32).reshape(t, m)
+    (kt, vt), _ = cluster.sort(jnp.asarray(x), algorithm="terasort",
+                               values=jnp.asarray(v))
+    (ks, vs), _ = cluster.sort(jnp.asarray(x), algorithm="smms",
+                               values=jnp.asarray(v))
+    np.testing.assert_array_equal(kt, ks)
+    np.testing.assert_array_equal(vt, vs)
+
+
 def test_sample_count_formula():
     assert terasort_sample_count(10**6, 10) == int(np.ceil(np.log(10**7)))
