@@ -1,7 +1,7 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,...,derived`` CSV rows.  Every row corresponds to a paper
-table/figure (see DESIGN.md §9) or a beyond-paper integration measurement.
+table/figure (see DESIGN.md §11) or a beyond-paper integration measurement.
 Assertions inside the benches enforce the paper's claims (SMMS balance,
 Theorem 6 bound, statistics-collection overhead, ...).
 """
@@ -14,7 +14,7 @@ from typing import List
 
 def main() -> None:
     from benchmarks import (bench_alpha_k, bench_join, bench_kernels,
-                            bench_moe_dispatch, bench_sort)
+                            bench_moe_dispatch, bench_serve, bench_sort)
 
     rows: List[str] = []
     suites = [
@@ -28,6 +28,8 @@ def main() -> None:
         ("Thms 1/2/3/6: alpha-k verification", bench_alpha_k.run),
         ("MoE dispatch (beyond-paper)", bench_moe_dispatch.run),
         ("Pallas kernels", bench_kernels.run),
+        ("Serving engine vs one-shot -> BENCH_serve.json",
+         bench_serve.run),
     ]
     failures = []
     for name, fn in suites:

@@ -19,13 +19,14 @@ from . import compat
 from .api import AUTO, JOIN_ALGORITHMS, SORT_ALGORITHMS, join, sort
 from .capacity import CapacityOverflowError, CapacityPolicy, run_with_capacity
 from .collectives import CollectiveTape
-from .substrate import (ShardMapSubstrate, Substrate, VmapSubstrate,
-                        default_substrate)
+from .substrate import (ShardMapSubstrate, Substrate, SubstratePool,
+                        VmapSubstrate, default_substrate)
 
 __all__ = [
     "compat",
     "sort", "join", "SORT_ALGORITHMS", "JOIN_ALGORITHMS", "AUTO",
     "CapacityPolicy", "CapacityOverflowError", "run_with_capacity",
     "CollectiveTape",
-    "Substrate", "VmapSubstrate", "ShardMapSubstrate", "default_substrate",
+    "Substrate", "VmapSubstrate", "ShardMapSubstrate", "SubstratePool",
+    "default_substrate",
 ]

@@ -23,7 +23,7 @@ keep repro.core -> repro.cluster -> repro.core import order acyclic.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import numpy as np
 
@@ -35,6 +35,28 @@ SORT_ALGORITHMS = ("smms", "terasort")
 JOIN_ALGORITHMS = ("randjoin", "statjoin", "repartition", "broadcast")
 AUTO = "auto"
 
+# ``substrate=`` accepts a Substrate, None, or a *provider* — any
+# callable mapping an axis spec to a Substrate (repro.cluster.SubstratePool
+# is the canonical one).  A provider lets one object serve every
+# algorithm's axis shape: the sorts and 1D joins resolve it with (t,),
+# RandJoin with its (a, b) machine matrix — and all queries that agree
+# on the axes share one substrate, its lock, and its compiled-program
+# cache (the serving engine's cache-sharing contract).
+SubstrateLike = Union[Substrate, "SubstrateProvider", None]
+
+
+def _resolve_substrate(substrate, *axes) -> Optional[Substrate]:
+    if substrate is None or isinstance(substrate, Substrate):
+        return substrate
+    if callable(substrate):
+        sub = substrate(*axes)
+        if not isinstance(sub, Substrate):
+            raise TypeError(f"substrate provider {substrate!r} returned "
+                            f"{type(sub).__name__}, expected a Substrate")
+        return sub
+    raise TypeError(f"substrate must be a Substrate, a provider callable, "
+                    f"or None, got {type(substrate).__name__}")
+
 
 def _attach_plan(report, plan, sketch_phases) -> None:
     """Decorate an AlphaKReport with the planner's decision + prediction."""
@@ -43,6 +65,13 @@ def _attach_plan(report, plan, sketch_phases) -> None:
     report.predicted_k = plan.predicted.k_workload
     report.predicted_k_network = plan.predicted.k_network
     report.sketch_phases = list(sketch_phases)
+
+
+def _attach_capacity(report, factor: float, attempts: int) -> None:
+    """Make the shared retry loop visible on the report (ServeStats reads
+    ``capacity_attempts``; exactly-one-retry == attempts 2)."""
+    report.cap_factor = factor
+    report.capacity_attempts = attempts
 
 
 def sort(x, *, algorithm: str = "smms",
@@ -67,6 +96,7 @@ def sort(x, *, algorithm: str = "smms",
         raise ValueError(
             f"sort expects x of shape (t, m) — one row per machine — got "
             f"shape {np.shape(x)}; reshape with x.reshape(t, -1)")
+    substrate = _resolve_substrate(substrate, int(np.shape(x)[0]))
     if algorithm == AUTO:
         from repro.planner import plan_sort_query
         plan, sketch_phases = plan_sort_query(
@@ -126,7 +156,8 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
         from repro.planner import plan_join_query
         plan, sketch_phases = plan_join_query(
             s_keys, t_keys, t_machines=t_machines, mem_budget=mem_budget,
-            kernel_backend=kernel_backend, substrate=substrate)
+            kernel_backend=kernel_backend,
+            substrate=_resolve_substrate(substrate, t_machines))
         out, report = join(s_keys, s_rows, t_keys, t_rows,
                            algorithm=plan.algorithm, t_machines=t_machines,
                            substrate=substrate, out_capacity=out_capacity,
@@ -144,7 +175,8 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
         return statjoin(s_keys, s_rows, t_keys, t_rows, t_machines=t_machines,
                         out_cap_factor=out_cap_factor, stats=stats,
                         kernel_backend=kernel_backend,
-                        substrate=substrate, out_capacity=out_capacity)
+                        substrate=_resolve_substrate(substrate, t_machines),
+                        out_capacity=out_capacity)
 
     defaulted_capacity = out_capacity is None
     if defaulted_capacity:
@@ -161,7 +193,10 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
                                                / t_machines)))
     if algorithm == "randjoin":
         from repro.cluster.capacity import CapacityPolicy, run_with_capacity
-        from repro.core.randjoin import randjoin
+        from repro.core.randjoin import choose_ab, randjoin
+        a, b = ab if ab is not None else choose_ab(
+            t_machines, int(np.shape(s_keys)[0]), int(np.shape(t_keys)[0]))
+        rj_sub = _resolve_substrate(substrate, ("a", a), ("b", b))
 
         def attempt_randjoin(cap):
             out, rep = randjoin(s_keys, s_rows, t_keys, t_rows,
@@ -170,7 +205,7 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
                                 in_cap_factor=in_cap_factor
                                 * (cap / out_capacity),
                                 kernel_backend=kernel_backend,
-                                ab=ab, substrate=substrate)
+                                ab=(a, b), substrate=rj_sub)
             return (out, rep), int(np.asarray(out.dropped).max())
 
         if not defaulted_capacity:
@@ -181,20 +216,22 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
         # holds for large-enough fragments; when we picked the buffer,
         # recover from overflow through the shared retry loop (the route
         # capacities grow with the same factor as the output buffer).
-        (out, rep), _, _ = run_with_capacity(
+        (out, rep), factor, attempts = run_with_capacity(
             attempt_randjoin,
             CapacityPolicy.fixed(out_capacity, max_retries=3))
+        _attach_capacity(rep, factor, attempts)
         return out, rep
     if algorithm == "broadcast":
         from repro.cluster.capacity import CapacityPolicy, run_with_capacity
         from repro.core.broadcastjoin import broadcast_join
+        bc_sub = _resolve_substrate(substrate, t_machines)
 
         def attempt_broadcast(cap):
             out, rep = broadcast_join(s_keys, s_rows, t_keys, t_rows,
                                       t_machines=t_machines,
                                       out_capacity=int(cap),
                                       kernel_backend=kernel_backend,
-                                      substrate=substrate,
+                                      substrate=bc_sub,
                                       small_side=small_side)
             return (out, rep), int(np.asarray(out.dropped).max())
 
@@ -203,12 +240,14 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
         # broadcast's per-machine output is not theorem-bounded (the big
         # side's deal decides it); the Theorem-6-style default plus the
         # shared retry loop recovers from the unlucky layouts.
-        (out, rep), _, _ = run_with_capacity(
+        (out, rep), factor, attempts = run_with_capacity(
             attempt_broadcast,
             CapacityPolicy.fixed(out_capacity, max_retries=3))
+        _attach_capacity(rep, factor, attempts)
         return out, rep
     from repro.core.repartition import repartition_join
     return repartition_join(s_keys, s_rows, t_keys, t_rows,
                             t_machines=t_machines, out_capacity=out_capacity,
                             kernel_backend=kernel_backend,
-                            substrate=substrate)
+                            substrate=_resolve_substrate(substrate,
+                                                         t_machines))

@@ -165,6 +165,23 @@ class CollectiveTape:
     def is_bound(self) -> bool:
         return self._bound is not None
 
+    def bound_snapshot(self, frames: Sequence) -> "CollectiveTape":
+        """A private tape bound to ``frames`` with this tape's static phase
+        metadata.
+
+        Compiled-program caches keep ONE tape per cached program (its
+        phase layout was fixed at trace time); binding concrete counters
+        onto that shared tape would let a later run clobber an earlier
+        run's numbers between ``run()`` and ``report()``.  Each execution
+        therefore gets its own bound snapshot — the shared tape is only
+        ever mutated at trace time, under the substrate's lock.
+        """
+        snap = CollectiveTape()
+        snap._phase_order = list(self._phase_order)
+        snap._entry_phase = list(self._entry_phase)
+        snap.bind(frames)
+        return snap
+
     def phases(self, t: int):
         """Merge bound entries into one PhaseStats per declared phase."""
         from repro.core.alpha_k import PhaseStats

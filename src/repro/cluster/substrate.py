@@ -17,11 +17,24 @@ Axes are declared as ``(name, size)`` pairs; multi-axis substrates (the
 RandJoin a x b machine matrix) nest vmaps / open a 2D mesh.  Input
 arrays carry one leading dim per axis (``(t, m)`` or ``(a, b, m)``);
 outputs come back with the same leading dims.
+
+Substrates are **re-entrant**: ``run()`` may be called from any number
+of threads.  A per-substrate lock serializes execution (the compiled
+program's tape metadata is populated at trace time and must not be
+mutated concurrently), and every call returns a private bound-snapshot
+tape, so a report assembled after ``run()`` can never observe a later
+run's counters.  Compiled-program caches key on a *stable* function
+identity — ``functools.partial`` objects hash by (func, args, kwargs) —
+so repeated queries through the cluster front door reuse the compiled
+program instead of recompiling per call; ``Substrate.stats`` counts the
+compiles and cache hits (the serving engine's recompile metric).
 """
 from __future__ import annotations
 
+import collections
 import functools
-from typing import Callable, Optional, Sequence, Tuple, Union
+import threading
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +44,8 @@ from jax.sharding import PartitionSpec as P
 from . import compat
 from .collectives import CollectiveTape
 
-__all__ = ["Substrate", "VmapSubstrate", "ShardMapSubstrate", "default_substrate"]
+__all__ = ["Substrate", "VmapSubstrate", "ShardMapSubstrate",
+           "SubstratePool", "default_substrate"]
 
 AxisSpec = Union[int, Tuple[str, int]]
 
@@ -49,6 +63,25 @@ def _normalize_axes(axes: Sequence[AxisSpec]) -> Tuple[Tuple[str, int], ...]:
     return tuple(out)
 
 
+def _stable_fn_key(fn: Callable):
+    """A hashable identity for a shard body that survives re-construction.
+
+    The cluster wrappers rebuild their per-device bodies on every call;
+    raw function identity would miss the compiled-program cache each
+    time.  ``functools.partial`` of a module-level function over
+    hashable keywords keys on *content* instead, so two calls with the
+    same body and parameters share one compiled program.
+    """
+    if isinstance(fn, functools.partial):
+        try:
+            kw = tuple(sorted(fn.keywords.items()))
+            hash((fn.func, fn.args, kw))
+            return (_stable_fn_key(fn.func), fn.args, kw)
+        except TypeError:      # unhashable partial payload: identity key
+            return fn
+    return fn
+
+
 class Substrate:
     """Common surface: axis metadata + ``run(shard_fn, *args)``."""
 
@@ -56,6 +89,19 @@ class Substrate:
         if not axes:
             raise ValueError("substrate needs at least one axis")
         self.axes = _normalize_axes(axes)
+        # Re-entrancy: serializes trace+execute+bind; RLock so a body that
+        # (indirectly) re-enters the same substrate cannot self-deadlock.
+        self._lock = threading.RLock()
+        # "compiles" / "program_cache_hits" / "runs" — the serving layer's
+        # recompile accounting reads these (via stats_snapshot()).
+        self.stats: collections.Counter = collections.Counter()
+
+    def stats_snapshot(self) -> Dict[str, int]:
+        """Copy of the run/compile counters, taken under the run lock
+        (reading the live Counter while run() inserts a first-time key
+        would race the dict iteration)."""
+        with self._lock:
+            return dict(self.stats)
 
     @property
     def axis_names(self) -> Tuple[str, ...]:
@@ -96,8 +142,11 @@ class VmapSubstrate(Substrate):
     ``jit=True`` compiles the vmapped program and caches it per
     (shard_fn, arg signature), exactly like ShardMapSubstrate — worth
     it for bodies of many small ops (the planner's sketch pass) where
-    eager per-op dispatch dominates.  The cache keys on shard_fn
-    *identity*, so callers must pass a stable function object to hit it.
+    eager per-op dispatch dominates.  The cache key is *content-stable*
+    for ``functools.partial`` bodies — (function, args, keywords), see
+    ``_stable_fn_key`` — and falls back to function identity otherwise,
+    so pass a partial of a module-level function (the core wrappers all
+    do) or a stable function object to hit it.
     """
 
     def __init__(self, *axes: AxisSpec, jit: bool = False):
@@ -119,20 +168,24 @@ class VmapSubstrate(Substrate):
         return fn, tape
 
     def run(self, shard_fn: Callable, *args):
-        if not self._jit:
-            fn, tape = self._build(shard_fn)
-        else:
-            key = (shard_fn,
-                   tuple((jnp.shape(a), str(getattr(a, "dtype", type(a))))
-                         for a in args))
-            cached = self._compiled.get(key)
-            if cached is None:
+        with self._lock:
+            self.stats["runs"] += 1
+            if not self._jit:
                 fn, tape = self._build(shard_fn)
-                cached = self._compiled[key] = (jax.jit(fn), tape)
-            fn, tape = cached
-        out, frames = fn(*args)
-        tape.bind(jax.tree.map(np.asarray, frames))
-        return out, tape
+            else:
+                key = (_stable_fn_key(shard_fn),
+                       tuple((jnp.shape(a), str(getattr(a, "dtype", type(a))))
+                             for a in args))
+                cached = self._compiled.get(key)
+                if cached is None:
+                    fn, tape = self._build(shard_fn)
+                    cached = self._compiled[key] = (jax.jit(fn), tape)
+                    self.stats["compiles"] += 1
+                else:
+                    self.stats["program_cache_hits"] += 1
+                fn, tape = cached
+            out, frames = fn(*args)
+            return out, tape.bound_snapshot(jax.tree.map(np.asarray, frames))
 
 
 class ShardMapSubstrate(Substrate):
@@ -157,38 +210,86 @@ class ShardMapSubstrate(Substrate):
         self._compiled = {}
 
     def _signature(self, shard_fn: Callable, args) -> tuple:
-        return (shard_fn,
+        return (_stable_fn_key(shard_fn),
                 tuple((jnp.shape(a), str(getattr(a, "dtype", type(a))))
                       for a in args))
 
     def run(self, shard_fn: Callable, *args):
-        key = self._signature(shard_fn, args)
-        cached = self._compiled.get(key)
-        if cached is None:
-            tape = CollectiveTape()
-            k = len(self.axes)
-            lead = (0,) * k
+        with self._lock:
+            self.stats["runs"] += 1
+            key = self._signature(shard_fn, args)
+            cached = self._compiled.get(key)
+            if cached is None:
+                tape = CollectiveTape()
+                k = len(self.axes)
+                lead = (0,) * k
 
-            def wrapper(*local):
-                tape.reset()
-                stripped = [x[lead] for x in local]
-                out = shard_fn(*stripped, tape=tape)
-                restore = lambda y: jnp.reshape(jnp.asarray(y),
-                                                (1,) * k + jnp.shape(y))
-                return jax.tree.map(restore, (out, tape.traced()))
+                def wrapper(*local):
+                    tape.reset()
+                    stripped = [x[lead] for x in local]
+                    out = shard_fn(*stripped, tape=tape)
+                    restore = lambda y: jnp.reshape(jnp.asarray(y),
+                                                    (1,) * k + jnp.shape(y))
+                    return jax.tree.map(restore, (out, tape.traced()))
 
-            spec = P(*self.axis_names)
-            fn = compat.shard_map(wrapper, mesh=self.mesh,
-                                  in_specs=tuple(spec for _ in args),
-                                  out_specs=spec)
-            if self._jit:
-                fn = jax.jit(fn)
-            cached = (fn, tape)
-            self._compiled[key] = cached
-        fn, tape = cached
-        out, frames = fn(*args)
-        tape.bind(jax.tree.map(np.asarray, frames))
-        return out, tape
+                spec = P(*self.axis_names)
+                fn = compat.shard_map(wrapper, mesh=self.mesh,
+                                      in_specs=tuple(spec for _ in args),
+                                      out_specs=spec)
+                if self._jit:
+                    fn = jax.jit(fn)
+                cached = (fn, tape)
+                self._compiled[key] = cached
+                self.stats["compiles"] += 1
+            else:
+                self.stats["program_cache_hits"] += 1
+            fn, tape = cached
+            out, frames = fn(*args)
+            return out, tape.bound_snapshot(jax.tree.map(np.asarray, frames))
+
+
+class SubstratePool:
+    """Thread-safe cache of substrates keyed by their (normalized) axes.
+
+    The serving layer's cache-sharing backbone: anywhere the cluster
+    front door accepts ``substrate=``, a pool may be passed instead —
+    :mod:`repro.cluster.api` detects the callable and resolves it with
+    the axis spec each algorithm actually needs (``(t,)`` for the sorts
+    and 1D joins, ``(("a", a), ("b", b))`` for RandJoin's machine
+    matrix).  All queries that agree on the axes then share ONE
+    substrate — and with it the compiled-program cache, its lock, and
+    its compile counters.
+
+    ``make`` overrides substrate construction (e.g. 1-device
+    ``ShardMapSubstrate`` in the stress tests); the default is a
+    jit-compiling :class:`VmapSubstrate`, the fast repeated-traffic
+    executor on a single host.
+    """
+
+    def __init__(self, make: Optional[Callable[..., Substrate]] = None):
+        self._make = make if make is not None \
+            else (lambda *axes: VmapSubstrate(*axes, jit=True))
+        self._lock = threading.Lock()
+        self._subs: dict = {}
+
+    def __call__(self, *axes: AxisSpec) -> Substrate:
+        key = _normalize_axes(axes)
+        with self._lock:
+            sub = self._subs.get(key)
+            if sub is None:
+                sub = self._subs[key] = self._make(*key)
+            return sub
+
+    def substrates(self) -> Tuple[Substrate, ...]:
+        with self._lock:
+            return tuple(self._subs.values())
+
+    def stats(self) -> collections.Counter:
+        """Aggregate run/compile/program-cache counters across the pool."""
+        total: collections.Counter = collections.Counter()
+        for sub in self.substrates():
+            total.update(sub.stats_snapshot())
+        return total
 
 
 def default_substrate(*axes: AxisSpec,

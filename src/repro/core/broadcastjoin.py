@@ -21,6 +21,7 @@ side fits ``BROADCAST_MEM_BUDGET``; it is also directly reachable via
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax.numpy as jnp
@@ -32,6 +33,20 @@ from repro.cluster.substrate import Substrate, VmapSubstrate
 from .localjoin import MASKED_KEY, local_equijoin
 
 __all__ = ["broadcast_join"]
+
+
+def _broadcast_body(bk, br, sk, sr, *, tape: CollectiveTape, axis,
+                    small_side, out_capacity, kernel_backend):
+    """Per-device body (module-level for stable compiled-program keys)."""
+    with tape.phase("broadcast+join"):
+        cnt = jnp.sum(sk != MASKED_KEY)
+        gk = tape.all_gather(sk, axis, count=cnt).reshape(-1)
+        gr = tape.all_gather(sr, axis, track=False).reshape(-1)
+        if small_side == "s":
+            return local_equijoin(gk, gr, bk, br, out_capacity,
+                                  kernel_backend=kernel_backend)
+        return local_equijoin(bk, br, gk, gr, out_capacity,
+                              kernel_backend=kernel_backend)
 
 
 def _deal_round_robin(keys: np.ndarray, rows: np.ndarray, t: int):
@@ -77,17 +92,10 @@ def broadcast_join(s_keys: np.ndarray, s_rows: np.ndarray,
         small_k, small_r = _deal_round_robin(t_keys, np.asarray(t_rows), t)
         big_k, big_r = _deal_round_robin(s_keys, np.asarray(s_rows), t)
 
-    def body(bk, br, sk, sr, tape: CollectiveTape):
-        with tape.phase("broadcast+join"):
-            cnt = jnp.sum(sk != MASKED_KEY)
-            gk = tape.all_gather(sk, axis, count=cnt).reshape(-1)
-            gr = tape.all_gather(sr, axis, track=False).reshape(-1)
-            if small_side == "s":
-                return local_equijoin(gk, gr, bk, br, out_capacity,
-                                      kernel_backend=kernel_backend)
-            return local_equijoin(bk, br, gk, gr, out_capacity,
-                                  kernel_backend=kernel_backend)
-
+    body = functools.partial(_broadcast_body, axis=axis,
+                             small_side=small_side,
+                             out_capacity=out_capacity,
+                             kernel_backend=kernel_backend)
     out, tape = substrate.run(body, big_k, big_r, small_k, small_r)
 
     counts = np.asarray(out.count).reshape(-1)

@@ -156,12 +156,14 @@ def randjoin(s_keys: np.ndarray, s_rows: np.ndarray,
     tk, tr = deal(np.asarray(t_keys, np.int32), np.asarray(t_rows, np.int32))
     rngs = jax.random.split(jax.random.key(seed), t).reshape(a, b)
 
+    # functools.partial of the module-level body: the substrate keys its
+    # compiled-program cache on (func, kwargs), so repeated joins with the
+    # same parameters reuse one compiled program.
     body = functools.partial(randjoin_shard, axis_a=axis_a, axis_b=axis_b,
-                             a=a, b=b, out_capacity=out_capacity,
-                             in_cap_factor=in_cap_factor,
+                             a=a, b=b, out_capacity=int(out_capacity),
+                             in_cap_factor=float(in_cap_factor),
                              kernel_backend=kernel_backend)
-    run_body = lambda *args, tape: body(*args, tape=tape)
-    out, tape = substrate.run(run_body, sk, sr, tk, tr, rngs)
+    out, tape = substrate.run(body, sk, sr, tk, tr, rngs)
 
     counts = np.asarray(out.count).reshape(-1)
     n_in = s_keys.shape[0] + t_keys.shape[0]

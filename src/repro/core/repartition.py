@@ -10,6 +10,7 @@ received count measured in-program.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax.numpy as jnp
@@ -20,6 +21,15 @@ from repro.cluster.substrate import Substrate, VmapSubstrate
 from .localjoin import MASKED_KEY, local_equijoin
 
 __all__ = ["repartition_join"]
+
+
+def _repartition_body(a, b, c, d, *, tape, out_capacity, kernel_backend):
+    """Per-device body (module-level for stable compiled-program keys)."""
+    with tape.phase("shuffle"):
+        received = jnp.sum(a != MASKED_KEY) + jnp.sum(c != MASKED_KEY)
+        tape.record(sent=received, received=received)
+        return local_equijoin(a, b, c, d, out_capacity,
+                              kernel_backend=kernel_backend)
 
 
 def repartition_join(s_keys: np.ndarray, s_rows: np.ndarray,
@@ -50,13 +60,8 @@ def repartition_join(s_keys: np.ndarray, s_rows: np.ndarray,
     sk, sr, ns = shard(s_keys, np.asarray(s_rows))
     tk, tr, nt = shard(t_keys, np.asarray(t_rows))
 
-    def body(a, b, c, d, tape):
-        with tape.phase("shuffle"):
-            received = jnp.sum(a != MASKED_KEY) + jnp.sum(c != MASKED_KEY)
-            tape.record(sent=received, received=received)
-            return local_equijoin(a, b, c, d, out_capacity,
-                                  kernel_backend=kernel_backend)
-
+    body = functools.partial(_repartition_body, out_capacity=out_capacity,
+                             kernel_backend=kernel_backend)
     out, tape = substrate.run(body, sk, sr, tk, tr)
     counts = np.asarray(out.count).reshape(-1)
     n_in = len(s_keys) + len(t_keys)

@@ -104,6 +104,13 @@ def smms_shard(x_local: jnp.ndarray, *, axis_name: str, t: int, r: int = 2,
 # Host-level wrapper: run the body on a substrate, with capacity retry.
 # ---------------------------------------------------------------------------
 
+def _smms_shard_kv(x_local, values, **kw):
+    """Module-level (x, values) adapter so the substrate's compiled-program
+    cache can key the body on content (functools.partial of a stable
+    function) instead of a per-call closure."""
+    return smms_shard(x_local, values=values, **kw)
+
+
 def smms_sort(x: jnp.ndarray, r: int = 2,
               cap_factor: Optional[float] = None,
               values: Optional[jnp.ndarray] = None,
@@ -125,16 +132,15 @@ def smms_sort(x: jnp.ndarray, r: int = 2,
                   else CapacityPolicy.smms(n, t, r))
 
     def attempt(factor):
-        body = functools.partial(
-            smms_shard, axis_name=substrate.axis_name, t=t, r=r,
-            cap_factor=factor, backend=backend,
-            kernel_backend=kernel_backend)
+        static = dict(axis_name=substrate.axis_name, t=t, r=r,
+                      cap_factor=float(factor), backend=backend,
+                      kernel_backend=kernel_backend)
         if values is not None:
-            run_body = lambda xl, vl, tape: body(xl, values=vl, tape=tape)
-            res, tape = substrate.run(run_body, x, values)
+            res, tape = substrate.run(
+                functools.partial(_smms_shard_kv, **static), x, values)
         else:
-            run_body = lambda xl, tape: body(xl, tape=tape)
-            res, tape = substrate.run(run_body, x)
+            res, tape = substrate.run(
+                functools.partial(smms_shard, **static), x)
         return (res, tape), int(np.asarray(res.dropped).reshape(-1)[0])
 
     (res, tape), factor, attempts = run_with_capacity(attempt, policy)

@@ -30,6 +30,7 @@ fragments).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import List, Optional, Tuple
 
@@ -183,6 +184,28 @@ def _routing_tensors(keys: np.ndarray, rects: List[Rectangle], t: int,
     return out, cap
 
 
+def _statjoin_body(a, b, c, d, *, tape, n_in, n_stat, t, capacity,
+                   kernel_backend):
+    """Per-device StatJoin body (module-level: a functools.partial of this
+    keys the substrate's compiled-program cache on content)."""
+    # Rounds 1-2: the SMMS sort that produced the statistics — each
+    # tuple crosses the network once (n/t per machine, paper §4.3.1).
+    with tape.phase("rounds1-2 sort+stats"):
+        tape.record(sent=n_in / t, received=n_in / t)
+    # Round 3a: every machine learns the tiny per-key statistics so it
+    # can run the (deterministic, replicated) planner.
+    with tape.phase("round3 stats->plan"):
+        tape.record(sent=n_stat, received=n_stat)
+    # Round 3b: tuples routed per plan; the received count is measured
+    # in-program from the landed fragments (replicated tuples count
+    # once per copy — that is the paper's network cost of rectangles).
+    with tape.phase("round3 route"):
+        received = (jnp.sum(a != MASKED_KEY) + jnp.sum(c != MASKED_KEY))
+        tape.record(sent=n_in / t, received=received)
+        return local_equijoin(a, b, c, d, capacity,
+                              kernel_backend=kernel_backend)
+
+
 def statjoin(s_keys: np.ndarray, s_rows: np.ndarray,
              t_keys: np.ndarray, t_rows: np.ndarray,
              t_machines: int, out_cap_factor: float = 1.05,
@@ -224,24 +247,9 @@ def statjoin(s_keys: np.ndarray, s_rows: np.ndarray,
     n_in = len(s_keys) + len(t_keys)
     n_stat = len(stats.keys)
 
-    def body(a, b, c, d, tape):
-        # Rounds 1-2: the SMMS sort that produced the statistics — each
-        # tuple crosses the network once (n/t per machine, paper §4.3.1).
-        with tape.phase("rounds1-2 sort+stats"):
-            tape.record(sent=n_in / t, received=n_in / t)
-        # Round 3a: every machine learns the tiny per-key statistics so it
-        # can run the (deterministic, replicated) planner.
-        with tape.phase("round3 stats->plan"):
-            tape.record(sent=n_stat, received=n_stat)
-        # Round 3b: tuples routed per plan; the received count is measured
-        # in-program from the landed fragments (replicated tuples count
-        # once per copy — that is the paper's network cost of rectangles).
-        with tape.phase("round3 route"):
-            received = (jnp.sum(a != MASKED_KEY) + jnp.sum(c != MASKED_KEY))
-            tape.record(sent=n_in / t, received=received)
-            return local_equijoin(a, b, c, d, capacity,
-                                  kernel_backend=kernel_backend)
-
+    body = functools.partial(_statjoin_body, n_in=n_in, n_stat=n_stat, t=t,
+                             capacity=capacity,
+                             kernel_backend=kernel_backend)
     out, tape = substrate.run(body, sk, sr, tk, tr)
 
     counts = np.asarray(out.count).reshape(-1)

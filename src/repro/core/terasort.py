@@ -79,6 +79,13 @@ def terasort_shard(x_local: jnp.ndarray, rng: jax.Array, *, axis_name: str,
     return SortResult(ex.keys, ex.values, ex.count, ex.sent, ex.dropped, b)
 
 
+def _terasort_shard_kv(x_local, rng, values, **kw):
+    """Module-level (x, rng, values) adapter: a functools.partial of this
+    keys the substrate's compiled-program cache on content, so repeated
+    sorts share one compiled program instead of recompiling per call."""
+    return terasort_shard(x_local, rng, values=values, **kw)
+
+
 def terasort_sort(x: jnp.ndarray, seed: int = 0,
                   cap_factor: Optional[float] = None,
                   backend: str = "static",
@@ -105,21 +112,16 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
                   else CapacityPolicy.terasort(n, t, slack=1.1))
 
     def attempt(factor):
-        def body(xl, kl, tape):
-            return terasort_shard(xl, kl, axis_name=substrate.axis_name,
-                                  t=t, q=q, cap_factor=factor,
-                                  backend=backend,
-                                  kernel_backend=kernel_backend, tape=tape)
-
-        def body_v(xl, kl, vl, tape):
-            return terasort_shard(xl, kl, axis_name=substrate.axis_name,
-                                  t=t, q=q, cap_factor=factor,
-                                  values=vl, backend=backend,
-                                  kernel_backend=kernel_backend, tape=tape)
+        static = dict(axis_name=substrate.axis_name, t=t, q=q,
+                      cap_factor=float(factor), backend=backend,
+                      kernel_backend=kernel_backend)
         if values is not None:
-            res, tape = substrate.run(body_v, x, rngs, values)
+            res, tape = substrate.run(
+                functools.partial(_terasort_shard_kv, **static),
+                x, rngs, values)
         else:
-            res, tape = substrate.run(body, x, rngs)
+            res, tape = substrate.run(
+                functools.partial(terasort_shard, **static), x, rngs)
         return (res, tape), int(np.asarray(res.dropped).reshape(-1)[0])
 
     (res, tape), factor, attempts = run_with_capacity(attempt, policy)

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import collections
 import os
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +58,10 @@ DEFAULT_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "reference")
 MAX_KERNEL_LANES = 1 << 16
 
 # (op, path) -> number of dispatch decisions, counted at trace time.
+# Ticks happen while substrates trace concurrently-submitted queries, so
+# the read-modify-write goes under a lock (Counter.__iadd__ is not atomic).
 DISPATCH_COUNTS: collections.Counter = collections.Counter()
+_COUNTS_LOCK = threading.Lock()
 
 _KERNEL_KEY_DTYPES = frozenset(
     jnp.dtype(d) for d in (jnp.float32, jnp.bfloat16, jnp.int32))
@@ -81,11 +85,13 @@ def resolve_backend(backend) -> str:
 
 
 def reset_dispatch_counts() -> None:
-    DISPATCH_COUNTS.clear()
+    with _COUNTS_LOCK:
+        DISPATCH_COUNTS.clear()
 
 
 def _tick(op: str, path: str) -> None:
-    DISPATCH_COUNTS[(op, path)] += 1
+    with _COUNTS_LOCK:
+        DISPATCH_COUNTS[(op, path)] += 1
 
 
 _next_pow2 = bitonic._next_pow2

@@ -19,6 +19,7 @@ import collections
 import dataclasses
 import functools
 import hashlib
+import threading
 from typing import Dict, Optional
 
 import numpy as np
@@ -38,6 +39,11 @@ PLAN_CACHE_MAX = 128
 _PLAN_CACHE: "collections.OrderedDict[str, QueryPlan]" = \
     collections.OrderedDict()
 _STATS = collections.Counter()
+# The plan cache is shared by every thread the serving engine runs; the
+# OrderedDict move_to_end/popitem pair and the stats counters are
+# read-modify-write, so all access goes through one lock (RLock: the
+# plan_* functions tick stats while holding it).
+_LOCK = threading.RLock()
 
 
 @dataclasses.dataclass
@@ -80,29 +86,39 @@ def fingerprint_arrays(*arrays, extra: str = "") -> str:
 
 
 def clear_plan_cache() -> None:
-    _PLAN_CACHE.clear()
-    _STATS.clear()
+    with _LOCK:
+        _PLAN_CACHE.clear()
+        _STATS.clear()
 
 
 def planner_stats() -> Dict[str, int]:
-    """Counters: sketch_runs, cache_hits, cache_misses."""
-    return dict(_STATS)
+    """Counters: sketch_runs, cache_hits, cache_misses, cache_evictions."""
+    with _LOCK:
+        return dict(_STATS)
+
+
+def _tick(counter: str, n: int = 1) -> None:
+    with _LOCK:
+        _STATS[counter] += n
 
 
 def _cache_get(key: str) -> Optional[QueryPlan]:
-    plan = _PLAN_CACHE.get(key)
-    if plan is None:
-        _STATS["cache_misses"] += 1
-        return None
-    _PLAN_CACHE.move_to_end(key)
-    _STATS["cache_hits"] += 1
-    return dataclasses.replace(plan, cached=True)
+    with _LOCK:
+        plan = _PLAN_CACHE.get(key)
+        if plan is None:
+            _STATS["cache_misses"] += 1
+            return None
+        _PLAN_CACHE.move_to_end(key)
+        _STATS["cache_hits"] += 1
+        return dataclasses.replace(plan, cached=True)
 
 
 def _cache_put(key: str, plan: QueryPlan) -> None:
-    _PLAN_CACHE[key] = plan
-    while len(_PLAN_CACHE) > PLAN_CACHE_MAX:
-        _PLAN_CACHE.popitem(last=False)
+    with _LOCK:
+        _PLAN_CACHE[key] = plan
+        while len(_PLAN_CACHE) > PLAN_CACHE_MAX:
+            _PLAN_CACHE.popitem(last=False)
+            _STATS["cache_evictions"] += 1
 
 
 @functools.lru_cache(maxsize=32)
@@ -127,7 +143,7 @@ def plan_sort_query(x, *, t: int, r: int = 2,
     sub = substrate if (substrate is not None and substrate.t == t
                         and len(substrate.axes) == 1) \
         else _sketch_substrate(t)
-    _STATS["sketch_runs"] += 1
+    _tick("sketch_runs")
     profile, tape = profile_sorted_shards(x, sub,
                                           kernel_backend=kernel_backend)
     costs = sort_costs(profile, t, r=r)
@@ -157,7 +173,7 @@ def plan_join_query(s_keys, t_keys, *, t_machines: int,
     sub = substrate if (substrate is not None and substrate.t == t
                         and len(substrate.axes) == 1) \
         else _sketch_substrate(t)
-    _STATS["sketch_runs"] += 1
+    _tick("sketch_runs")
     s32 = np.asarray(s_keys, np.int32)
     t32 = np.asarray(t_keys, np.int32)
     profile, tape = profile_join_tables(s32, t32, t, sub,

@@ -1,4 +1,28 @@
-from .batching import LengthBucketScheduler
-from .engine import generate
+"""Serving layer: the sort/join query engine + the LLM demo loop.
 
-__all__ = ["LengthBucketScheduler", "generate"]
+``repro.serve.query`` is the production front door for cluster traffic
+(admission queue, micro-batching, cache sharing, ServeStats);
+``repro.serve.engine`` is the batched prefill+decode walkthrough and
+``batching`` the SMMS length-bucket scheduler both layers share.
+
+``generate`` pulls in the whole model stack, so it is re-exported
+lazily (PEP 562) — importing the query engine must not import
+transformer code.
+"""
+from .batching import LengthBucketScheduler
+from .query import (AdmissionError, EngineClosedError, QueryEngine,
+                    QueryResult, QuerySpec, ServeStats, join_query,
+                    sort_query)
+
+__all__ = [
+    "LengthBucketScheduler", "generate",
+    "QueryEngine", "QuerySpec", "QueryResult", "ServeStats",
+    "AdmissionError", "EngineClosedError", "sort_query", "join_query",
+]
+
+
+def __getattr__(name):
+    if name == "generate":
+        from .engine import generate
+        return generate
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

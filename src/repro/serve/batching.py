@@ -8,7 +8,7 @@ batches whose padding waste is bounded by the SMMS k-factor.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, Sequence
 
 import numpy as np
 
@@ -16,25 +16,40 @@ __all__ = ["LengthBucketScheduler"]
 
 
 class LengthBucketScheduler:
-    def __init__(self, max_batch: int = 8, buckets: int = 4, r: int = 2):
+    def __init__(self, max_batch: int = 8, buckets: int = 4):
         self.max_batch = max_batch
         self.buckets = buckets
-        self.r = r
 
     def plan(self, prompt_lengths: Sequence[int]
              ) -> List[List[int]]:
-        """Group request indices into batches of similar length."""
+        """Group request indices into batches of similar length.
+
+        Host-side Algorithm-1: sort the lengths, place the t-1 bucket
+        boundaries at equal *token mass* (the equi-depth rule SMMS uses
+        for its Round-2 boundaries) — so every bucket holds ~total/t
+        tokens and padding waste stays bounded by the SMMS k-factor.
+        This is the serving dispatcher's hot path, so it runs as plain
+        numpy on the queue snapshot; the device pipeline
+        (``repro.data.pipeline.smms_length_bucketing``) remains for
+        offline corpus-scale bucketing.
+        """
         n = len(prompt_lengths)
         if n == 0:
             return []
         lengths = np.asarray(prompt_lengths, np.float64)
         t = min(self.buckets, max(1, n // 2))
-        if n >= 2 * t and n % t == 0:
-            from repro.data.pipeline import smms_length_bucketing
-            order, bucket_id, _ = smms_length_bucketing(lengths, t, self.r)
-        else:  # tiny queue: plain argsort fallback
-            order = np.argsort(lengths, kind="stable")
+        order = np.argsort(lengths, kind="stable")
+        if t > 1:
+            csum = np.cumsum(lengths[order])
+            targets = csum[-1] * (np.arange(1, t) / t)
+            # side='right': mass landing exactly on a target closes the
+            # bucket (a uniform queue splits evenly, not 1/2/2/3)
+            cuts = np.searchsorted(csum, targets, side="right")
+            bucket_id = np.searchsorted(cuts, np.arange(n), side="right")
+        else:
             bucket_id = np.zeros(n, np.int64)
+        # bucket_id[j] = bucket of the j-th SHORTEST request, matching the
+        # (order, bucket_id) convention of the offline pipeline bucketing
         batches: List[List[int]] = []
         cur: List[int] = []
         cur_bucket = -1

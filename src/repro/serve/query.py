@@ -1,0 +1,730 @@
+"""The query-serving engine — sort/join traffic through one front door.
+
+``QueryEngine`` turns the one-shot ``cluster.sort``/``cluster.join``
+entry points into a service.  Callers build :func:`sort_query` /
+:func:`join_query` specs and ``submit()`` them (or ``run()`` a whole
+trace); a dispatcher thread admits them through a **bounded queue**
+(backpressure: a full queue blocks, or raises :class:`AdmissionError`
+in non-blocking mode), forms **micro-batches** of compatible requests,
+and executes them over a shared :class:`~repro.cluster.SubstratePool`.
+
+What the engine shares across requests — the reason it beats a loop of
+one-shot calls on sustained traffic:
+
+* **Compiled programs.**  Every query of the same (kind, algorithm,
+  shape, dtype, parameters) resolves to the same pooled substrate and
+  the same stable body partial, so it reuses one compiled program; the
+  one-shot path re-executes an eager vmap per call.  ``ServeStats``
+  reports the compile count so recompiles are visible, not silent.
+* **Plans.**  All requests share the planner's blake2b
+  content-fingerprint LRU (now thread-safe), so a repeated
+  ``algorithm="auto"`` query skips its sketch pass.
+* **Results of identical queries.**  Micro-batching groups compatible
+  requests — same (kind, algorithm, parameter) bucket, sizes clustered
+  by the SMMS length-bucketing scheduler — and **coalesces**
+  duplicates: one execution serves every identical request in flight.
+  A bounded content-addressed **result LRU** extends the same idea
+  across time: the algorithms are pure and explicitly seeded, so an
+  equal fingerprint provably means an equal result.  Either way each
+  request receives its own :class:`QueryResult` (report copied — no
+  cross-request state).
+
+Per-request results carry the full ``AlphaKReport`` (the paper's
+(alpha, k) guarantee, surfaced per query), the plan when the planner
+chose the algorithm, and the capacity-retry count; :meth:`QueryEngine
+.stats` aggregates them into :class:`ServeStats` (QPS, p50/p99 latency,
+plan-cache hit rate, recompiles, capacity retries).
+
+Every query is executed by the same ``repro.cluster`` code path a
+direct call uses — results are bitwise-identical to sequential one-shot
+execution, which ``tests/test_serve.py`` asserts under concurrency.
+"""
+from __future__ import annotations
+
+import collections
+import copy
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cluster.substrate import SubstratePool
+
+from .batching import LengthBucketScheduler
+
+__all__ = [
+    "AdmissionError", "EngineClosedError", "QuerySpec", "QueryResult",
+    "ServeStats", "QueryEngine", "sort_query", "join_query", "run_spec",
+    "SERVE_COUNTERS", "reset_serve_counters",
+]
+
+# Module-level serving counters (submitted/admitted/rejected/served/
+# failed/coalesced/executed/batches) — the serve twin of
+# ops.DISPATCH_COUNTS, reset by the autouse conftest fixture so no test
+# sees another test's traffic.
+SERVE_COUNTERS: collections.Counter = collections.Counter()
+_COUNTERS_LOCK = threading.Lock()
+
+
+def _tick(name: str, n: int = 1) -> None:
+    with _COUNTERS_LOCK:
+        SERVE_COUNTERS[name] += n
+
+
+def reset_serve_counters() -> None:
+    with _COUNTERS_LOCK:
+        SERVE_COUNTERS.clear()
+
+
+class AdmissionError(RuntimeError):
+    """The admission queue is full (non-blocking submit) or timed out."""
+
+
+class EngineClosedError(RuntimeError):
+    """submit() after close()."""
+
+
+# ---------------------------------------------------------------------------
+# Query specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """One sort/join request: arrays + the cluster front-door parameters.
+
+    ``arrays`` are the positional array operands (sort: ``(x,)`` or
+    ``(x, values)``; join: ``(s_keys, s_rows, t_keys, t_rows)``);
+    ``params`` everything that forwards to ``cluster.sort``/``cluster
+    .join``.  Specs are content-fingerprinted (same blake2b scheme as
+    the plan cache) for coalescing: equal fingerprint == equal query.
+    """
+    kind: str                         # "sort" | "join"
+    arrays: Tuple[Any, ...]
+    params: Tuple[Tuple[str, Any], ...]   # sorted, hashable
+    tag: str = ""                     # caller label, not part of identity
+
+    @property
+    def kwargs(self) -> Dict[str, Any]:
+        return dict(self.params)
+
+    @property
+    def size(self) -> int:
+        """Total objects across operands — the micro-batcher's length.
+
+        Metadata only (no device-to-host copy on the dispatcher path).
+        """
+        return int(sum(int(np.prod(np.shape(a))) for a in self.arrays))
+
+    def fingerprint(self) -> str:
+        from repro.planner.plan import fingerprint_arrays
+        return fingerprint_arrays(
+            *self.arrays,
+            extra=f"serve|{self.kind}|n={len(self.arrays)}|{self.params!r}")
+
+    def bucket_key(self) -> tuple:
+        """Compatibility bucket: requests that may share a micro-batch.
+
+        Reads shape/dtype metadata only — materializing operands to
+        host here would copy megabytes per query inside the batching
+        window (the content copy happens once, in ``fingerprint``).
+        """
+        shapes = tuple((np.shape(a),
+                        str(getattr(a, "dtype", type(a).__name__)))
+                       for a in self.arrays)
+        return (self.kind, self.params, shapes)
+
+
+def _spec(kind: str, arrays, params: Dict[str, Any], tag: str) -> QuerySpec:
+    items = tuple(sorted(params.items()))
+    try:
+        hash(items)
+    except TypeError as exc:
+        raise TypeError(f"query parameters must be hashable, got {params!r}"
+                        ) from exc
+    return QuerySpec(kind=kind, arrays=tuple(arrays), params=items, tag=tag)
+
+
+def sort_query(x, *, algorithm: str = "auto", values=None, tag: str = "",
+               **params) -> QuerySpec:
+    """A ``cluster.sort`` request; params forward to the front door."""
+    arrays = (x,) if values is None else (x, values)
+    params = dict(params, algorithm=algorithm, has_values=values is not None)
+    return _spec("sort", arrays, params, tag)
+
+
+def join_query(s_keys, s_rows, t_keys, t_rows, *, t_machines: int,
+               algorithm: str = "auto", tag: str = "", **params) -> QuerySpec:
+    """A ``cluster.join`` request; params forward to the front door."""
+    params = dict(params, algorithm=algorithm, t_machines=int(t_machines))
+    return _spec("join", (s_keys, s_rows, t_keys, t_rows), params, tag)
+
+
+def run_spec(spec: QuerySpec, *, substrate=None,
+             kernel_backend: Optional[str] = None):
+    """Execute one spec through the cluster front door.
+
+    The single spec-unpacking path: the engine calls it with its shared
+    pool, tests and benchmarks call it bare for the sequential one-shot
+    baseline.  Returns ``(value, report)`` exactly like ``cluster.*``.
+    """
+    from repro import cluster
+    kw = spec.kwargs
+    if kw.get("kernel_backend") is None and kernel_backend is not None:
+        kw["kernel_backend"] = kernel_backend
+    if spec.kind == "sort":
+        kw.pop("has_values", None)
+        values = spec.arrays[1] if len(spec.arrays) > 1 else None
+        return cluster.sort(spec.arrays[0], values=values,
+                            substrate=substrate, **kw)
+    if spec.kind == "join":
+        return cluster.join(*spec.arrays, substrate=substrate, **kw)
+    raise ValueError(f"unknown query kind {spec.kind!r}")
+
+
+def _copy_report(report):
+    """A per-request report copy: shallow + fresh top-level lists.
+
+    Requesters own their report and may decorate or edit it; copying
+    the object and its list-valued fields (``phases``,
+    ``sketch_phases``) keeps one request's edits invisible to its
+    coalesced twins and to the result LRU.  Leaf entries (PhaseStats,
+    arrays, the QueryPlan) are frozen/read-only by convention and stay
+    shared.
+    """
+    if report is None:
+        return None
+    dup = copy.copy(report)
+    for name, value in list(vars(dup).items()):
+        if isinstance(value, list):
+            setattr(dup, name, list(value))
+    return dup
+
+
+# ---------------------------------------------------------------------------
+# Results + tickets
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QueryResult:
+    """Outcome of one request; ``report`` is the per-query AlphaKReport."""
+    query_id: int
+    spec: QuerySpec
+    ok: bool
+    value: Any = None                 # ((keys, values), ...) / JoinOutput
+    report: Any = None                # AlphaKReport (None on failure)
+    error: Optional[str] = None
+    batch_id: int = -1
+    coalesced: bool = False           # served by an identical in-flight twin
+    cached: bool = False              # served from the result LRU
+    latency_s: float = 0.0            # submit -> done (queueing included)
+    exec_s: float = 0.0               # the cluster call alone
+
+    @property
+    def algorithm(self) -> Optional[str]:
+        return getattr(self.report, "algorithm", None)
+
+    @property
+    def plan_cached(self) -> Optional[bool]:
+        plan = getattr(self.report, "query_plan", None)
+        return None if plan is None else bool(plan.cached)
+
+    @property
+    def capacity_retries(self) -> int:
+        return max(0, int(getattr(self.report, "capacity_attempts", 1)) - 1)
+
+
+class _Ticket:
+    """Internal pending-request handle: submit() returns one."""
+
+    def __init__(self, query_id: int, spec: QuerySpec, submitted_at: float):
+        self.query_id = query_id
+        self.spec = spec
+        self.submitted_at = submitted_at
+        self._done = threading.Event()
+        self._result: Optional[QueryResult] = None
+        self._claimed = False
+        self._claim_lock = threading.Lock()
+
+    def claim(self) -> bool:
+        """Exactly-once finalization guard (first claimer delivers)."""
+        with self._claim_lock:
+            if self._claimed:
+                return False
+            self._claimed = True
+            return True
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> QueryResult:
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"query {self.query_id} not served within {timeout}s")
+        return self._result
+
+
+# ---------------------------------------------------------------------------
+# Engine stats
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeStats:
+    """Aggregate serving metrics for one engine (since construction)."""
+    served: int = 0                   # results delivered (incl. coalesced)
+    executed: int = 0                 # cluster.* calls actually run
+    failed: int = 0
+    rejected: int = 0                 # backpressure refusals
+    coalesced: int = 0
+    result_cache_hits: int = 0
+    batches: int = 0
+    wall_s: float = 0.0               # first submit -> last completion
+    qps: float = 0.0
+    p50_latency_s: float = 0.0
+    p99_latency_s: float = 0.0
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
+    sketch_runs: int = 0
+    plan_cache_hit_rate: float = 0.0
+    compiles: int = 0                 # substrate recompile count
+    program_cache_hits: int = 0
+    capacity_retries: int = 0
+
+    def summary(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        for k, v in d.items():
+            if isinstance(v, float):
+                d[k] = round(v, 6)
+        return d
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+_SHUTDOWN = object()
+
+
+class QueryEngine:
+    """Concurrent sort/join serving over the cluster front door.
+
+    Parameters
+    ----------
+    max_pending : admission-queue bound (backpressure beyond it).
+    max_batch   : micro-batch size cap.
+    batch_window_s : how long the dispatcher lingers to fill a batch.
+    workers     : micro-batch executor threads (1 = execute inline in
+        the dispatcher; substrates serialize per-substrate regardless).
+    pool        : a SubstratePool (or any ``(*axes) -> Substrate``
+        provider); defaults to a fresh pool of jit-compiling vmap
+        substrates.  Passing one engine's pool to another shares the
+        compiled programs too.
+    kernel_backend : default kernel dispatch for specs that don't pin
+        one ("pallas" / "reference" / None = ops.DEFAULT_BACKEND).
+    result_cache_size : content-addressed LRU of finished results.
+        Every algorithm behind the front door is pure and explicitly
+        seeded, so an identical fingerprint (same bytes, same
+        parameters) provably yields the identical result — serving it
+        from the LRU is exact, not approximate.  Mutated input data
+        hashes to a new fingerprint, so staleness is impossible by
+        construction (the plan cache's invalidation argument).  0
+        disables.  Cached hits are flagged (``QueryResult.cached``) and
+        counted in ``ServeStats.result_cache_hits``.
+    autostart   : start the dispatcher thread immediately.
+    """
+
+    def __init__(self, *, max_pending: int = 256, max_batch: int = 8,
+                 batch_window_s: float = 0.002, workers: int = 1,
+                 pool: Optional[SubstratePool] = None,
+                 kernel_backend: Optional[str] = None,
+                 result_cache_size: int = 64,
+                 autostart: bool = True):
+        if max_pending < 1 or max_batch < 1 or workers < 1:
+            raise ValueError("max_pending, max_batch and workers must be >= 1")
+        self.max_batch = int(max_batch)
+        self.batch_window_s = float(batch_window_s)
+        self.kernel_backend = kernel_backend
+        self.pool = pool if pool is not None else SubstratePool()
+        self._admit: "queue.Queue" = queue.Queue(maxsize=int(max_pending))
+        self._scheduler = LengthBucketScheduler(max_batch=self.max_batch)
+        self._exec = (ThreadPoolExecutor(max_workers=workers,
+                                         thread_name_prefix="serve-worker")
+                      if workers > 1 else None)
+        self._ids = itertools.count()
+        self._batch_ids = itertools.count()
+        self._lock = threading.Lock()          # stats below
+        # bounded window: a long-lived front door must not grow a float
+        # per query forever (and stats() percentiles stay O(window))
+        self._latencies: "collections.deque[float]" = \
+            collections.deque(maxlen=8192)
+        self._counts = collections.Counter()
+        self._first_submit: Optional[float] = None
+        self._last_done: Optional[float] = None
+        self._inflight: Dict[str, List[_Ticket]] = {}
+        self._inflight_lock = threading.Lock()
+        self.result_cache_size = int(result_cache_size)
+        self._results: "collections.OrderedDict[str, QueryResult]" = \
+            collections.OrderedDict()
+        self._results_lock = threading.Lock()
+        from repro.planner import planner_stats
+        self._planner_base = planner_stats()
+        # stats() reports deltas since construction for the pool too —
+        # an engine handed an already-warm pool must show 0 recompiles
+        self._pool_base = (self.pool.stats()
+                           if isinstance(self.pool, SubstratePool)
+                           else collections.Counter())
+        self._closed = False
+        # orders submit()'s put against close()'s _SHUTDOWN: every
+        # admitted ticket enters the FIFO strictly before the sentinel,
+        # so the dispatcher's tail drain provably sees it
+        self._close_lock = threading.Lock()
+        self._started = False
+        self._dispatcher = threading.Thread(target=self._dispatch_loop,
+                                            name="serve-dispatcher",
+                                            daemon=True)
+        if autostart:
+            self.start()
+
+    # ---- lifecycle ----------------------------------------------------
+    def start(self) -> "QueryEngine":
+        if not self._started:
+            self._started = True
+            self._dispatcher.start()
+        return self
+
+    def close(self, wait: bool = True) -> None:
+        """Stop admitting; drain and serve everything already admitted."""
+        with self._close_lock:
+            if self._closed:
+                return
+            self._closed = True
+            if not self._started:    # never started: fail queued tickets
+                self._drain_failed("engine closed before start()")
+                return
+            self._admit.put(_SHUTDOWN)
+        if wait:
+            self._dispatcher.join()
+            if self._exec is not None:
+                self._exec.shutdown(wait=True)
+            # a submit() racing close() can slip a ticket in after the
+            # dispatcher's tail drain; fail it loudly rather than let
+            # its .result() block forever
+            self._drain_failed("engine closed while the request was "
+                               "in the admission queue")
+
+    def __enter__(self) -> "QueryEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _drain_failed(self, msg: str) -> None:
+        while True:
+            try:
+                item = self._admit.get_nowait()
+            except queue.Empty:
+                return
+            if item is not _SHUTDOWN:
+                self._finalize(item, QueryResult(
+                    query_id=item.query_id, spec=item.spec, ok=False,
+                    error=msg))
+
+    # ---- submission ---------------------------------------------------
+    def submit(self, spec: QuerySpec, *, block: bool = True,
+               timeout: Optional[float] = None) -> _Ticket:
+        """Admit one query.  Returns a ticket; ``ticket.result()`` waits.
+
+        Backpressure: when the admission queue is full, ``block=True``
+        waits (up to ``timeout``); ``block=False`` raises
+        :class:`AdmissionError` immediately.
+        """
+        if self._closed:
+            raise EngineClosedError("submit() on a closed engine")
+        _tick("submitted")
+        now = time.monotonic()
+        ticket = _Ticket(next(self._ids), spec, now)
+        try:
+            # under _close_lock so a racing close() cannot slip its
+            # _SHUTDOWN sentinel in front of this ticket (the dispatcher
+            # drains everything ahead of the sentinel before exiting)
+            with self._close_lock:
+                if self._closed:
+                    raise EngineClosedError("submit() on a closed engine")
+                self._admit.put(ticket, block=block, timeout=timeout)
+        except queue.Full:
+            _tick("rejected")
+            with self._lock:
+                self._counts["rejected"] += 1
+            raise AdmissionError(
+                f"admission queue full ({self._admit.maxsize} pending)")
+        _tick("admitted")
+        with self._lock:
+            # only an ADMITTED request starts the QPS wall clock — a
+            # rejected burst must not deflate the lifetime throughput
+            if self._first_submit is None:
+                self._first_submit = now
+        return ticket
+
+    def run(self, specs: Sequence[QuerySpec],
+            timeout: Optional[float] = None) -> List[QueryResult]:
+        """Submit a whole trace and wait for every result (in order)."""
+        tickets = [self.submit(s) for s in specs]
+        return [t.result(timeout) for t in tickets]
+
+    # ---- dispatch -----------------------------------------------------
+    def _dispatch_loop(self) -> None:
+        stop = False
+        while not stop:
+            try:
+                item = self._admit.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if item is _SHUTDOWN:
+                stop = True
+                batch: List[_Ticket] = []
+            else:
+                batch = [item]
+                deadline = time.monotonic() + self.batch_window_s
+                # linger to fill the micro-batcher's window
+                while len(batch) < 4 * self.max_batch:
+                    remaining = deadline - time.monotonic()
+                    try:
+                        nxt = (self._admit.get(timeout=remaining)
+                               if remaining > 0 else self._admit.get_nowait())
+                    except queue.Empty:
+                        break
+                    if nxt is _SHUTDOWN:
+                        stop = True
+                        break
+                    batch.append(nxt)
+            # the dispatcher must survive anything a batch can throw —
+            # a dead dispatcher hangs every pending and future query.
+            # (Reachable failures are already caught per ticket in
+            # _micro_batches/_run_batch/_execute; this is the backstop.)
+            futures = []
+            try:
+                for group in self._micro_batches(batch):
+                    if self._exec is not None:
+                        futures.append(
+                            (self._exec.submit(self._run_batch, group),
+                             group))
+                    else:
+                        try:
+                            self._run_batch(group)
+                        except Exception as exc:
+                            self._fail_undone(group, exc)
+            except Exception as exc:
+                self._fail_undone(batch, exc)
+            for f, group in futures:
+                try:
+                    f.result()
+                except Exception as exc:
+                    self._fail_undone(group, exc)
+        # post-shutdown: serve whatever was admitted before close()
+        tail = []
+        while True:
+            try:
+                item = self._admit.get_nowait()
+            except queue.Empty:
+                break
+            if item is not _SHUTDOWN:
+                tail.append(item)
+        for group in self._micro_batches(tail):
+            self._run_batch(group)
+
+    def _fail_undone(self, items: List[_Ticket], exc: Exception) -> None:
+        """Backstop for 'impossible' dispatch errors: fail whatever the
+        batch left unserved so no ticket blocks forever."""
+        for it in items:
+            if not it.done():
+                self._finalize(it, QueryResult(
+                    query_id=it.query_id, spec=it.spec, ok=False,
+                    error=f"dispatch failure: {exc!r}"))
+
+    def _micro_batches(self, items: List[_Ticket]) -> List[List[_Ticket]]:
+        """Group compatible requests; SMMS-bucket mixed sizes within a
+        compatibility group so a micro-batch holds similar-length work.
+
+        A spec whose metadata cannot even be read (malformed operands)
+        fails ITS ticket here — it must never kill the dispatcher, which
+        would hang every other pending query.
+        """
+        groups: Dict[tuple, List[_Ticket]] = collections.OrderedDict()
+        for it in items:
+            try:
+                key = it.spec.bucket_key()
+                _ = it.spec.size       # plan() below will need this too
+            except Exception as exc:
+                self._finalize(it, QueryResult(
+                    query_id=it.query_id, spec=it.spec, ok=False,
+                    error=f"malformed query spec: {exc!r}"))
+                continue
+            groups.setdefault(key, []).append(it)
+        out: List[List[_Ticket]] = []
+        for members in groups.values():
+            if len(members) <= 1:
+                out.append(members)
+                continue
+            plan = self._scheduler.plan([m.spec.size for m in members])
+            out.extend([[members[i] for i in idxs] for idxs in plan])
+        return out
+
+    # ---- execution ----------------------------------------------------
+    def _run_batch(self, items: List[_Ticket]) -> None:
+        if not items:
+            return
+        batch_id = next(self._batch_ids)
+        _tick("batches")
+        with self._lock:
+            self._counts["batches"] += 1
+        leaders: List[Tuple[_Ticket, str]] = []
+        for it in items:
+            try:
+                fp = it.spec.fingerprint()
+            except Exception as exc:   # malformed operand bytes: fail the
+                self._finalize(it, QueryResult(   # ticket, keep serving
+                    query_id=it.query_id, spec=it.spec, ok=False,
+                    error=f"unfingerprintable query spec: {exc!r}"))
+                continue
+            with self._inflight_lock:
+                waiting = self._inflight.get(fp)
+                if waiting is None:
+                    self._inflight[fp] = [it]
+                    leaders.append((it, fp))
+                else:
+                    waiting.append(it)
+        for leader, fp in leaders:
+            cached = self._cache_get(fp)
+            if cached is not None:
+                result = self._from_cache(cached, leader, batch_id)
+            else:
+                result = self._execute(leader, batch_id)
+                self._cache_put(fp, result)
+            with self._inflight_lock:
+                waiting = self._inflight.pop(fp)
+            for w in waiting:
+                self._finalize(w, result if w is leader
+                               else self._replica(result, w))
+
+    # ---- result LRU (content-addressed; pure algorithms => exact) -----
+    def _cache_get(self, fp: str) -> Optional[QueryResult]:
+        if self.result_cache_size <= 0:
+            return None
+        with self._results_lock:
+            hit = self._results.get(fp)
+            if hit is not None:
+                self._results.move_to_end(fp)
+            return hit
+
+    def _cache_put(self, fp: str, result: QueryResult) -> None:
+        if self.result_cache_size <= 0 or not result.ok:
+            return
+        # store a pristine report copy: the requester owns the delivered
+        # report object and may decorate it — that must not leak into
+        # later cache hits (each hit copies from this pristine one)
+        entry = dataclasses.replace(result,
+                                    report=_copy_report(result.report))
+        with self._results_lock:
+            self._results[fp] = entry
+            while len(self._results) > self.result_cache_size:
+                self._results.popitem(last=False)
+
+    def _from_cache(self, cached: QueryResult, it: _Ticket,
+                    batch_id: int) -> QueryResult:
+        _tick("result_cache_hits")
+        with self._lock:
+            self._counts["result_cache_hits"] += 1
+        return dataclasses.replace(
+            cached, query_id=it.query_id, spec=it.spec, batch_id=batch_id,
+            cached=True, coalesced=False, exec_s=0.0,
+            report=_copy_report(cached.report))
+
+    def _execute(self, it: _Ticket, batch_id: int) -> QueryResult:
+        spec = it.spec
+        t0 = time.monotonic()
+        try:
+            value, report = run_spec(spec, substrate=self.pool,
+                                     kernel_backend=self.kernel_backend)
+            ok, error = True, None
+        except Exception as exc:       # isolate failures per query
+            value, report, ok, error = None, None, False, repr(exc)
+        exec_s = time.monotonic() - t0
+        return QueryResult(query_id=it.query_id, spec=spec, ok=ok,
+                           value=value, report=report, error=error,
+                           batch_id=batch_id, exec_s=exec_s)
+
+    def _replica(self, result: QueryResult, w: _Ticket) -> QueryResult:
+        """A coalesced twin: same value, its own identity + report copy."""
+        _tick("coalesced")
+        with self._lock:
+            self._counts["coalesced"] += 1
+        return dataclasses.replace(
+            result, query_id=w.query_id, spec=w.spec, coalesced=True,
+            report=_copy_report(result.report))
+
+    def _finalize(self, it: _Ticket, result: QueryResult) -> None:
+        if not it.claim():        # already delivered (e.g. the backstop
+            return                # raced a still-running worker)
+        done = time.monotonic()
+        result.latency_s = done - it.submitted_at
+        with self._lock:
+            self._last_done = done
+            if result.ok:
+                self._counts["served"] += 1
+                if not result.coalesced and not result.cached:
+                    # a real execution (retries only counted once per run)
+                    self._counts["executed"] += 1
+                    self._counts["capacity_retries"] += \
+                        result.capacity_retries
+                self._latencies.append(result.latency_s)
+                _tick("served")
+            else:
+                self._counts["failed"] += 1
+                _tick("failed")
+        it._result = result
+        it._done.set()
+
+    # ---- metrics ------------------------------------------------------
+    def stats(self) -> ServeStats:
+        from repro.planner import planner_stats
+        now = planner_stats()
+        delta = {k: now.get(k, 0) - self._planner_base.get(k, 0)
+                 for k in set(now) | set(self._planner_base)}
+        pool_now = (self.pool.stats() if isinstance(self.pool,
+                                                    SubstratePool)
+                    else collections.Counter())
+        pool_stats = {k: pool_now.get(k, 0) - self._pool_base.get(k, 0)
+                      for k in set(pool_now) | set(self._pool_base)}
+        with self._lock:
+            lat = np.asarray(self._latencies, np.float64)
+            wall = ((self._last_done - self._first_submit)
+                    if self._first_submit is not None
+                    and self._last_done is not None else 0.0)
+            served = self._counts["served"]
+            hits = delta.get("cache_hits", 0)
+            misses = delta.get("cache_misses", 0)
+            return ServeStats(
+                served=served,
+                executed=self._counts["executed"],
+                failed=self._counts["failed"],
+                rejected=self._counts["rejected"],
+                coalesced=self._counts["coalesced"],
+                result_cache_hits=self._counts["result_cache_hits"],
+                batches=self._counts["batches"],
+                wall_s=wall,
+                qps=served / wall if wall > 0 else 0.0,
+                p50_latency_s=float(np.percentile(lat, 50)) if lat.size else 0.0,
+                p99_latency_s=float(np.percentile(lat, 99)) if lat.size else 0.0,
+                plan_cache_hits=hits,
+                plan_cache_misses=misses,
+                sketch_runs=delta.get("sketch_runs", 0),
+                plan_cache_hit_rate=(hits / (hits + misses)
+                                     if hits + misses else 0.0),
+                compiles=pool_stats.get("compiles", 0),
+                program_cache_hits=pool_stats.get("program_cache_hits", 0),
+                capacity_retries=self._counts["capacity_retries"],
+            )

@@ -27,10 +27,9 @@ def pairs(out):
 
 @pytest.mark.parametrize("t", [4, 7])
 @pytest.mark.parametrize("small_side", ["s", "t"])
-def test_broadcast_exact_both_orientations(t, small_side):
+def test_broadcast_exact_both_orientations(t, small_side, rng):
     """Either table may be the broadcast side; (s_row, t_row) orientation
     must survive the swap."""
-    rng = np.random.default_rng(t)
     ns, nt = 90, 260
     s_keys = rng.integers(0, 40, ns).astype(np.int32)
     t_keys = rng.integers(0, 40, nt).astype(np.int32)
@@ -45,11 +44,10 @@ def test_broadcast_exact_both_orientations(t, small_side):
     assert [p.name for p in report.phases] == ["broadcast+join"]
 
 
-def test_broadcast_one_round_network_counts():
+def test_broadcast_one_round_network_counts(rng):
     """The single phase's received count is the whole small table (valid
     rows only, pads excluded), on every machine."""
     ns, nt, t = 40, 400, 4
-    rng = np.random.default_rng(0)
     s_keys = rng.integers(0, 30, ns).astype(np.int32)
     t_keys = rng.integers(0, 30, nt).astype(np.int32)
     want = oracle_join(s_keys, t_keys)

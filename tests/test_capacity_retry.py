@@ -1,0 +1,111 @@
+"""Capacity-retry regression: adversarial placement -> exactly one retry.
+
+Theorem 1 bounds each machine's round-3 *receive total*, and the static
+per-pair tile capacity is derived from it — but an adversarial initial
+placement can aim one machine's ENTIRE shard at a single destination,
+overflowing the (src, dst) tile even though every receive total is fine.
+The recovery is the shared geometric ``run_with_capacity`` loop; this
+suite pins its contract: exactly one retry (attempts == 2) at exactly
+one doubling of the capacity factor, a bitwise-correct final answer,
+and the retry visible both on the AlphaKReport and in the serving
+engine's ServeStats.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import cluster
+from repro.cluster.capacity import (CapacityOverflowError, CapacityPolicy,
+                                    run_with_capacity)
+from repro.serve import QueryEngine, sort_query
+
+T, M = 4, 64
+
+
+def _clustered(rng):
+    """t tight clusters of m keys each; cluster k lives in (k+.1, k+.2)."""
+    return [np.sort(rng.uniform(k + 0.1, k + 0.2, M)).astype(np.float32)
+            for k in range(T)]
+
+
+def adversarial_shards(rng) -> np.ndarray:
+    """Machine i holds ONLY cluster (i+1) % t.
+
+    The Algorithm-1 boundaries (driven by the *global* distribution,
+    which is balanced) put each cluster in its own bucket — so every
+    machine must ship its whole shard to one destination: lens = m for
+    a single pair, far above the Theorem-1 tile cap of ~2m/t.
+    """
+    c = _clustered(rng)
+    return np.stack([c[(i + 1) % T] for i in range(T)])
+
+
+def benign_shards(rng) -> np.ndarray:
+    """Same global data, dealt uniformly at random: ~m/t per pair."""
+    flat = np.concatenate(_clustered(rng))
+    rng.shuffle(flat)
+    return flat.reshape(T, M)
+
+
+def test_adversarial_placement_forces_exactly_one_retry(rng):
+    x = adversarial_shards(rng)
+    (keys, _), rep = cluster.sort(jnp.asarray(x), algorithm="smms")
+    # exactly one geometric retry: attempt 1 overflows the per-pair tile,
+    # attempt 2 (factor doubled) fits m per pair
+    assert rep.capacity_attempts == 2
+    base = CapacityPolicy.smms(T * M, T, 2)
+    assert rep.cap_factor == pytest.approx(base.first_factor * base.growth)
+    # ... and the answer is still exact
+    np.testing.assert_array_equal(np.asarray(keys), np.sort(x.reshape(-1)))
+
+
+def test_benign_placement_needs_no_retry(rng):
+    x = benign_shards(rng)
+    (keys, _), rep = cluster.sort(jnp.asarray(x), algorithm="smms")
+    assert rep.capacity_attempts == 1
+    np.testing.assert_array_equal(np.asarray(keys), np.sort(x.reshape(-1)))
+
+
+def test_retry_is_visible_in_serve_stats(rng):
+    adv = adversarial_shards(rng)
+    ben = benign_shards(rng)
+    with QueryEngine(max_batch=4) as eng:
+        res = eng.run([sort_query(jnp.asarray(adv), algorithm="smms"),
+                       sort_query(jnp.asarray(ben), algorithm="smms")])
+        stats = eng.stats()
+    assert all(r.ok for r in res)
+    assert res[0].capacity_retries == 1
+    assert res[0].report.capacity_attempts == 2
+    assert res[1].capacity_retries == 0
+    assert stats.capacity_retries == 1
+    np.testing.assert_array_equal(np.asarray(res[0].value[0]),
+                                  np.sort(adv.reshape(-1)))
+
+
+def test_explicit_cap_factor_pins_buffer_and_raises(rng):
+    """A caller-pinned cap_factor must NOT silently grow: the schedule is
+    exhausted immediately and the overflow surfaces as an error."""
+    x = adversarial_shards(rng)
+
+    def attempt(factor):
+        (out, rep) = cluster.sort(jnp.asarray(x), algorithm="smms",
+                                  cap_factor=factor)
+        return (out, rep), 0  # unreachable when sort itself raises
+
+    with pytest.raises(CapacityOverflowError):
+        # the front door wires cap_factor -> CapacityPolicy.fixed
+        cluster.sort(jnp.asarray(x), algorithm="smms", cap_factor=1.5)
+
+
+def test_run_with_capacity_attempt_accounting():
+    calls = []
+
+    def attempt(factor):
+        calls.append(factor)
+        return ("ok", factor), (0 if len(calls) >= 2 else 7)
+
+    (res, factor_used), factor, attempts = run_with_capacity(
+        attempt, CapacityPolicy(base_factor=1.0, slack=1.0, growth=2.0,
+                                max_retries=3))
+    assert attempts == 2 and calls == [1.0, 2.0]
+    assert factor == factor_used == 2.0

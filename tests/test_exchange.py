@@ -28,9 +28,8 @@ def test_build_send_buffer_pads_and_counts_drops():
     assert int(dropped) == 1
 
 
-def test_exchange_roundtrip_under_vmap():
+def test_exchange_roundtrip_under_vmap(rng):
     t, m = 4, 64
-    rng = np.random.default_rng(0)
     x = np.sort(rng.normal(size=(t, m)).astype(np.float32), axis=1)
     interior = jnp.asarray(np.quantile(x.reshape(-1), [0.25, 0.5, 0.75]),
                            jnp.float32)
@@ -69,14 +68,13 @@ def test_property_exchange_conserves_or_drops(t, m, seed):
 # dropped) and version gating
 # ---------------------------------------------------------------------------
 
-def test_ragged_backend_does_not_silently_drop_values():
+def test_ragged_backend_does_not_silently_drop_values(rng):
     """backend='ragged' must either route values or fail loudly."""
     from repro.cluster import compat
     from repro.core.exchange import ragged_exchange
 
     t, m = 4, 32
-    x = jnp.sort(jnp.asarray(np.random.default_rng(2).normal(size=m),
-                             jnp.float32))
+    x = jnp.sort(jnp.asarray(rng.normal(size=m), jnp.float32))
     vals = jnp.arange(m, dtype=jnp.int32)
     interior = jnp.asarray([-0.5, 0.0, 0.5], jnp.float32)
 
@@ -109,9 +107,8 @@ def test_ragged_backend_does_not_silently_drop_values():
     assert txt.count("ragged-all-to-all") >= 2, txt
 
 
-def test_unknown_backend_rejected():
-    x = jnp.sort(jnp.asarray(np.random.default_rng(0).normal(size=8),
-                             jnp.float32))
+def test_unknown_backend_rejected(rng):
+    x = jnp.sort(jnp.asarray(rng.normal(size=8), jnp.float32))
     with pytest.raises(ValueError, match="unknown exchange backend"):
         jax.vmap(lambda xl: exchange_sorted_segments(
             xl, jnp.asarray([0.0]), axis_name="i", t=2, cap_factor=2.0,

@@ -1,0 +1,180 @@
+"""Property-based differential suite for the auto-planner.
+
+Randomized workloads (uniform / Zipf / hot-key mixtures over varying t
+and m) drive two invariants the planner advertises:
+
+* **The 2x envelope** (DESIGN §7, pinned by the acceptance grid): the
+  chosen algorithm's *measured* (alpha, k) never exceeds its
+  *predicted* bound by more than the documented 2x — and the answer it
+  dispatches to is exactly correct (differential against the
+  numpy oracle).
+* **Permutation invariance**: the cost model scores content, not
+  layout.  Re-ordering the data within each shard leaves every
+  candidate's CostEstimate — and therefore the score ordering and the
+  winner — bitwise unchanged (the sketches are one-pass but
+  order-free: sorted-runs counts, CountMin sums, KMV minima).
+
+Runs under hypothesis when installed (the conftest pins a derandomized
+``ci`` profile) and under the deterministic ``tests/_prop.py`` shim
+otherwise, so the examples are identical run-to-run either way.
+"""
+import collections
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro import cluster
+from repro.cluster.substrate import VmapSubstrate
+from repro.data import scalar_skew_tables, zipf_tables
+from repro.planner import join_costs, select, sort_costs
+from repro.planner.sketch import profile_join_tables, profile_sorted_shards
+from repro.core.localjoin import MASKED_KEY
+
+from _prop import given, settings, st
+
+ENVELOPE = 2.0          # the documented predicted-vs-measured bound
+T_CHOICES = (4, 8)
+M_CHOICES = (64, 128, 256)
+
+
+def _sort_input(seed: int, t: int, m: int, flavor: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    n = t * m
+    if flavor == 0:        # uniform keys
+        x = rng.uniform(0.0, 1000.0, n).astype(np.float32)
+    elif flavor == 1:      # lumpy: a few dense clusters
+        centers = rng.uniform(0, 1000, 8)
+        x = (centers[rng.integers(0, 8, n)]
+             + rng.normal(0, 1.0, n)).astype(np.float32)
+    else:                  # duplicate-heavy: one key at ~20% of the data
+        x = rng.uniform(0.0, 1000.0, n).astype(np.float32)
+        x[: n // 5] = np.float32(500.0)
+    rng.shuffle(x)
+    return x.reshape(t, m)
+
+
+def _join_tables(seed: int, flavor: int):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(200, 400))
+    if flavor == 0:
+        return zipf_tables(n, n, theta=1.0, seed=seed, domain=max(n // 8, 8))
+    if flavor == 1:
+        return zipf_tables(n, n, theta=-0.5, seed=seed,
+                           domain=max(n // 8, 8))
+    return scalar_skew_tables(n, max(n // 8, 4), max(n // 16, 2), seed=seed)
+
+
+def _oracle_pairs(s_keys, t_keys):
+    by_key = collections.defaultdict(list)
+    for i, k in enumerate(np.asarray(t_keys).tolist()):
+        by_key[k].append(i)
+    pairs = collections.Counter()
+    for i, k in enumerate(np.asarray(s_keys).tolist()):
+        for j in by_key.get(k, ()):
+            pairs[(i, j)] += 1
+    return pairs
+
+
+def _result_pairs(out):
+    s = np.asarray(out.s_rows).reshape(-1)
+    t = np.asarray(out.t_rows).reshape(-1)
+    v = np.asarray(out.valid).reshape(-1).astype(bool)
+    return collections.Counter(zip(s[v].tolist(), t[v].tolist()))
+
+
+# ---------------------------------------------------------------------------
+# the 2x envelope + differential correctness
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6)
+@given(st.integers(0, 10_000), st.integers(0, 1), st.integers(0, 2),
+       st.integers(0, 2))
+def test_auto_sort_within_envelope_and_exact(seed, t_idx, m_idx, flavor):
+    t, m = T_CHOICES[t_idx], M_CHOICES[m_idx]
+    x = _sort_input(seed, t, m, flavor)
+    (keys, _), rep = cluster.sort(jnp.asarray(x), algorithm="auto")
+    np.testing.assert_array_equal(np.asarray(keys), np.sort(x.reshape(-1)))
+    assert rep.alpha == rep.predicted_alpha
+    assert rep.k_workload <= ENVELOPE * rep.predicted_k + 1e-9, (
+        t, m, flavor, rep.query_plan.algorithm,
+        rep.k_workload, rep.predicted_k)
+
+
+@settings(max_examples=6)
+@given(st.integers(0, 10_000), st.integers(0, 1), st.integers(0, 2))
+def test_auto_join_within_envelope_and_exact(seed, t_idx, flavor):
+    t = T_CHOICES[t_idx]
+    s_keys, t_keys = _join_tables(seed, flavor)
+    rows_s = np.arange(len(s_keys))
+    rows_t = np.arange(len(t_keys))
+    out, rep = cluster.join(s_keys, rows_s, t_keys, rows_t,
+                            algorithm="auto", t_machines=t)
+    assert _result_pairs(out) == _oracle_pairs(s_keys, t_keys), (
+        flavor, rep.query_plan.algorithm)
+    assert rep.alpha == rep.predicted_alpha
+    assert rep.k_workload <= ENVELOPE * rep.predicted_k + 1e-9, (
+        t, flavor, rep.query_plan.algorithm,
+        rep.k_workload, rep.predicted_k)
+
+
+# ---------------------------------------------------------------------------
+# permutation invariance of the cost model
+# ---------------------------------------------------------------------------
+
+def _ranking(costs):
+    return [c.algorithm for c in sorted(costs.values(),
+                                        key=lambda c: c.score)]
+
+
+@settings(max_examples=8)
+@given(st.integers(0, 10_000), st.integers(0, 1), st.integers(0, 2))
+def test_sort_cost_ordering_invariant_under_shard_permutation(
+        seed, t_idx, flavor):
+    t, m = T_CHOICES[t_idx], 256
+    x = _sort_input(seed, t, m, flavor)
+    perm_rng = np.random.default_rng(seed + 1)
+    xp = np.stack([row[perm_rng.permutation(m)] for row in x])
+    sub = VmapSubstrate(t)
+    prof, _ = profile_sorted_shards(jnp.asarray(x), sub)
+    prof_p, _ = profile_sorted_shards(jnp.asarray(xp), sub)
+    costs, costs_p = sort_costs(prof, t), sort_costs(prof_p, t)
+    assert _ranking(costs) == _ranking(costs_p)
+    for alg in costs:
+        assert costs[alg].score == costs_p[alg].score, alg
+        assert costs[alg].k_workload == costs_p[alg].k_workload, alg
+    assert select(costs).algorithm == select(costs_p).algorithm
+
+
+@settings(max_examples=8)
+@given(st.integers(0, 10_000), st.integers(0, 1), st.integers(0, 2))
+def test_join_cost_ordering_invariant_under_shard_permutation(
+        seed, t_idx, flavor):
+    t = T_CHOICES[t_idx]
+    s_keys, t_keys = _join_tables(seed, flavor)
+    # shard-local permutation: the planner deals keys to shards in
+    # contiguous blocks of ceil(n/t), so permute inside each block
+    perm_rng = np.random.default_rng(seed + 2)
+
+    def shard_permute(keys):
+        keys = np.asarray(keys)
+        block = -(-len(keys) // t)
+        out = keys.copy()
+        for lo in range(0, len(keys), block):
+            hi = min(lo + block, len(keys))
+            out[lo:hi] = out[lo:hi][perm_rng.permutation(hi - lo)]
+        return out
+
+    sub = VmapSubstrate(t)
+    prof, _ = profile_join_tables(
+        np.asarray(s_keys, np.int32), np.asarray(t_keys, np.int32), t, sub,
+        masked=int(MASKED_KEY))
+    prof_p, _ = profile_join_tables(
+        np.asarray(shard_permute(s_keys), np.int32),
+        np.asarray(shard_permute(t_keys), np.int32), t, sub,
+        masked=int(MASKED_KEY))
+    costs, costs_p = join_costs(prof, t), join_costs(prof_p, t)
+    assert _ranking(costs) == _ranking(costs_p)
+    for alg in costs:
+        assert costs[alg].score == costs_p[alg].score, alg
+        assert costs[alg].feasible == costs_p[alg].feasible, alg
+    assert select(costs).algorithm == select(costs_p).algorithm

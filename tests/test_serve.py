@@ -1,0 +1,281 @@
+"""Serving engine: concurrency stress, coalescing, backpressure, stats.
+
+The contract under test: pushing a mixed sort/join trace through
+``QueryEngine`` — sequentially, concurrently from N submitter threads,
+with micro-batching and coalescing, over a shared jit substrate pool —
+produces results **bitwise identical** to one-shot sequential
+``cluster.*`` calls, with race-free plan-cache statistics and no state
+shared between requests.  Runs under both executors: the default
+jit-vmap pool and a 1-device ShardMapSubstrate pool.
+"""
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.cluster import ShardMapSubstrate, SubstratePool
+from repro.planner import planner_stats
+from repro.serve import (AdmissionError, EngineClosedError, QueryEngine,
+                         join_query, sort_query)
+from repro.serve.query import SERVE_COUNTERS, run_spec
+from repro.data import uniform_keys, zipf_tables
+
+
+def make_trace(t: int, rng):
+    """A mixed trace: fixed + auto algorithms, repeated queries, two sizes."""
+    m = 128
+    xs = [jnp.asarray(uniform_keys(t * m, seed=int(rng.integers(1 << 30)))
+                      .reshape(t, m)) for _ in range(2)]
+    xl = jnp.asarray(uniform_keys(t * 2 * m,
+                                  seed=int(rng.integers(1 << 30)))
+                     .reshape(t, 2 * m))
+    sk, tk = zipf_tables(300, 300, theta=0.5,
+                         seed=int(rng.integers(1 << 30)), domain=40)
+    rows = np.arange(300)
+    uk, ut = zipf_tables(240, 240, theta=1.0,
+                         seed=int(rng.integers(1 << 30)), domain=60)
+    urows = np.arange(240)
+    trace = [
+        sort_query(xs[0], algorithm="smms"),
+        sort_query(xs[1], algorithm="terasort", seed=3),
+        sort_query(xs[0], algorithm="auto"),
+        sort_query(xl, algorithm="smms"),
+        join_query(sk, rows, tk, rows, t_machines=t, algorithm="statjoin"),
+        join_query(sk, rows, tk, rows, t_machines=t, algorithm="randjoin",
+                   seed=5),
+        join_query(uk, urows, ut, urows, t_machines=t,
+                   algorithm="broadcast"),
+        join_query(uk, urows, ut, urows, t_machines=t, algorithm="auto"),
+        # repeats: the serving path must coalesce or plan-cache these
+        sort_query(xs[0], algorithm="auto"),
+        join_query(sk, rows, tk, rows, t_machines=t, algorithm="statjoin"),
+    ]
+    return trace
+
+
+def run_direct(spec):
+    """The sequential one-shot baseline: a plain cluster.* call."""
+    return run_spec(spec)
+
+
+def assert_value_equal(got, want, ctx=""):
+    flat_g = [x for x in (got if isinstance(got, tuple) else tuple(got))]
+    flat_w = [x for x in (want if isinstance(want, tuple) else tuple(want))]
+    assert len(flat_g) == len(flat_w), ctx
+    for g, w in zip(flat_g, flat_w):
+        if g is None or w is None:
+            assert g is w, ctx
+        else:
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                          err_msg=ctx)
+
+
+POOLS = {
+    "vmap": lambda: SubstratePool(),
+    "shardmap1": lambda: SubstratePool(
+        make=lambda *axes: ShardMapSubstrate(*axes)),
+}
+MODE_T = {"vmap": 4, "shardmap1": 1}
+
+
+@pytest.mark.parametrize("mode", sorted(POOLS))
+def test_engine_sequential_matches_direct(mode, rng):
+    trace = make_trace(MODE_T[mode], rng)
+    want = [run_direct(s) for s in trace]
+    with QueryEngine(pool=POOLS[mode](), max_batch=4) as eng:
+        results = eng.run(trace)
+    for i, (r, (w_val, w_rep)) in enumerate(zip(results, want)):
+        assert r.ok, (i, r.error)
+        assert_value_equal(r.value, w_val, ctx=f"query {i} ({mode})")
+        assert r.report.k_workload == w_rep.k_workload, i
+        assert r.report.k_network == w_rep.k_network, i
+        assert r.report.alpha == w_rep.alpha, i
+
+
+@pytest.mark.parametrize("mode", sorted(POOLS))
+def test_concurrent_submitters_bitwise_match_sequential(mode, rng):
+    t = MODE_T[mode]
+    trace = make_trace(t, rng)
+    want = [run_direct(s) for s in trace]
+    unique_auto = {s.fingerprint() for s in trace
+                   if dict(s.params).get("algorithm") == "auto"}
+
+    collected = {}
+    errors = []
+    with QueryEngine(pool=POOLS[mode](), max_batch=4, workers=2,
+                     batch_window_s=0.01) as eng:
+        def submitter(indices):
+            try:
+                tickets = [(i, eng.submit(trace[i])) for i in indices]
+                for i, tk in tickets:
+                    collected[i] = tk.result(timeout=300)
+            except Exception as exc:  # pragma: no cover - surfaced below
+                errors.append(exc)
+
+        # interleaved slices: every thread mixes sorts and joins
+        n_threads = 5
+        threads = [threading.Thread(target=submitter,
+                                    args=(range(k, len(trace), n_threads),))
+                   for k in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        stats = eng.stats()
+
+    assert not errors
+    assert len(collected) == len(trace)
+    for i, (w_val, w_rep) in enumerate(want):
+        r = collected[i]
+        assert r.ok, (i, r.error)
+        assert_value_equal(r.value, w_val, ctx=f"query {i} ({mode})")
+        assert r.report.k_workload == w_rep.k_workload, i
+
+    # race-free planner accounting: across the baseline AND the whole
+    # concurrent engine run, each unique auto query sketched exactly
+    # once — the direct pass populates the content-keyed plan cache and
+    # every engine execution must coalesce or hit it, never re-sketch
+    st = planner_stats()
+    assert st.get("sketch_runs", 0) == len(unique_auto)
+    assert st.get("cache_misses", 0) == len(unique_auto)
+    assert stats.served == len(trace)
+    assert stats.failed == 0
+    # every ok result is exactly one of: executed / coalesced / cached
+    assert (stats.executed + stats.coalesced
+            + stats.result_cache_hits) == len(trace)
+    # serve counters are consistent (no lost or double-counted ticks)
+    assert SERVE_COUNTERS["submitted"] == len(trace)
+    assert SERVE_COUNTERS["served"] == len(trace)
+    assert SERVE_COUNTERS["admitted"] == len(trace)
+
+
+def test_coalescing_serves_identical_queries_once(rng):
+    t = 4
+    x = jnp.asarray(uniform_keys(t * 128, seed=7).reshape(t, 128))
+    spec = sort_query(x, algorithm="smms")
+    with QueryEngine(max_batch=8, batch_window_s=0.05) as eng:
+        results = eng.run([spec] * 6)
+        stats = eng.stats()
+    assert all(r.ok for r in results)
+    for r in results[1:]:
+        assert_value_equal(r.value, results[0].value)
+    # one execution served all six (in-flight coalescing or result LRU)
+    assert stats.executed < 6
+    assert stats.executed + stats.coalesced + stats.result_cache_hits == 6
+    # ... but every request owns its result: mutating one report must
+    # not be visible through another (no cross-request state)
+    ids = {id(r.report) for r in results}
+    assert len(ids) == 6
+    results[0].report.poison = "x"
+    assert not any(hasattr(r.report, "poison") for r in results[1:])
+
+
+def test_result_cache_across_batches(rng):
+    """A repeat of a finished query is served from the result LRU —
+    bitwise-equal, flagged, with an isolated report — and turning the
+    cache off forces re-execution."""
+    t = 4
+    x = jnp.asarray(uniform_keys(t * 128, seed=21).reshape(t, 128))
+    spec = sort_query(x, algorithm="smms")
+    with QueryEngine() as eng:
+        [first] = eng.run([spec])
+        first.report.poison = "x"          # requester mutates its report
+        [second] = eng.run([spec])         # separate batch: not in flight
+        stats = eng.stats()
+    assert first.ok and second.ok
+    assert not first.cached and second.cached
+    assert stats.executed == 1 and stats.result_cache_hits == 1
+    assert_value_equal(second.value, first.value)
+    assert not hasattr(second.report, "poison")   # pristine copy served
+    assert second.report.k_workload == first.report.k_workload
+
+    with QueryEngine(result_cache_size=0) as eng:
+        [a] = eng.run([spec])
+        [b] = eng.run([spec])
+        stats = eng.stats()
+    assert stats.executed == 2 and stats.result_cache_hits == 0
+    assert not b.cached
+    assert_value_equal(a.value, b.value)
+
+
+def test_backpressure_rejects_and_recovers(rng):
+    t = 4
+    x = jnp.asarray(uniform_keys(t * 64, seed=9).reshape(t, 64))
+    eng = QueryEngine(max_pending=3, autostart=False)
+    tickets = [eng.submit(sort_query(x, algorithm="smms", tag=str(i)))
+               for i in range(3)]
+    with pytest.raises(AdmissionError):
+        eng.submit(sort_query(x, algorithm="smms", tag="overflow"),
+                   block=False)
+    eng.start()
+    results = [tk.result(timeout=300) for tk in tickets]
+    eng.close()
+    assert all(r.ok for r in results)
+    assert eng.stats().rejected == 1
+    assert SERVE_COUNTERS["rejected"] == 1
+    with pytest.raises(EngineClosedError):
+        eng.submit(sort_query(x))
+
+
+def test_malformed_spec_cannot_kill_the_dispatcher(rng):
+    """A spec whose operands can't even be shaped (ragged list) must fail
+    its own ticket — not the dispatcher thread, which would hang every
+    other query."""
+    t = 4
+    bad = sort_query([[1.0, 2.0, 3.0], [4.0, 5.0]], algorithm="smms")
+    good = sort_query(jnp.asarray(uniform_keys(t * 64, seed=17)
+                                  .reshape(t, 64)), algorithm="smms")
+    with QueryEngine() as eng:
+        r_bad, r_good = eng.run([bad, good], timeout=300)
+    assert not r_bad.ok and r_bad.error
+    assert r_good.ok
+
+
+def test_failed_query_is_isolated(rng):
+    t = 4
+    good = sort_query(jnp.asarray(uniform_keys(t * 64, seed=11)
+                                  .reshape(t, 64)), algorithm="smms")
+    bad = sort_query(jnp.asarray(uniform_keys(t * 64, seed=12)
+                                 .reshape(t, 64)), algorithm="quicksort")
+    with QueryEngine() as eng:
+        r_good, r_bad, r_good2 = eng.run([good, bad, good])
+        stats = eng.stats()
+    assert r_good.ok and r_good2.ok
+    assert not r_bad.ok and "quicksort" in r_bad.error
+    assert r_bad.report is None
+    assert stats.failed == 1 and stats.served == 2
+
+
+def test_shared_pool_skips_recompiles_across_engines(rng):
+    t = 4
+    x = jnp.asarray(uniform_keys(t * 128, seed=13).reshape(t, 128))
+    pool = SubstratePool()
+    trace = [sort_query(x, algorithm="smms"),
+             sort_query(x, algorithm="terasort", seed=1)]
+    with QueryEngine(pool=pool) as eng:
+        assert all(r.ok for r in eng.run(trace))
+        first = eng.stats()
+    assert first.compiles > 0
+    with QueryEngine(pool=pool) as eng2:
+        assert all(r.ok for r in eng2.run(trace))
+        second = eng2.stats()
+    # warm pool: stats are per-engine deltas, so the second engine shows
+    # ZERO recompiles and pure program-cache hits
+    assert second.compiles == 0
+    assert second.program_cache_hits > 0
+
+
+def test_serve_stats_shape(rng):
+    t = 4
+    x = jnp.asarray(uniform_keys(t * 128, seed=15).reshape(t, 128))
+    with QueryEngine() as eng:
+        eng.run([sort_query(x, algorithm="auto"),
+                 sort_query(x, algorithm="auto")])
+        stats = eng.stats()
+    s = stats.summary()
+    assert s["served"] == 2 and s["qps"] > 0
+    assert 0 <= s["p50_latency_s"] <= s["p99_latency_s"]
+    # second identical query: coalesced in flight or a plan-cache hit
+    assert stats.sketch_runs == 1
+    assert 0.0 <= s["plan_cache_hit_rate"] <= 1.0

@@ -21,10 +21,9 @@ from repro.serve.batching import LengthBucketScheduler
 # optimizer
 # ---------------------------------------------------------------------------
 
-def test_adamw_minimizes_quadratic():
+def test_adamw_minimizes_quadratic(rng):
     cfg = AdamWConfig(lr=0.05, weight_decay=0.0, clip_norm=None)
-    target = jnp.asarray(np.random.default_rng(0).normal(size=(4, 4)),
-                         jnp.float32)
+    target = jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)
     params = {"w": jnp.zeros((4, 4))}
     state = adamw_init(params, cfg)
     loss = lambda p: jnp.sum((p["w"] - target) ** 2)
@@ -55,10 +54,9 @@ def test_cosine_schedule_shape():
 # gradient compression
 # ---------------------------------------------------------------------------
 
-def test_error_feedback_unbiased_over_time():
+def test_error_feedback_unbiased_over_time(rng):
     """With error feedback, the accumulated quantization error stays
     bounded: sum of dequantized grads tracks sum of true grads."""
-    rng = np.random.default_rng(3)
     grads = [{"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
              for _ in range(50)]
     res = compress_state_init(grads[0])
@@ -73,10 +71,9 @@ def test_error_feedback_unbiased_over_time():
     assert drift.max() < 0.1, drift.max()
 
 
-def test_compressed_psum_matches_mean():
+def test_compressed_psum_matches_mean(rng):
     t = 4
-    x = jnp.asarray(np.random.default_rng(1).normal(size=(t, 128)),
-                    jnp.float32)
+    x = jnp.asarray(rng.normal(size=(t, 128)), jnp.float32)
     res = jnp.zeros((t, 128))
     out, _ = jax.vmap(lambda xi, ri: compressed_psum(xi, ri, "i"),
                       axis_name="i")(x, res)
@@ -123,8 +120,7 @@ def test_pipeline_deterministic_and_stateless():
     np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
 
 
-def test_smms_length_bucketing_balances_tokens():
-    rng = np.random.default_rng(5)
+def test_smms_length_bucketing_balances_tokens(rng):
     lengths = rng.integers(10, 2000, size=1024)
     order, bucket_id, report = smms_length_bucketing(lengths, 8)
     assert len(order) == 1024
@@ -138,8 +134,7 @@ def test_smms_length_bucketing_balances_tokens():
 # serving scheduler
 # ---------------------------------------------------------------------------
 
-def test_scheduler_reduces_padding_waste():
-    rng = np.random.default_rng(11)
+def test_scheduler_reduces_padding_waste(rng):
     lengths = np.concatenate([rng.integers(10, 50, 64),
                               rng.integers(900, 1000, 64)])
     rng.shuffle(lengths)
