@@ -17,12 +17,29 @@ import jax
 import jax.numpy as jnp
 
 from repro import cluster
+from repro.cluster.substrate import reset_default_pool
 from repro.core.alpha_k import smms_workload_bound, terasort_workload_bound
-from repro.data import lidar_like, uniform_keys
+from repro.data import lidar_like, uniform_keys, zipf_tables
 from repro.kernels import ops
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           os.pardir, "BENCH_sort.json")
+
+# Per-trace Pallas dispatch budget for one query through the front door
+# — the fusion contract, enforced by run_dispatch_budget (CI perf-smoke)
+# so a refactor cannot silently re-split a fused kernel.  smms: Round-1
+# sort + partition search + receive merge.  terasort: fused
+# sort_partition + receive merge.  The joins ride localjoin's
+# sort_kv + three searches; randjoin adds one fused routing dispatch
+# per table side.
+DISPATCH_BUDGET = {
+    "smms": 3,
+    "terasort": 2,
+    "statjoin": 4,
+    "repartition": 4,
+    "broadcast": 4,
+    "randjoin": 6,
+}
 
 
 def run(report_rows: List[str]) -> None:
@@ -104,46 +121,120 @@ def run_kernel_compare(report_rows: List[str]) -> None:
         f"pallas_us={ker_us:.0f},equal=1")
 
     # ---- end-to-end: the cluster front door ------------------------------
+    # The front door's default substrate is the shared jit pool, so a
+    # warmed query runs its whole multi-round body as ONE cached
+    # compiled program; best-of-N timing measures that warm path (what
+    # sustained traffic pays), not trace/compile.  The first (cold)
+    # pallas call doubles as the dispatch-count probe.
+    reps = 7
+    regression = False
     t, m = 8, 1 << 10
     x = jnp.asarray(uniform_keys(t * m, seed=6).reshape(t, m))
+    reset_default_pool()
+
+    def best_of(**kw):
+        """Best of ``reps`` warm runs (the cold compile already happened)."""
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.time()
+            jax.block_until_ready(cluster.sort(x, **kw))
+            best = min(best, (time.time() - t0) * 1e6)
+        return best
+
     for algorithm in ("smms", "terasort"):
         (ref_keys, _), rep_ref = cluster.sort(x, algorithm=algorithm,
                                               kernel_backend="reference")
-        t0 = time.time()
-        (ref_keys, _), rep_ref = cluster.sort(x, algorithm=algorithm,
-                                              kernel_backend="reference")
-        ref_us = (time.time() - t0) * 1e6
+        ref_us = best_of(algorithm=algorithm, kernel_backend="reference")
         ops.reset_dispatch_counts()
         (ker_keys, _), rep_ker = cluster.sort(x, algorithm=algorithm,
                                               kernel_backend="pallas")
-        t0 = time.time()
-        (ker_keys, _), rep_ker = cluster.sort(x, algorithm=algorithm,
-                                              kernel_backend="pallas")
-        ker_us = (time.time() - t0) * 1e6
         kernel_calls = sum(c for (op, path), c in ops.DISPATCH_COUNTS.items()
                            if path == "pallas")
+        ker_us = best_of(algorithm=algorithm, kernel_backend="pallas")
         equal = bool(np.array_equal(np.asarray(ref_keys),
                                     np.asarray(ker_keys)))
         assert equal, f"{algorithm}: kernel path diverged from reference"
         assert rep_ref.k_workload == rep_ker.k_workload
+        slower = bool(ker_us > ref_us)
+        regression |= slower
         entries.append({"op": f"cluster.sort[{algorithm}]",
                         "shape": f"{t}x{m}",
                         "reference_us": round(ref_us),
                         "pallas_us": round(ker_us),
                         "pallas_dispatches": int(kernel_calls),
+                        "dispatch_budget": DISPATCH_BUDGET[algorithm],
                         "bitwise_equal": equal,
+                        "regression": slower,
                         "k_workload": rep_ker.k_workload})
         report_rows.append(
             f"kernel_compare,cluster.sort,{algorithm},t={t},"
-            f"ref_us={ref_us:.0f},pallas_us={ker_us:.0f},equal=1")
+            f"ref_us={ref_us:.0f},pallas_us={ker_us:.0f},equal=1,"
+            f"regression={int(slower)}")
+        assert kernel_calls <= DISPATCH_BUDGET[algorithm], (
+            f"{algorithm}: {kernel_calls} pallas dispatches exceed the "
+            f"fusion budget {DISPATCH_BUDGET[algorithm]}")
 
     with open(BENCH_JSON, "w") as f:
         json.dump({"suite": "bench_sort.run_kernel_compare",
                    "interpret_mode": ops.INTERPRET,
                    "note": ("interpret-mode Pallas latencies are a "
-                            "correctness datapoint, not TPU performance"),
+                            "correctness datapoint, not TPU performance; "
+                            "end-to-end rows time the warm fused front "
+                            "door, best of {} runs".format(reps)),
+                   "regression": regression,
                    "entries": entries}, f, indent=2)
     report_rows.append(f"kernel_compare,json,{os.path.abspath(BENCH_JSON)}")
+    # fail LOUDLY (nonzero exit through the harness) when the kernel
+    # path lost end-to-end — the silent-regression mode this suite
+    # previously recorded without complaint
+    assert not regression, (
+        "kernel path slower than reference end-to-end; see "
+        f"{os.path.abspath(BENCH_JSON)} (regression: true)")
+
+
+def run_dispatch_budget(report_rows: List[str]) -> None:
+    """Per-algorithm Pallas dispatch-count budget — the fusion contract.
+
+    One cold query per algorithm through the real front door (fresh
+    pool, so the single jit trace ticks DISPATCH_COUNTS exactly once
+    per op); asserts the pallas tick total stays within
+    ``DISPATCH_BUDGET`` so un-fusing a kernel chain cannot land
+    silently.  Small shapes: this is a CI smoke gate, not a timing run.
+    """
+    t, m = 4, 256
+    x = jnp.asarray(uniform_keys(t * m, seed=9).reshape(t, m))
+    n = 240
+    s_keys, t_keys = zipf_tables(n, n, theta=0.5, seed=9, domain=40)
+    rows = np.arange(n)
+
+    def sort_query(algorithm):
+        return lambda: cluster.sort(x, algorithm=algorithm,
+                                    kernel_backend="pallas")
+
+    def join_query(algorithm):
+        return lambda: cluster.join(s_keys, rows, t_keys, rows,
+                                    algorithm=algorithm, t_machines=t,
+                                    kernel_backend="pallas")
+
+    queries = {"smms": sort_query("smms"),
+               "terasort": sort_query("terasort"),
+               "statjoin": join_query("statjoin"),
+               "repartition": join_query("repartition"),
+               "broadcast": join_query("broadcast"),
+               "randjoin": join_query("randjoin")}
+    for algorithm, query in queries.items():
+        reset_default_pool()
+        ops.reset_dispatch_counts()
+        query()
+        ticks = sum(c for (op, path), c in ops.DISPATCH_COUNTS.items()
+                    if path == "pallas")
+        budget = DISPATCH_BUDGET[algorithm]
+        report_rows.append(f"dispatch_budget,{algorithm},ticks={ticks},"
+                           f"budget={budget},ok={int(0 < ticks <= budget)}")
+        assert 0 < ticks <= budget, (
+            f"{algorithm}: {ticks} pallas dispatches vs budget {budget}: "
+            f"{dict(ops.DISPATCH_COUNTS)}")
+    reset_default_pool()
 
 
 def run_scaling(report_rows: List[str]) -> None:

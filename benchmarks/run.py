@@ -1,7 +1,7 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,...,derived`` CSV rows.  Every row corresponds to a paper
-table/figure (see DESIGN.md §11) or a beyond-paper integration measurement.
+table/figure (see DESIGN.md §12) or a beyond-paper integration measurement.
 Assertions inside the benches enforce the paper's claims (SMMS balance,
 Theorem 6 bound, statistics-collection overhead, ...).
 """
@@ -22,6 +22,7 @@ def main() -> None:
         ("Table 1: sort scaling", bench_sort.run_scaling),
         ("Kernel dispatch on/off -> BENCH_sort.json",
          bench_sort.run_kernel_compare),
+        ("Fusion dispatch-count budget", bench_sort.run_dispatch_budget),
         ("Figs 11-14: join balance+runtime", bench_join.run),
         ("Tables 2-3/Fig 15: StatJoin stats overhead",
          bench_join.run_statjoin_overhead),

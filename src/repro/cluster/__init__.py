@@ -20,7 +20,8 @@ from .api import AUTO, JOIN_ALGORITHMS, SORT_ALGORITHMS, join, sort
 from .capacity import CapacityOverflowError, CapacityPolicy, run_with_capacity
 from .collectives import CollectiveTape
 from .substrate import (ShardMapSubstrate, Substrate, SubstratePool,
-                        VmapSubstrate, default_substrate)
+                        VmapSubstrate, default_pool, default_substrate,
+                        reset_default_pool)
 
 __all__ = [
     "compat",
@@ -28,5 +29,5 @@ __all__ = [
     "CapacityPolicy", "CapacityOverflowError", "run_with_capacity",
     "CollectiveTape",
     "Substrate", "VmapSubstrate", "ShardMapSubstrate", "SubstratePool",
-    "default_substrate",
+    "default_substrate", "default_pool", "reset_default_pool",
 ]

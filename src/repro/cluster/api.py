@@ -27,7 +27,7 @@ from typing import Optional, Tuple, Union
 
 import numpy as np
 
-from .substrate import Substrate
+from .substrate import Substrate, default_pool
 
 __all__ = ["sort", "join", "SORT_ALGORITHMS", "JOIN_ALGORITHMS", "AUTO"]
 
@@ -41,12 +41,19 @@ AUTO = "auto"
 # algorithm's axis shape: the sorts and 1D joins resolve it with (t,),
 # RandJoin with its (a, b) machine matrix — and all queries that agree
 # on the axes share one substrate, its lock, and its compiled-program
-# cache (the serving engine's cache-sharing contract).
+# cache (the serving engine's cache-sharing contract).  ``None`` is the
+# FUSED default: the process-wide jit-compiling pool
+# (repro.cluster.default_pool), so every algorithm's multi-round body
+# runs as one compiled program reused across calls.  Round-by-round
+# execution is still available by passing an eager substrate explicitly
+# (``VmapSubstrate(t)`` / ``ShardMapSubstrate(..., jit=False)``).
 SubstrateLike = Union[Substrate, "SubstrateProvider", None]
 
 
 def _resolve_substrate(substrate, *axes) -> Optional[Substrate]:
-    if substrate is None or isinstance(substrate, Substrate):
+    if substrate is None:
+        substrate = default_pool()
+    if isinstance(substrate, Substrate):
         return substrate
     if callable(substrate):
         sub = substrate(*axes)
@@ -79,7 +86,7 @@ def sort(x, *, algorithm: str = "smms",
          values=None, r: int = 2, seed: int = 0,
          cap_factor: Optional[float] = None,
          backend: str = "static", kernel_backend: Optional[str] = None,
-         policy=None):
+         policy=None, donate: bool = False):
     """Distributed sort of x: (t, m).  Returns ((keys, values), report).
 
     algorithm: one of SORT_ALGORITHMS, or "auto" to let the planner
@@ -91,6 +98,13 @@ def sort(x, *, algorithm: str = "smms",
     pins the jnp path, None uses ops.DEFAULT_BACKEND (the
     REPRO_KERNEL_BACKEND env var).  Outputs and (alpha, k) reports are
     bitwise-identical across kernel backends.
+
+    donate: allow the compiled program to consume (reuse) the input
+    buffers instead of copying them into the exchange pipeline — do not
+    touch ``x``/``values`` afterwards.  Honored on donation-capable
+    platforms (GPU/TPU) when the capacity schedule cannot retry
+    (explicit ``cap_factor`` or a ``policy`` with ``max_retries=0``);
+    dropped silently otherwise (``Substrate.stats`` records which).
     """
     if np.ndim(x) != 2:
         raise ValueError(
@@ -105,25 +119,28 @@ def sort(x, *, algorithm: str = "smms",
         out, report = sort(x, algorithm=plan.algorithm, substrate=substrate,
                            values=values, r=r, seed=seed,
                            cap_factor=cap_factor, backend=backend,
-                           kernel_backend=kernel_backend, policy=policy)
+                           kernel_backend=kernel_backend, policy=policy,
+                           donate=donate)
         _attach_plan(report, plan, sketch_phases)
         return out, report
     if algorithm == "smms":
         from repro.core.smms import smms_sort
         return smms_sort(x, r=r, cap_factor=cap_factor, values=values,
                          backend=backend, kernel_backend=kernel_backend,
-                         substrate=substrate, policy=policy)
+                         substrate=substrate, policy=policy, donate=donate)
     if algorithm == "terasort":
         from repro.core.terasort import terasort_sort
         if values is not None:
             return terasort_sort(x, seed=seed, cap_factor=cap_factor,
                                  backend=backend, values=values,
                                  kernel_backend=kernel_backend,
-                                 substrate=substrate, policy=policy)
+                                 substrate=substrate, policy=policy,
+                                 donate=donate)
         flat, report = terasort_sort(x, seed=seed, cap_factor=cap_factor,
                                      backend=backend,
                                      kernel_backend=kernel_backend,
-                                     substrate=substrate, policy=policy)
+                                     substrate=substrate, policy=policy,
+                                     donate=donate)
         return (flat, None), report
     raise ValueError(f"unknown sort algorithm {algorithm!r}; "
                      f"expected one of {SORT_ALGORITHMS + (AUTO,)}")

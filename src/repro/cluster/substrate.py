@@ -45,11 +45,21 @@ from . import compat
 from .collectives import CollectiveTape
 
 __all__ = ["Substrate", "VmapSubstrate", "ShardMapSubstrate",
-           "SubstratePool", "default_substrate"]
+           "SubstratePool", "default_substrate", "default_pool",
+           "reset_default_pool", "DONATION_PLATFORMS"]
 
 AxisSpec = Union[int, Tuple[str, int]]
 
 _DEFAULT_NAMES = ("i", "j", "k")
+
+# Platforms where jax buffer donation is implemented; elsewhere (CPU)
+# requesting donation would only emit a warning per compile, so the
+# substrates drop it and count the drop in stats["donation_dropped"].
+DONATION_PLATFORMS = ("gpu", "tpu")
+
+
+def _donation_supported() -> bool:
+    return jax.default_backend() in DONATION_PLATFORMS
 
 
 def _normalize_axes(axes: Sequence[AxisSpec]) -> Tuple[Tuple[str, int], ...]:
@@ -80,6 +90,14 @@ def _stable_fn_key(fn: Callable):
         except TypeError:      # unhashable partial payload: identity key
             return fn
     return fn
+
+
+def _fn_label(fn: Callable) -> str:
+    """Human-readable body name for per-algorithm compile accounting."""
+    base = fn
+    while isinstance(base, functools.partial):
+        base = base.func
+    return getattr(base, "__name__", type(base).__name__).lstrip("_")
 
 
 class Substrate:
@@ -123,11 +141,31 @@ class Substrate:
     def t(self) -> int:
         return int(np.prod(self.shape))
 
-    def run(self, shard_fn: Callable, *args):
+    def _donation(self, donate_argnums) -> Tuple[int, ...]:
+        """Normalize a donation request (call under the run lock).
+
+        Donated positions are reused by XLA for the program's outputs —
+        the fused exchange buffers overwrite their inputs instead of
+        copying.  On platforms without donation support (CPU) the
+        request is dropped (counted in ``stats['donation_dropped']``)
+        rather than emitting a per-compile warning.
+        """
+        if not donate_argnums:
+            return ()
+        if not _donation_supported():
+            self.stats["donation_dropped"] += 1
+            return ()
+        return tuple(sorted({int(i) for i in donate_argnums}))
+
+    def run(self, shard_fn: Callable, *args, donate_argnums=()):
         """Execute ``shard_fn(*local_args, tape=tape)`` on every machine.
 
         Returns ``(outputs, tape)``: outputs with the substrate's leading
         axes restored, tape bound to concrete per-device counters.
+        ``donate_argnums`` marks positional inputs whose buffers the
+        compiled program may consume (jit-compiling substrates only;
+        see :meth:`_donation` for the platform gate).  The caller must
+        not reuse a donated array after the call.
         """
         raise NotImplementedError
 
@@ -167,23 +205,28 @@ class VmapSubstrate(Substrate):
             fn = jax.vmap(fn, axis_name=name)
         return fn, tape
 
-    def run(self, shard_fn: Callable, *args):
+    def run(self, shard_fn: Callable, *args, donate_argnums=()):
         with self._lock:
             self.stats["runs"] += 1
+            donate = self._donation(donate_argnums)
             if not self._jit:
-                fn, tape = self._build(shard_fn)
+                fn, tape = self._build(shard_fn)   # eager: donation is moot
             else:
-                key = (_stable_fn_key(shard_fn),
+                key = (_stable_fn_key(shard_fn), donate,
                        tuple((jnp.shape(a), str(getattr(a, "dtype", type(a))))
                              for a in args))
                 cached = self._compiled.get(key)
                 if cached is None:
                     fn, tape = self._build(shard_fn)
-                    cached = self._compiled[key] = (jax.jit(fn), tape)
+                    cached = self._compiled[key] = (
+                        jax.jit(fn, donate_argnums=donate), tape)
                     self.stats["compiles"] += 1
+                    self.stats[f"compiles[{_fn_label(shard_fn)}]"] += 1
                 else:
                     self.stats["program_cache_hits"] += 1
                 fn, tape = cached
+                if donate:
+                    self.stats["donated_runs"] += 1
             out, frames = fn(*args)
             return out, tape.bound_snapshot(jax.tree.map(np.asarray, frames))
 
@@ -214,10 +257,11 @@ class ShardMapSubstrate(Substrate):
                 tuple((jnp.shape(a), str(getattr(a, "dtype", type(a))))
                       for a in args))
 
-    def run(self, shard_fn: Callable, *args):
+    def run(self, shard_fn: Callable, *args, donate_argnums=()):
         with self._lock:
             self.stats["runs"] += 1
-            key = self._signature(shard_fn, args)
+            donate = self._donation(donate_argnums) if self._jit else ()
+            key = self._signature(shard_fn, args) + (donate,)
             cached = self._compiled.get(key)
             if cached is None:
                 tape = CollectiveTape()
@@ -237,13 +281,16 @@ class ShardMapSubstrate(Substrate):
                                       in_specs=tuple(spec for _ in args),
                                       out_specs=spec)
                 if self._jit:
-                    fn = jax.jit(fn)
+                    fn = jax.jit(fn, donate_argnums=donate)
                 cached = (fn, tape)
                 self._compiled[key] = cached
                 self.stats["compiles"] += 1
+                self.stats[f"compiles[{_fn_label(shard_fn)}]"] += 1
             else:
                 self.stats["program_cache_hits"] += 1
             fn, tape = cached
+            if donate:
+                self.stats["donated_runs"] += 1
             out, frames = fn(*args)
             return out, tape.bound_snapshot(jax.tree.map(np.asarray, frames))
 
@@ -290,6 +337,39 @@ class SubstratePool:
         for sub in self.substrates():
             total.update(sub.stats_snapshot())
         return total
+
+
+# ---------------------------------------------------------------------------
+# The process-wide default pool: fused execution behind the front door.
+# ---------------------------------------------------------------------------
+# Passing substrate=None to cluster.sort/join used to build a fresh
+# *eager* VmapSubstrate per call: every query re-traced its whole
+# multi-round body op by op — the per-round dispatch tax that made the
+# kernel path slower end-to-end than the reference path even though
+# every individual kernel won.  The default is now this shared pool of
+# jit-compiling substrates: each algorithm's full multi-round body
+# (tape counters, capacity checks and report fields are already
+# in-program) compiles ONCE per (body, shape, params) into a single
+# program and is reused across calls, exactly like the serving engine's
+# pool.  Reset it (tests do, via conftest) to measure cold behavior.
+_DEFAULT_POOL: Optional[SubstratePool] = None
+_DEFAULT_POOL_LOCK = threading.Lock()
+
+
+def default_pool() -> SubstratePool:
+    """The shared jit-compiling SubstratePool behind ``substrate=None``."""
+    global _DEFAULT_POOL
+    with _DEFAULT_POOL_LOCK:
+        if _DEFAULT_POOL is None:
+            _DEFAULT_POOL = SubstratePool()
+        return _DEFAULT_POOL
+
+
+def reset_default_pool() -> None:
+    """Drop the shared pool (and with it every cached compiled program)."""
+    global _DEFAULT_POOL
+    with _DEFAULT_POOL_LOCK:
+        _DEFAULT_POOL = None
 
 
 def default_substrate(*axes: AxisSpec,

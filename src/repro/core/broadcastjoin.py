@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster.collectives import CollectiveTape
-from repro.cluster.substrate import Substrate, VmapSubstrate
+from repro.cluster.substrate import Substrate, default_pool
 
 from .localjoin import MASKED_KEY, local_equijoin
 
@@ -81,7 +81,7 @@ def broadcast_join(s_keys: np.ndarray, s_rows: np.ndarray,
     if small_side not in ("s", "t"):
         raise ValueError(f"small_side must be 's' or 't', got {small_side!r}")
     if substrate is None:
-        substrate = VmapSubstrate(t)
+        substrate = default_pool()(t)
     assert substrate.t == t, (substrate, t)
     axis = substrate.axis_name
 

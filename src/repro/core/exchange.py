@@ -55,7 +55,8 @@ def _null_tape():
 
 
 def partition_sorted(x_sorted: jnp.ndarray, interior: jnp.ndarray,
-                     kernel_backend: Optional[str] = None
+                     kernel_backend: Optional[str] = None,
+                     valid_len: Optional[int] = None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Split a locally sorted vector into t contiguous destination segments.
 
@@ -67,10 +68,17 @@ def partition_sorted(x_sorted: jnp.ndarray, interior: jnp.ndarray,
     local keys — `ops.searchsorted` dispatches them to the Pallas
     branch-free search kernel — and agree bitwise: segment k holds
     exactly the keys with b_k <= key < b_{k+1}.
+
+    ``valid_len=m`` declares ``x_sorted`` pre-padded past its m real
+    keys with the sort sentinel (the once-per-round padding contract of
+    ``ops.pad_pow2``); cuts are clamped to m, which reproduces the
+    unpadded answer exactly.
     """
-    m = x_sorted.shape[0]
+    m = valid_len if valid_len is not None else x_sorted.shape[0]
     cuts = ops.searchsorted(x_sorted, interior, side="left",
-                            backend=kernel_backend)            # (t-1,)
+                            backend=kernel_backend,
+                            valid_len=(None if valid_len is None
+                                       else m))                # (t-1,)
     starts = jnp.concatenate([jnp.zeros((1,), cuts.dtype), cuts])
     ends = jnp.concatenate([cuts, jnp.full((1,), m, cuts.dtype)])
     return starts, ends - starts
@@ -79,14 +87,16 @@ def partition_sorted(x_sorted: jnp.ndarray, interior: jnp.ndarray,
 def build_send_buffer(x_sorted: jnp.ndarray, starts: jnp.ndarray,
                       lens: jnp.ndarray, cap_per_pair: int,
                       values: Optional[jnp.ndarray] = None,
-                      pad_key=PAD):
+                      pad_key=PAD, valid_len: Optional[int] = None):
     """Pack t contiguous segments into a (t, C) tile, sentinel-padded.
 
     Returns (keys_buf, values_buf_or_None, dropped) where dropped counts
     objects beyond per-pair capacity (0 when capacity is adequate).
+    ``valid_len`` bounds the gather when ``x_sorted`` carries a padded
+    tail (segment indices never reach it — lens sum to valid_len).
     """
     t = starts.shape[0]
-    m = x_sorted.shape[0]
+    m = valid_len if valid_len is not None else x_sorted.shape[0]
     cols = jnp.arange(cap_per_pair)
     idx = starts[:, None] + cols[None, :]                      # (t, C)
     valid = cols[None, :] < lens[:, None]
@@ -172,6 +182,8 @@ def exchange_sorted_segments(x_sorted: jnp.ndarray,
                              backend: str = "static",
                              merge: bool = True,
                              kernel_backend: Optional[str] = None,
+                             sort_input: bool = False,
+                             valid_len: Optional[int] = None,
                              tape=None) -> ExchangeResult:
     """Round-3 shuffle: deliver bucket k of every device to device k.
 
@@ -185,28 +197,50 @@ def exchange_sorted_segments(x_sorted: jnp.ndarray,
     log-t bitonic merge kernel rather than a full re-sort; the ragged
     backend's receive buffer has device-dependent run offsets, so it
     re-sorts (still through ops, which may use the bitonic sort kernel).
+
+    ``sort_input=True`` takes *unsorted* keys and runs the fused
+    ``ops.sort_partition[_kv]`` kernel — sort and boundary search in a
+    single dispatch (Terasort's Round 3, where the two are adjacent).
+    ``valid_len=m`` accepts keys (and values) pre-padded past m real
+    objects with the sort sentinel (``ops.pad_pow2``), avoiding per-op
+    pad/unpad round trips; mutually exclusive with ``sort_input``.
     """
     if backend not in ("static", "ragged"):
         raise ValueError(f"unknown exchange backend {backend!r}; "
                          "expected 'static' or 'ragged'")
-    m = x_sorted.shape[0]
+    if sort_input and valid_len is not None:
+        raise ValueError("sort_input=True takes unpadded input; "
+                         "valid_len cannot be combined with it")
+    m = valid_len if valid_len is not None else x_sorted.shape[0]
     cap_total = int(-(-int(cap_factor * m) // t) * t)  # round up to mult of t
     cap_pair = cap_total // t
-    starts, lens = partition_sorted(x_sorted, interior,
-                                    kernel_backend=kernel_backend)
+    if sort_input:
+        if values is not None:
+            x_sorted, values, starts, lens = ops.sort_partition_kv(
+                x_sorted, values, interior, backend=kernel_backend)
+        else:
+            x_sorted, starts, lens = ops.sort_partition(
+                x_sorted, interior, backend=kernel_backend)
+    else:
+        starts, lens = partition_sorted(x_sorted, interior,
+                                        kernel_backend=kernel_backend,
+                                        valid_len=valid_len)
     me = lax.axis_index(axis_name)
     sent = m - lens[me]  # objects leaving this device
     tape = tape if tape is not None else _null_tape()
 
     recv2d = recv_v2d = None
     if backend == "ragged":
+        if valid_len is not None:      # exact-size sends: strip the pad tail
+            x_sorted = x_sorted[:m]
+            values = values[:m] if values is not None else None
         recv, recv_v, count = ragged_exchange(
             x_sorted, starts, lens, axis_name, cap_total, values=values,
             tape=tape, sent=sent)
         dropped = jnp.zeros((), jnp.int32)
     else:
         keys_buf, vals_buf, local_drop = build_send_buffer(
-            x_sorted, starts, lens, cap_pair, values)
+            x_sorted, starts, lens, cap_pair, values, valid_len=valid_len)
         recv2d, recv_v2d = static_exchange(keys_buf, axis_name, vals_buf,
                                            tape=tape, sent=sent)
         recv = recv2d.reshape(-1)

@@ -30,7 +30,7 @@ import numpy as np
 from jax import lax
 
 from repro.cluster.collectives import CollectiveTape
-from repro.cluster.substrate import Substrate, VmapSubstrate
+from repro.cluster.substrate import Substrate, default_pool
 from repro.kernels import ops
 
 from .exchange import PAD, build_send_buffer, static_exchange
@@ -60,17 +60,18 @@ def route_to_interval(keys: jnp.ndarray, rows: jnp.ndarray,
 
     Returns (join_keys, payload_rows, dropped, valid_count); masked slots
     have join_key == MASKED_KEY.
+
+    The destination sort and the interval boundary search run as ONE
+    fused ``ops.sort_partition_kv`` dispatch.  Integer boundaries
+    1..n_dst-1 with side='left' give the same cuts as the historical
+    float (k - 0.5) midpoints: for integer assignments, a < k iff
+    a < k - 0.5.
     """
     pairs = jnp.stack([keys, rows], axis=-1)                   # (m, 2) int32
-    assign_sorted, payload = ops.sort_kv(assign, pairs,
-                                         backend=kernel_backend)
+    interior = jnp.arange(1, n_dst, dtype=assign.dtype)
+    assign_sorted, payload, starts, lens = ops.sort_partition_kv(
+        assign, pairs, interior, backend=kernel_backend)
     a_sorted = assign_sorted.astype(jnp.float32)
-    interior = jnp.arange(1, n_dst, dtype=jnp.float32) - 0.5
-    cuts = ops.searchsorted(a_sorted, interior, side="left",
-                            backend=kernel_backend)
-    starts = jnp.concatenate([jnp.zeros((1,), cuts.dtype), cuts])
-    ends = jnp.concatenate([cuts, jnp.full((1,), a_sorted.shape[0], cuts.dtype)])
-    lens = ends - starts
     kbuf, vbuf, dropped = build_send_buffer(a_sorted, starts, lens, cap_pair,
                                             values=payload)
     me = lax.axis_index(axis_name)
@@ -140,7 +141,7 @@ def randjoin(s_keys: np.ndarray, s_rows: np.ndarray,
         t_machines, s_keys.shape[0], t_keys.shape[0])
     t = a * b
     if substrate is None:
-        substrate = VmapSubstrate(("a", a), ("b", b))
+        substrate = default_pool()(("a", a), ("b", b))
     assert substrate.shape == (a, b), (substrate, a, b)
     axis_a, axis_b = substrate.axis_names
 

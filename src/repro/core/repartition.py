@@ -16,7 +16,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cluster.substrate import Substrate, VmapSubstrate
+from repro.cluster.substrate import Substrate, default_pool
 
 from .localjoin import MASKED_KEY, local_equijoin
 
@@ -42,7 +42,7 @@ def repartition_join(s_keys: np.ndarray, s_rows: np.ndarray,
     s_keys = np.asarray(s_keys, np.int64)
     t_keys = np.asarray(t_keys, np.int64)
     if substrate is None:
-        substrate = VmapSubstrate(t)
+        substrate = default_pool()(t)
     assert substrate.t == t, (substrate, t)
 
     def shard(keys, rows):

@@ -29,7 +29,7 @@ from jax import lax
 
 from repro.cluster.capacity import CapacityPolicy, run_with_capacity
 from repro.cluster.collectives import CollectiveTape
-from repro.cluster.substrate import Substrate, VmapSubstrate
+from repro.cluster.substrate import Substrate, default_pool
 from repro.kernels import ops
 
 from .boundaries import boundaries_jax, equidepth_samples
@@ -77,14 +77,22 @@ def smms_shard(x_local: jnp.ndarray, *, axis_name: str, t: int, r: int = 2,
         tape = CollectiveTape()
 
     # -- Round 1: local sort + equi-depth samples ---------------------------
+    # Amortized padding: the round pads its operands ONCE (ops.pad_pow2)
+    # and chains the prepadded sort + clamped partition over the padded
+    # buffer — instead of every op padding and unpadding its own copy.
     with tape.phase("round1->2 samples"):
+        valid_len: Optional[int] = m
         if values is not None:
-            xs, values = ops.sort_kv(x_local, values, backend=kernel_backend)
+            xs, values = ops.sort_kv(ops.pad_pow2(x_local),
+                                     ops.pad_pow2(values, fill=0),
+                                     backend=kernel_backend, prepadded=True)
         elif local_sort is not None:
             xs = local_sort(x_local)
+            valid_len = None           # test hook: unpadded contract
         else:
-            xs = ops.sort(x_local, backend=kernel_backend)
-        lam = equidepth_samples(xs, s)                    # (s+1,)
+            xs = ops.sort(ops.pad_pow2(x_local), backend=kernel_backend,
+                          prepadded=True)
+        lam = equidepth_samples(xs[:m], s)                # (s+1,)
         lam_all = tape.all_gather(lam, axis_name)         # (t, s+1)
 
     # -- Round 2: replicated Algorithm 1 (no traffic, still a round) --------
@@ -96,7 +104,7 @@ def smms_shard(x_local: jnp.ndarray, *, axis_name: str, t: int, r: int = 2,
         ex: ExchangeResult = exchange_sorted_segments(
             xs, b[1:-1], axis_name=axis_name, t=t, cap_factor=cap_factor,
             values=values, backend=backend, merge=True,
-            kernel_backend=kernel_backend, tape=tape)
+            kernel_backend=kernel_backend, valid_len=valid_len, tape=tape)
     return SortResult(ex.keys, ex.values, ex.count, ex.sent, ex.dropped, b)
 
 
@@ -117,19 +125,28 @@ def smms_sort(x: jnp.ndarray, r: int = 2,
               backend: str = "static",
               kernel_backend: Optional[str] = None,
               substrate: Optional[Substrate] = None,
-              policy: Optional[CapacityPolicy] = None):
+              policy: Optional[CapacityPolicy] = None,
+              donate: bool = False):
     """Sort x of shape (t, m) across t machines on the given substrate.
 
     Returns ((sorted_global, values_or_None), report: AlphaKReport).
+    ``substrate=None`` uses the process-wide jit-compiling pool: the
+    whole three-round body runs as ONE compiled program, cached across
+    calls.  ``donate=True`` lets that program consume the input buffers
+    (honored only when the capacity schedule is single-shot — a retry
+    must re-read the operands — and on platforms with donation support).
     """
     t, m = x.shape
     n = t * m
     if substrate is None:
-        substrate = VmapSubstrate(t)
+        substrate = default_pool()(t)
     assert substrate.t == t, (substrate, t)
     if policy is None:
         policy = (CapacityPolicy.fixed(cap_factor) if cap_factor is not None
                   else CapacityPolicy.smms(n, t, r))
+    donate_argnums = ()
+    if donate and policy.max_retries == 0:
+        donate_argnums = (0,) if values is None else (0, 1)
 
     def attempt(factor):
         static = dict(axis_name=substrate.axis_name, t=t, r=r,
@@ -137,10 +154,12 @@ def smms_sort(x: jnp.ndarray, r: int = 2,
                       kernel_backend=kernel_backend)
         if values is not None:
             res, tape = substrate.run(
-                functools.partial(_smms_shard_kv, **static), x, values)
+                functools.partial(_smms_shard_kv, **static), x, values,
+                donate_argnums=donate_argnums)
         else:
             res, tape = substrate.run(
-                functools.partial(smms_shard, **static), x)
+                functools.partial(smms_shard, **static), x,
+                donate_argnums=donate_argnums)
         return (res, tape), int(np.asarray(res.dropped).reshape(-1)[0])
 
     (res, tape), factor, attempts = run_with_capacity(attempt, policy)

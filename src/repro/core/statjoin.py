@@ -39,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster.collectives import CollectiveTape
-from repro.cluster.substrate import Substrate, VmapSubstrate
+from repro.cluster.substrate import Substrate, default_pool
 
 from .localjoin import MASKED_KEY, local_equijoin
 from .alpha_k import statjoin_workload_bound
@@ -226,7 +226,7 @@ def statjoin(s_keys: np.ndarray, s_rows: np.ndarray,
     rects = plan_statjoin(stats, t)
     w = stats.total
     if substrate is None:
-        substrate = VmapSubstrate(t)
+        substrate = default_pool()(t)
     assert substrate.t == t, (substrate, t)
 
     s_idx, _ = _routing_tensors(s_keys, rects, t, "s")

@@ -31,8 +31,7 @@ from jax import lax
 
 from repro.cluster.capacity import CapacityPolicy, run_with_capacity
 from repro.cluster.collectives import CollectiveTape
-from repro.cluster.substrate import Substrate, VmapSubstrate
-from repro.kernels import ops
+from repro.cluster.substrate import Substrate, default_pool
 
 from .exchange import exchange_sorted_segments
 from .sampling import algorithm_s, terasort_sample_count
@@ -66,14 +65,15 @@ def terasort_shard(x_local: jnp.ndarray, rng: jax.Array, *, axis_name: str,
         interior = all_samples[idx]                       # b_1 .. b_{t-1}
 
     # -- Round 3: shuffle + sort --------------------------------------------
+    # sort_input=True fuses the local sort with the boundary partition
+    # into ONE kernel dispatch (ops.sort_partition[_kv]) — unlike SMMS,
+    # Terasort's sort and partition are adjacent (no sample gather in
+    # between), so the whole pre-shuffle pipeline is a single pass.
     with tape.phase("round3 shuffle"):
-        if values is not None:
-            xs, values = ops.sort_kv(x_local, values, backend=kernel_backend)
-        else:
-            xs = ops.sort(x_local, backend=kernel_backend)
-        ex = exchange_sorted_segments(xs, interior, axis_name=axis_name, t=t,
-                                      cap_factor=cap_factor, values=values,
-                                      backend=backend, merge=True,
+        ex = exchange_sorted_segments(x_local, interior, axis_name=axis_name,
+                                      t=t, cap_factor=cap_factor,
+                                      values=values, backend=backend,
+                                      merge=True, sort_input=True,
                                       kernel_backend=kernel_backend, tape=tape)
     b = jnp.concatenate([all_samples[:1], interior, all_samples[-1:]])
     return SortResult(ex.keys, ex.values, ex.count, ex.sent, ex.dropped, b)
@@ -92,24 +92,32 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
                   kernel_backend: Optional[str] = None,
                   substrate: Optional[Substrate] = None,
                   policy: Optional[CapacityPolicy] = None,
-                  values: Optional[jnp.ndarray] = None):
+                  values: Optional[jnp.ndarray] = None,
+                  donate: bool = False):
     """Host wrapper over t machines on a substrate.  x: (t, m).
 
     ``values`` (same leading (t, m) shape) ride along through the
-    Round-1 ``ops.sort_kv`` pair sort and the Round-3 exchange, exactly
-    as in SMMS.  Returns ``((keys, values), report)`` when values are
-    given, ``(keys, report)`` otherwise (the historical signature).
+    fused Round-3 ``ops.sort_partition_kv`` pair sort and the exchange,
+    exactly as in SMMS.  Returns ``((keys, values), report)`` when
+    values are given, ``(keys, report)`` otherwise (the historical
+    signature).  ``substrate=None`` uses the process-wide jit pool —
+    the sampling scan, boundary selection and shuffle compile into ONE
+    cached program, so repeated sorts skip the (expensive) Algorithm-S
+    trace entirely.  ``donate`` as in :func:`repro.core.smms.smms_sort`.
     """
     t, m = x.shape
     n = t * m
     q = terasort_sample_count(n, t)
     rngs = jax.random.split(jax.random.key(seed), t)
     if substrate is None:
-        substrate = VmapSubstrate(t)
+        substrate = default_pool()(t)
     assert substrate.t == t, (substrate, t)
     if policy is None:
         policy = (CapacityPolicy.fixed(cap_factor) if cap_factor is not None
                   else CapacityPolicy.terasort(n, t, slack=1.1))
+    donate_argnums = ()
+    if donate and policy.max_retries == 0:
+        donate_argnums = (0,) if values is None else (0, 2)
 
     def attempt(factor):
         static = dict(axis_name=substrate.axis_name, t=t, q=q,
@@ -118,10 +126,11 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
         if values is not None:
             res, tape = substrate.run(
                 functools.partial(_terasort_shard_kv, **static),
-                x, rngs, values)
+                x, rngs, values, donate_argnums=donate_argnums)
         else:
             res, tape = substrate.run(
-                functools.partial(terasort_shard, **static), x, rngs)
+                functools.partial(terasort_shard, **static), x, rngs,
+                donate_argnums=donate_argnums)
         return (res, tape), int(np.asarray(res.dropped).reshape(-1)[0])
 
     (res, tape), factor, attempts = run_with_capacity(attempt, policy)

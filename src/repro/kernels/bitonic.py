@@ -20,10 +20,14 @@ Three kernels:
   (lexicographic).  Feeding ``arange(n)`` as the value channel makes the
   result *bitwise equal to a stable argsort* — how the dispatch layer in
   ``repro.kernels.ops`` routes payload-carrying sorts.
-* ``merge_sorted_rows`` — fused merge of t already-sorted rows (the
-  Round-3 receive buffer: every sender's segment lands sorted).  log t
-  pairwise bitonic-merge levels, n log n total — asymptotically cheaper
-  than re-sorting the receive buffer from scratch.
+* ``merge_sorted_rows`` — merge of t already-sorted rows (the Round-3
+  receive buffer: every sender's segment lands sorted).  log t pairwise
+  bitonic-merge levels, n log n total — asymptotically cheaper than
+  re-sorting the receive buffer from scratch.  Each level launches ONE
+  pallas_call over a **blocked grid**: independent row-group blocks of
+  ~MERGE_TILE_LANES lanes merge in parallel (no monolithic
+  whole-array block); inputs past one VMEM tile route to the
+  rank-merge kernel in ``fused.py`` instead.
 
 Cost: for the m = n/t <= 64k row blocks SMMS uses, the whole row fits
 VMEM (64k f32 = 256 KiB << 16 MiB) and each kernel is memory-light (one
@@ -49,6 +53,7 @@ __all__ = [
     "merge_sorted_rows",
     "merge_sorted_rows_argsort",
     "sort_network_block",
+    "sort_network_block_kv",
     "merge_network_block",
     "sort_sentinel",
 ]
@@ -120,6 +125,24 @@ def sort_network_block(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
+def sort_network_block_kv(keys: jnp.ndarray, vals: jnp.ndarray):
+    """Lexicographic (key, value) bitonic sort of each row.
+
+    keys/vals: (rows, n), n a power of 2.  Pure jnp — shared by the
+    ``bitonic_sort_kv`` kernel body and the fused sort+partition kernel
+    (``kernels/fused.py``), so the network cannot diverge between them.
+    """
+    rows, n = keys.shape
+    logn = int(math.log2(n))
+    assert 1 << logn == n, "n must be a power of 2"
+    for k in range(logn):
+        for j in range(k, -1, -1):
+            d = 1 << j
+            keys, vals = _compare_exchange_kv(keys, vals, d,
+                                              _directions(n, d, k))
+    return keys, vals
+
+
 def merge_network_block(x: jnp.ndarray, run: int) -> jnp.ndarray:
     """Merge rows of x whose length-``run`` chunks are each sorted ascending.
 
@@ -148,15 +171,7 @@ def _sort_kernel(x_ref, o_ref):
 
 
 def _sort_kv_kernel(k_ref, v_ref, ok_ref, ov_ref):
-    keys = k_ref[...]
-    vals = v_ref[...]
-    rows, n = keys.shape
-    logn = int(math.log2(n))
-    for k in range(logn):
-        for j in range(k, -1, -1):
-            d = 1 << j
-            keys, vals = _compare_exchange_kv(keys, vals, d,
-                                              _directions(n, d, k))
+    keys, vals = sort_network_block_kv(k_ref[...], v_ref[...])
     ok_ref[...] = keys
     ov_ref[...] = vals
 
@@ -204,7 +219,8 @@ def bitonic_sort(x: jnp.ndarray, block_rows: int = 8,
     np2 = max(2, _next_pow2(n))
     rpad = (-rows) % block_rows
     big = sort_sentinel(x.dtype)
-    xp = jnp.pad(x, ((0, rpad), (0, np2 - n)), constant_values=big)
+    xp = (x if rpad == 0 and np2 == n else
+          jnp.pad(x, ((0, rpad), (0, np2 - n)), constant_values=big))
     out = pl.pallas_call(
         _sort_kernel,
         grid=((rows + rpad) // block_rows,),
@@ -227,10 +243,13 @@ def bitonic_sort_kv(keys: jnp.ndarray, values: jnp.ndarray,
     rows, n = keys.shape
     np2 = max(2, _next_pow2(n))
     rpad = (-rows) % block_rows
-    kp = jnp.pad(keys, ((0, rpad), (0, np2 - n)),
-                 constant_values=sort_sentinel(keys.dtype))
-    vp = jnp.pad(values, ((0, rpad), (0, np2 - n)),
-                 constant_values=sort_sentinel(values.dtype))
+    if rpad == 0 and np2 == n:
+        kp, vp = keys, values
+    else:
+        kp = jnp.pad(keys, ((0, rpad), (0, np2 - n)),
+                     constant_values=sort_sentinel(keys.dtype))
+        vp = jnp.pad(values, ((0, rpad), (0, np2 - n)),
+                     constant_values=sort_sentinel(values.dtype))
     spec = pl.BlockSpec((block_rows, np2), lambda i: (i, 0))
     ok, ov = pl.pallas_call(
         _sort_kv_kernel,
@@ -252,25 +271,80 @@ def _pad_sorted_rows(x: jnp.ndarray, sentinel) -> jnp.ndarray:
     return jnp.pad(x, ((0, tp2 - t), (0, cp2 - c)), constant_values=sentinel)
 
 
+def _pad_iota_unique(t: int, c: int, tp2: int, cp2: int) -> jnp.ndarray:
+    """Flat-index channel for (t, c) rows padded to (tp2, cp2).
+
+    Real slots carry their row-major flat index in [0, t*c); pad slots
+    carry *unique* ids >= t*c, ascending along each row.  Uniqueness is
+    what keeps lexicographic (key, id) pairs strictly increasing per
+    row (pads sort after every real element among equal keys) and makes
+    rank-merge positions collision-free.
+    """
+    row = jnp.arange(tp2, dtype=jnp.int32)[:, None]
+    col = jnp.arange(cp2, dtype=jnp.int32)[None, :]
+    real = (row < t) & (col < c)
+    flatpos = row * cp2 + col
+    return jnp.where(real, row * c + col, t * c + flatpos)
+
+
+# Soft per-block lane target for the hierarchical merge: levels whose
+# runs still fit pick a grid of independent blocks of ~this size; the
+# top levels (which must see whole runs) may exceed it up to the
+# caller's hard VMEM cap.
+MERGE_TILE_LANES = 1 << 12
+
+
+def _merge_levels(kp: jnp.ndarray, ip, run: int, interpret: bool):
+    """Hierarchically merge (rows, c) sorted runs down to one sorted row.
+
+    Each level groups rows into blocks of ``rpb`` rows and launches ONE
+    pallas_call with ``grid=(rows/rpb,)`` — every grid block merges its
+    rows independently in VMEM (length-``run`` runs -> one sorted run of
+    rpb*c).  Levels repeat until a single row remains.  ``ip`` is an
+    optional tie-break/permutation channel merged lexicographically.
+    """
+    rows, c = kp.shape
+    while rows > 1:
+        rpb = min(rows, max(2, MERGE_TILE_LANES // c))
+        nb = rows // rpb
+        kflat = kp.reshape(nb, rpb * c)
+        spec = pl.BlockSpec((1, rpb * c), lambda i: (i, 0))
+        if ip is None:
+            kflat = pl.pallas_call(
+                functools.partial(_merge_kernel, run=c),
+                grid=(nb,), in_specs=[spec], out_specs=spec,
+                out_shape=jax.ShapeDtypeStruct(kflat.shape, kp.dtype),
+                interpret=interpret,
+            )(kflat)
+        else:
+            iflat = ip.reshape(nb, rpb * c)
+            kflat, iflat = pl.pallas_call(
+                functools.partial(_merge_kv_kernel, run=c),
+                grid=(nb,), in_specs=[spec, spec], out_specs=(spec, spec),
+                out_shape=(jax.ShapeDtypeStruct(kflat.shape, kp.dtype),
+                           jax.ShapeDtypeStruct(iflat.shape, jnp.int32)),
+                interpret=interpret,
+            )(kflat, iflat)
+            ip = iflat
+        kp = kflat
+        rows, c = nb, rpb * c
+    return kp.reshape(-1), (None if ip is None else ip.reshape(-1))
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def merge_sorted_rows(x: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
     """Merge t sorted rows into one sorted vector.  x: (t, c), rows asc.
 
     Returns (t*c,) — bitwise equal to ``jnp.sort(x.reshape(-1))``.
+    Blocked grid: each merge level runs independent row-group blocks of
+    ~MERGE_TILE_LANES lanes across the grid (not one monolithic block),
+    so the receive side parallelizes across tiles; only the final level
+    holds whole runs.
     """
     t, c = x.shape
     xp = _pad_sorted_rows(x, sort_sentinel(x.dtype))
-    tp2, cp2 = xp.shape
-    flat = xp.reshape(1, tp2 * cp2)
-    out = pl.pallas_call(
-        functools.partial(_merge_kernel, run=cp2),
-        grid=(1,),
-        in_specs=[pl.BlockSpec(flat.shape, lambda i: (0, 0))],
-        out_specs=pl.BlockSpec(flat.shape, lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct(flat.shape, x.dtype),
-        interpret=interpret,
-    )(flat)
-    return out[0, :t * c]
+    merged, _ = _merge_levels(xp, None, xp.shape[1], interpret)
+    return merged[:t * c]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -284,18 +358,6 @@ def merge_sorted_rows_argsort(keys: jnp.ndarray, interpret: bool = True):
     t, c = keys.shape
     kp = _pad_sorted_rows(keys, sort_sentinel(keys.dtype))
     tp2, cp2 = kp.shape
-    iota = jnp.arange(t * c, dtype=jnp.int32).reshape(t, c)
-    ip = _pad_sorted_rows(iota, sort_sentinel(jnp.int32))
-    kflat = kp.reshape(1, tp2 * cp2)
-    iflat = ip.reshape(1, tp2 * cp2)
-    spec = pl.BlockSpec(kflat.shape, lambda i: (0, 0))
-    ok, oi = pl.pallas_call(
-        functools.partial(_merge_kv_kernel, run=cp2),
-        grid=(1,),
-        in_specs=[spec, spec],
-        out_specs=(spec, spec),
-        out_shape=(jax.ShapeDtypeStruct(kflat.shape, keys.dtype),
-                   jax.ShapeDtypeStruct(iflat.shape, jnp.int32)),
-        interpret=interpret,
-    )(kflat, iflat)
-    return ok[0, :t * c], oi[0, :t * c]
+    ip = _pad_iota_unique(t, c, tp2, cp2)
+    merged, order = _merge_levels(kp, ip, cp2, interpret)
+    return merged[:t * c], order[:t * c]

@@ -1,0 +1,215 @@
+"""Fused multi-op Pallas kernels — one dispatch where the pipeline had three.
+
+The cluster hot loops used to issue separate kernels for steps that read
+the same VMEM-resident block: Round-3 partitioning ran ``ops.sort`` →
+``ops.searchsorted`` → ``partition_sorted`` as three dispatches, each
+with its own pad-to-pow2 / unpad round trip through HBM.  This module
+holds the fused alternatives (the FlashAttention treatment applied to
+the shuffle pipeline):
+
+* ``sort_partition``    — bitonic-sort a block AND binary-search the t-1
+  destination boundaries over the freshly sorted block in the same
+  kernel pass.  One HBM read, one write, zero intermediate
+  materialization.  Used by Terasort's Round 3 (sort and partition are
+  adjacent there; SMMS sorts in Round 1, before the sample gather, so
+  only its partition half can fuse).
+* ``sort_partition_kv`` — the payload-carrying variant: lexicographic
+  (key, iota) pair sort (= the *stable* argsort permutation, bitwise)
+  plus the same in-kernel boundary search.  Used by RandJoin's
+  tuple-to-interval routing.
+* ``merge_ranks``       — the scale-out path for merging sorted rows
+  that do NOT fit one VMEM tile: every element's final position is its
+  rank in the global lexicographic (key, flat-index) order, computed as
+  a sum of per-row branch-free binary searches.  The grid is
+  (query rows × query blocks × bound rows) with the rank accumulated
+  across the (sequential) bound-row axis, so each block touches only
+  one row pair at a time — per-block VMEM is O(row), not O(t·row).
+  A host-side scatter places keys (and the stable permutation) by rank.
+
+Sentinel discipline matches ``bitonic.py``: padding uses the dtype's
+sort sentinel for keys and *unique* continuation ids for the index
+channel (uniqueness is what makes the rank positions collision-free).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bitonic import (_next_pow2, sort_network_block, sort_network_block_kv,
+                      sort_sentinel)
+from .bucketize import _bin_search_block
+
+__all__ = ["sort_partition", "sort_partition_kv", "merge_ranks"]
+
+
+def _sort_partition_kernel(x_ref, q_ref, xs_ref, cuts_ref, *, m: int):
+    """Sort the row, then count sorted elements < each query (side='left')."""
+    xs = sort_network_block(x_ref[...])
+    xs_ref[...] = xs
+    cuts_ref[...] = _bin_search_block(q_ref[...], xs, m, "left")
+
+
+def _sort_partition_kv_kernel(k_ref, i_ref, q_ref, ks_ref, order_ref,
+                              cuts_ref, *, m: int):
+    """Lexicographic (key, iota) sort + in-kernel boundary search."""
+    keys, vals = sort_network_block_kv(k_ref[...], i_ref[...])
+    ks_ref[...] = keys
+    order_ref[...] = vals
+    cuts_ref[...] = _bin_search_block(q_ref[...], keys, m, "left")
+
+
+def _pad_row(x: jnp.ndarray, fill) -> jnp.ndarray:
+    """(n,) -> (1, pow2) padded with ``fill`` (min width 2)."""
+    n = x.shape[0]
+    p = max(2, _next_pow2(n))
+    return jnp.pad(x, (0, p - n), constant_values=fill)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_partition(x: jnp.ndarray, queries: jnp.ndarray,
+                   interpret: bool = True):
+    """Fused ascending sort + left-searchsorted of ``queries``.
+
+    x: (m,) unsorted keys; queries: (q,) ascending boundary values.
+    Returns (x_sorted (m,), cuts (q,) int32) with
+    ``cuts == jnp.searchsorted(x_sorted, queries, side='left')`` —
+    bitwise equal to the unfused ``ops.sort`` → ``ops.searchsorted``
+    pipeline, in ONE kernel dispatch.
+    """
+    m = x.shape[0]
+    nq = queries.shape[0]
+    xp = _pad_row(x, sort_sentinel(x.dtype))
+    qp = _pad_row(queries, sort_sentinel(queries.dtype))
+    xs, cuts = pl.pallas_call(
+        functools.partial(_sort_partition_kernel, m=m),
+        grid=(1,),
+        in_specs=[pl.BlockSpec(xp.shape, lambda i: (0, 0)),
+                  pl.BlockSpec(qp.shape, lambda i: (0, 0))],
+        out_specs=(pl.BlockSpec(xp.shape, lambda i: (0, 0)),
+                   pl.BlockSpec(qp.shape, lambda i: (0, 0))),
+        out_shape=(jax.ShapeDtypeStruct(xp.shape, x.dtype),
+                   jax.ShapeDtypeStruct(qp.shape, jnp.int32)),
+        interpret=interpret,
+    )(xp, qp)
+    return xs[0, :m], cuts[0, :nq]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_partition_kv(keys: jnp.ndarray, queries: jnp.ndarray,
+                      interpret: bool = True):
+    """Fused stable pair sort + boundary search.
+
+    keys: (m,); queries: (q,) ascending.  Returns
+    (keys_sorted (m,), order (m,) int32, cuts (q,) int32) where ``order``
+    is the *stable* argsort permutation (ties keep input position —
+    realized by the lexicographic (key, iota) network) and ``cuts`` is
+    the left-searchsorted of the queries over the sorted keys.
+    """
+    m = keys.shape[0]
+    nq = queries.shape[0]
+    kp = _pad_row(keys, sort_sentinel(keys.dtype))
+    iota = jnp.arange(m, dtype=jnp.int32)
+    ip = _pad_row(iota, sort_sentinel(jnp.int32))
+    qp = _pad_row(queries, sort_sentinel(queries.dtype))
+    ks, order, cuts = pl.pallas_call(
+        functools.partial(_sort_partition_kv_kernel, m=m),
+        grid=(1,),
+        in_specs=[pl.BlockSpec(kp.shape, lambda i: (0, 0)),
+                  pl.BlockSpec(ip.shape, lambda i: (0, 0)),
+                  pl.BlockSpec(qp.shape, lambda i: (0, 0))],
+        out_specs=(pl.BlockSpec(kp.shape, lambda i: (0, 0)),
+                   pl.BlockSpec(ip.shape, lambda i: (0, 0)),
+                   pl.BlockSpec(qp.shape, lambda i: (0, 0))),
+        out_shape=(jax.ShapeDtypeStruct(kp.shape, keys.dtype),
+                   jax.ShapeDtypeStruct(ip.shape, jnp.int32),
+                   jax.ShapeDtypeStruct(qp.shape, jnp.int32)),
+        interpret=interpret,
+    )(kp, ip, qp)
+    return ks[0, :m], order[0, :m], cuts[0, :nq]
+
+
+# ---------------------------------------------------------------------------
+# rank-based merge: sorted rows too large for one VMEM tile
+# ---------------------------------------------------------------------------
+
+def _bin_search_pairs_block(qk, qi, bk, bi, n_bounds: int) -> jnp.ndarray:
+    """Count pairs (bk, bi) lexicographically < (qk, qi), per query.
+
+    qk/qi: (1, block_n) query keys + tie-break ids; bk/bi: (1, P) one
+    bound row whose (key, id) pairs are strictly increasing (keys sorted
+    ascending, ids unique and ascending within equal keys).  Branch-free
+    binary search over the n_bounds+1 possible answers, mirroring
+    ``bucketize._bin_search_block``.
+    """
+    lo = jnp.zeros(qk.shape, jnp.int32)
+    hi = jnp.full(qk.shape, n_bounds, jnp.int32)
+    steps = max(1, math.ceil(math.log2(n_bounds + 1)))
+    for _ in range(steps):
+        mid = jnp.minimum((lo + hi) // 2, n_bounds - 1)
+        k_mid = jnp.take_along_axis(bk, mid, axis=-1)
+        i_mid = jnp.take_along_axis(bi, mid, axis=-1)
+        pred = (k_mid < qk) | ((k_mid == qk) & (i_mid < qi))
+        go_right = pred & (lo < hi)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+        hi = jnp.maximum(hi, lo)
+    return lo
+
+
+def _rank_kernel(qk_ref, qi_ref, bk_ref, bi_ref, pos_ref, *, c: int):
+    """Accumulate one bound-row's contribution to the query block's rank.
+
+    Grid axis 2 walks the bound rows sequentially; the output block is
+    revisited (same index map every step) and accumulated, initialized
+    on the first step.  Searching a row against itself contributes the
+    element's own in-row position (pairs are strictly increasing), so
+    no self-row special case is needed.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        pos_ref[...] = jnp.zeros_like(pos_ref)
+
+    pos_ref[...] += _bin_search_pairs_block(
+        qk_ref[...], qi_ref[...], bk_ref[...], bi_ref[...], c)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def merge_ranks(keys: jnp.ndarray, ids: jnp.ndarray, block_n: int = 1024,
+                interpret: bool = True) -> jnp.ndarray:
+    """Global rank of every (key, id) pair.  keys/ids: (t, c), rows sorted.
+
+    Rows must be lexicographically increasing in (key, id) — sorted keys
+    with unique ascending tie-break ids, which is exactly what
+    ``ops``' merge dispatcher feeds it.  Returns (t, c) int32 positions:
+    element (i, j)'s index in the fully merged order.  Positions are a
+    permutation of [0, t*c) because the pairs are globally unique.
+    """
+    t, c = keys.shape
+    bn = min(block_n, c)
+    pad = (-c) % bn
+    if pad:
+        # never hit by the ops dispatcher (c is pow2, bn divides it);
+        # guarded for direct callers
+        keys = jnp.pad(keys, ((0, 0), (0, pad)),
+                       constant_values=sort_sentinel(keys.dtype))
+        ids = jnp.pad(ids, ((0, 0), (0, pad)),
+                      constant_values=jnp.iinfo(jnp.int32).max)
+    cb = keys.shape[1] // bn
+    pos = pl.pallas_call(
+        functools.partial(_rank_kernel, c=c),
+        grid=(t, cb, t),
+        in_specs=[pl.BlockSpec((1, bn), lambda i, j, k: (i, j)),
+                  pl.BlockSpec((1, bn), lambda i, j, k: (i, j)),
+                  pl.BlockSpec((1, keys.shape[1]), lambda i, j, k: (k, 0)),
+                  pl.BlockSpec((1, ids.shape[1]), lambda i, j, k: (k, 0))],
+        out_specs=pl.BlockSpec((1, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(keys.shape, jnp.int32),
+        interpret=interpret,
+    )(keys, ids, keys, ids)
+    return pos[:, :c]

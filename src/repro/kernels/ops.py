@@ -2,17 +2,24 @@
 
 This module is the single entry the cluster hot loops call (`ops.sort`,
 `ops.sort_kv`, `ops.searchsorted`, `ops.bucketize_histogram`,
-`ops.merge_sorted_rows[_kv]`).  Each call picks one of two backends:
+`ops.sort_partition[_kv]`, `ops.merge_sorted_rows[_kv]`).  Each call
+picks one of two backends:
 
 * ``"reference"`` — the plain jnp implementation (``jnp.sort``,
   ``jnp.argsort``, ``jnp.searchsorted``).  Always available, always the
   semantic contract.
 * ``"pallas"``    — the purpose-built kernels in ``bitonic.py`` /
-  ``bucketize.py``, with the dispatch layer handling pad-to-pow2 with
-  sort sentinels, key/index packing for stable payload sorts, dtype and
-  shape eligibility checks, and **automatic fallback** to the reference
-  for anything a kernel cannot take (exotic dtypes, >2D operands, rows
-  too long for VMEM residency).
+  ``bucketize.py`` / ``fused.py``, with the dispatch layer handling
+  pad-to-pow2 with sort sentinels, key/index packing for stable payload
+  sorts, dtype and shape eligibility checks, and **automatic fallback**
+  to the reference for anything a kernel cannot take (exotic dtypes,
+  >2D operands, rows too long for VMEM residency).
+
+Dispatch-count economy: the fused ``sort_partition[_kv]`` collapses the
+sort → searchsorted chain into one kernel pass, and ``pad_pow2`` +
+``prepadded=True`` / ``valid_len=`` let a round pad once instead of
+once per op — see DESIGN.md §6 (fused execution) and the per-algorithm
+budgets in ``benchmarks/bench_sort.DISPATCH_BUDGET``.
 
 Every kernel-path result is bitwise-identical to the reference path —
 payload-carrying sorts route through a (key, arange) lexicographic pair
@@ -45,7 +52,7 @@ import threading
 import jax
 import jax.numpy as jnp
 
-from . import bitonic, bucketize, flash_attention as fa
+from . import bitonic, bucketize, fused, flash_attention as fa
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
@@ -68,6 +75,7 @@ _KERNEL_KEY_DTYPES = frozenset(
 
 __all__ = [
     "sort", "sort_kv", "searchsorted", "bucketize_histogram",
+    "sort_partition", "sort_partition_kv", "pad_pow2",
     "merge_sorted_rows", "merge_sorted_rows_kv", "flash_attention",
     "resolve_backend", "reset_dispatch_counts", "kernel_eligible",
     "INTERPRET", "BACKENDS", "DEFAULT_BACKEND", "DISPATCH_COUNTS",
@@ -105,6 +113,25 @@ def _lanes_ok(n: int) -> bool:
     return 1 <= _next_pow2(n) <= MAX_KERNEL_LANES
 
 
+def pad_pow2(x: jnp.ndarray, fill=None) -> jnp.ndarray:
+    """Pad the leading axis to the next power of two (min 2).
+
+    ``fill`` defaults to the dtype's sort sentinel (+inf / iinfo.max),
+    which sorts strictly last — the amortized-padding entry point: a
+    round pads its operands ONCE, then calls ``sort``/``sort_kv`` with
+    ``prepadded=True`` and ``searchsorted`` with ``valid_len=`` instead
+    of letting every op pad and unpad its own copy.
+    """
+    n = x.shape[0]
+    np2 = max(2, _next_pow2(n))
+    if np2 == n:
+        return x
+    if fill is None:
+        fill = bitonic.sort_sentinel(x.dtype)
+    widths = ((0, np2 - n),) + ((0, 0),) * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
 def kernel_eligible(op: str, x, y=None) -> bool:
     """Would the Pallas path take these operands?  Shape/dtype gate only.
 
@@ -130,10 +157,21 @@ def kernel_eligible(op: str, x, y=None) -> bool:
                 and _key_dtype_ok(x)
                 and jnp.dtype(x.dtype) == jnp.dtype(y.dtype)
                 and _lanes_ok(max(1, y.shape[0])))
+    if op in ("sort_partition", "sort_partition_kv"):
+        return (x.ndim == 1 and _key_dtype_ok(x) and _lanes_ok(x.shape[0])
+                and y is not None and y.ndim == 1 and y.shape[0] > 0
+                and jnp.dtype(x.dtype) == jnp.dtype(y.dtype)
+                and _lanes_ok(y.shape[0]))
     if op in ("merge_sorted_rows", "merge_sorted_rows_kv"):
         t, c = x.shape
-        return (_key_dtype_ok(x)
-                and _lanes_ok(_next_pow2(t) * _next_pow2(max(2, c))))
+        if not _key_dtype_ok(x):
+            return False
+        tp2, cp2 = _next_pow2(t), _next_pow2(max(2, c))
+        if _lanes_ok(tp2 * cp2):
+            return True               # in-VMEM hierarchical network merge
+        # rank-merge path: per-block VMEM is one row, so only the row
+        # length is lane-bound; the row count just sizes the grid
+        return _lanes_ok(cp2) and tp2 <= 512
     raise ValueError(f"unknown op {op!r}")
 
 
@@ -141,8 +179,19 @@ def kernel_eligible(op: str, x, y=None) -> bool:
 # sort / sort_kv
 # ---------------------------------------------------------------------------
 
-def sort(x: jnp.ndarray, *, backend=None, block_rows: int = 8) -> jnp.ndarray:
-    """Ascending sort along the last axis.  x: (n,) or (rows, n)."""
+def sort(x: jnp.ndarray, *, backend=None, block_rows: int = 8,
+         prepadded: bool = False) -> jnp.ndarray:
+    """Ascending sort along the last axis.  x: (n,) or (rows, n).
+
+    ``prepadded=True`` declares that the caller already padded the row
+    to a power of two with the dtype's sort sentinel (``pad_pow2``):
+    the kernel path skips its own pad/unpad round trip and the result
+    *stays padded* (sentinel tail last) — the amortized-padding fast
+    path for callers that chain several ops over one padded buffer.
+    """
+    if prepadded and x.shape[-1] != max(2, _next_pow2(x.shape[-1])):
+        raise ValueError(f"prepadded=True requires a power-of-two row "
+                         f"length (use ops.pad_pow2), got {x.shape[-1]}")
     b = resolve_backend(backend)
     if b == "pallas" and kernel_eligible("sort", x):
         _tick("sort", "pallas")
@@ -154,14 +203,24 @@ def sort(x: jnp.ndarray, *, backend=None, block_rows: int = 8) -> jnp.ndarray:
     return jnp.sort(x, axis=-1)
 
 
-def sort_kv(keys: jnp.ndarray, values, *, backend=None, block_rows: int = 8):
+def sort_kv(keys: jnp.ndarray, values, *, backend=None, block_rows: int = 8,
+            prepadded: bool = False):
     """Stable sort of (keys, values) by key: returns (sorted, permuted).
 
     keys: (n,); values: any array with leading dim n (extra trailing dims
     ride along).  Both backends realize ``order = jnp.argsort(keys)``
     (stable) exactly: the kernel path pair-sorts (key, arange) with a
     lexicographic network, so key ties keep input order bitwise.
+
+    ``prepadded=True``: both operands were padded to the same power of
+    two (keys with their sort sentinel via ``pad_pow2``); the kernel
+    skips pad/unpad and outputs stay padded, pads sorted last (pad-slot
+    ties resolve by position — identical to the reference argsort).
     """
+    if prepadded and (keys.shape[0] != max(2, _next_pow2(keys.shape[0]))
+                      or values.shape[:1] != keys.shape[:1]):
+        raise ValueError("prepadded=True requires both operands padded to "
+                         "the same power-of-two length (use ops.pad_pow2)")
     b = resolve_backend(backend)
     if b == "pallas" and kernel_eligible("sort_kv", keys, values):
         _tick("sort_kv", "pallas")
@@ -184,18 +243,89 @@ def sort_kv(keys: jnp.ndarray, values, *, backend=None, block_rows: int = 8):
 # ---------------------------------------------------------------------------
 
 def searchsorted(sorted_arr: jnp.ndarray, queries: jnp.ndarray, *,
-                 side: str = "left", backend=None,
-                 block_n: int = 1024) -> jnp.ndarray:
-    """``jnp.searchsorted(sorted_arr, queries, side)`` with kernel dispatch."""
+                 side: str = "left", backend=None, block_n: int = 1024,
+                 valid_len=None) -> jnp.ndarray:
+    """``jnp.searchsorted(sorted_arr, queries, side)`` with kernel dispatch.
+
+    ``valid_len=m`` is the pre-padded fast path: ``sorted_arr`` may carry
+    a sentinel tail past its m real elements (``pad_pow2``) and results
+    are clamped to m.  Because sentinels sort last, the clamp reproduces
+    the unpadded answer exactly — insertion points below m are untouched
+    and any query landing in the tail belongs at m.
+    """
     if side not in ("left", "right"):
         raise ValueError(f"side must be 'left' or 'right', got {side!r}")
     b = resolve_backend(backend)
     if b == "pallas" and kernel_eligible("searchsorted", sorted_arr, queries):
         _tick("searchsorted", "pallas")
-        return bucketize.searchsorted(sorted_arr, queries, side=side,
-                                      block_n=block_n, interpret=INTERPRET)
-    _tick("searchsorted", "reference")
-    return jnp.searchsorted(sorted_arr, queries, side=side).astype(jnp.int32)
+        ids = bucketize.searchsorted(sorted_arr, queries, side=side,
+                                     block_n=block_n, interpret=INTERPRET)
+    else:
+        _tick("searchsorted", "reference")
+        ids = jnp.searchsorted(sorted_arr, queries,
+                               side=side).astype(jnp.int32)
+    if valid_len is not None:
+        ids = jnp.minimum(ids, jnp.asarray(valid_len, ids.dtype))
+    return ids
+
+
+def sort_partition(x: jnp.ndarray, interior: jnp.ndarray, *, backend=None):
+    """Fused local sort + contiguous-destination partition (one dispatch).
+
+    x: (m,) unsorted keys; interior: (t-1,) ascending interior
+    boundaries.  Returns ``(x_sorted, starts, lens)`` — bitwise equal to
+    ``xs = sort(x)`` followed by ``partition_sorted(xs, interior)``, but
+    the kernel path sorts the block AND binary-searches the boundaries
+    over it in a single pass (no intermediate pad/unpad round trips).
+    """
+    b = resolve_backend(backend)
+    m = x.shape[0]
+    nq = int(interior.shape[0])
+    if nq == 0:                         # t == 1: sort only, trivial partition
+        xs = sort(x, backend=backend)
+        cuts = jnp.zeros((0,), jnp.int32)
+    elif b == "pallas" and kernel_eligible("sort_partition", x, interior):
+        _tick("sort_partition", "pallas")
+        xs, cuts = fused.sort_partition(x, interior, interpret=INTERPRET)
+    else:
+        _tick("sort_partition", "reference")
+        xs = jnp.sort(x)
+        cuts = jnp.searchsorted(xs, interior, side="left").astype(jnp.int32)
+    starts = jnp.concatenate([jnp.zeros((1,), cuts.dtype), cuts])
+    ends = jnp.concatenate([cuts, jnp.full((1,), m, cuts.dtype)])
+    return xs, starts, ends - starts
+
+
+def sort_partition_kv(keys: jnp.ndarray, values, interior: jnp.ndarray, *,
+                      backend=None):
+    """Payload-carrying :func:`sort_partition` (stable, one dispatch).
+
+    keys: (m,); values: leading dim m (trailing dims ride along);
+    interior: (t-1,).  Returns ``(keys_sorted, values_permuted, starts,
+    lens)`` with the *stable* argsort permutation — bitwise equal to
+    ``sort_kv`` + ``searchsorted(side='left')``.
+    """
+    b = resolve_backend(backend)
+    m = keys.shape[0]
+    nq = int(interior.shape[0])
+    if nq == 0:
+        ks, vs = sort_kv(keys, values, backend=backend)
+        cuts = jnp.zeros((0,), jnp.int32)
+    elif (b == "pallas"
+          and kernel_eligible("sort_partition_kv", keys, interior)
+          and values.shape[:1] == keys.shape[:1]):
+        _tick("sort_partition_kv", "pallas")
+        ks, order, cuts = fused.sort_partition_kv(keys, interior,
+                                                  interpret=INTERPRET)
+        vs = values[order]
+    else:
+        _tick("sort_partition_kv", "reference")
+        order = jnp.argsort(keys)
+        ks, vs = keys[order], values[order]
+        cuts = jnp.searchsorted(ks, interior, side="left").astype(jnp.int32)
+    starts = jnp.concatenate([jnp.zeros((1,), cuts.dtype), cuts])
+    ends = jnp.concatenate([cuts, jnp.full((1,), m, cuts.dtype)])
+    return ks, vs, starts, ends - starts
 
 
 def bucketize_histogram(keys: jnp.ndarray, boundaries: jnp.ndarray, t: int,
@@ -223,16 +353,46 @@ def bucketize_histogram(keys: jnp.ndarray, boundaries: jnp.ndarray, t: int,
 # merge of sorted segments (the Round-3 receive side)
 # ---------------------------------------------------------------------------
 
+def _merge_fits_one_tile(t: int, c: int) -> bool:
+    return _lanes_ok(_next_pow2(t) * _next_pow2(max(2, c)))
+
+
+def _rank_merge(keys: jnp.ndarray):
+    """Scale-out merge: global (key, flat-id) ranks + scatter.
+
+    For inputs whose padded total exceeds one VMEM tile the in-kernel
+    network cannot hold the array; instead every element's final
+    position is its rank in the lexicographic (key, id) order — computed
+    by the blocked ``fused.merge_ranks`` kernel one row-pair at a time —
+    and a host-side scatter places keys and the stable permutation.
+    Returns (merged (t*c,), order (t*c,) int32), bitwise equal to the
+    stable flat argsort.
+    """
+    t, c = keys.shape
+    kp = bitonic._pad_sorted_rows(keys, bitonic.sort_sentinel(keys.dtype))
+    tp2, cp2 = kp.shape
+    ip = bitonic._pad_iota_unique(t, c, tp2, cp2)
+    pos = fused.merge_ranks(kp, ip, interpret=INTERPRET).reshape(-1)
+    merged = jnp.zeros((tp2 * cp2,), keys.dtype).at[pos].set(kp.reshape(-1))
+    order = jnp.zeros((tp2 * cp2,), jnp.int32).at[pos].set(ip.reshape(-1))
+    return merged[:t * c], order[:t * c]
+
+
 def merge_sorted_rows(x: jnp.ndarray, *, backend=None) -> jnp.ndarray:
     """Merge already-sorted rows into one sorted vector.  x: (t, c).
 
-    Bitwise equal to ``jnp.sort(x.reshape(-1))``; the kernel path runs the
-    fused log-t pairwise bitonic merge instead of a full re-sort.
+    Bitwise equal to ``jnp.sort(x.reshape(-1))``.  The kernel path runs
+    the blocked log-t pairwise bitonic merge when the padded total fits
+    one VMEM tile, and the rank-merge kernel (per-row tiles + scatter)
+    beyond that — the receive side scales past a single tile instead of
+    falling back to the reference sort.
     """
     b = resolve_backend(backend)
     if b == "pallas" and kernel_eligible("merge_sorted_rows", x):
         _tick("merge_sorted_rows", "pallas")
-        return bitonic.merge_sorted_rows(x, interpret=INTERPRET)
+        if _merge_fits_one_tile(*x.shape):
+            return bitonic.merge_sorted_rows(x, interpret=INTERPRET)
+        return _rank_merge(x)[0]
     _tick("merge_sorted_rows", "reference")
     return jnp.sort(x.reshape(-1))
 
@@ -248,8 +408,11 @@ def merge_sorted_rows_kv(keys: jnp.ndarray, values, *, backend=None):
     vflat = values.reshape(t * c, *values.shape[2:])
     if b == "pallas" and kernel_eligible("merge_sorted_rows_kv", keys):
         _tick("merge_sorted_rows_kv", "pallas")
-        merged, order = bitonic.merge_sorted_rows_argsort(keys,
-                                                          interpret=INTERPRET)
+        if _merge_fits_one_tile(t, c):
+            merged, order = bitonic.merge_sorted_rows_argsort(
+                keys, interpret=INTERPRET)
+        else:
+            merged, order = _rank_merge(keys)
         return merged, vflat[order]
     _tick("merge_sorted_rows_kv", "reference")
     kflat = keys.reshape(-1)

@@ -293,6 +293,13 @@ class ServeStats:
     compiles: int = 0                 # substrate recompile count
     program_cache_hits: int = 0
     capacity_retries: int = 0
+    # Fusion payoff, from the pool's labeled compile counters: compiled
+    # programs per algorithm body (e.g. {"smms_shard": 1}) and substrate
+    # runs per executed query.  Each algorithm's multi-round body is ONE
+    # program, so a warm engine serves at 1.0 program-run per query
+    # (capacity retries and cold compiles push it above 1).
+    program_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    programs_per_query: float = 0.0
 
     def summary(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -727,4 +734,10 @@ class QueryEngine:
                 compiles=pool_stats.get("compiles", 0),
                 program_cache_hits=pool_stats.get("program_cache_hits", 0),
                 capacity_retries=self._counts["capacity_retries"],
+                program_counts={k[len("compiles["):-1]: v
+                                for k, v in sorted(pool_stats.items())
+                                if k.startswith("compiles[") and v},
+                programs_per_query=(pool_stats.get("runs", 0)
+                                    / self._counts["executed"]
+                                    if self._counts["executed"] else 0.0),
             )

@@ -43,19 +43,26 @@ def _reset_shared_counters():
     (a repeated fixture table would hit a stale plan and skip the
     sketch), and SERVE_COUNTERS ticks on every engine submit — without
     this reset a test asserting any of them could pass on another
-    test's traffic.  Reset before AND after: before isolates this test,
-    after leaves nothing behind for non-pytest callers.
+    test's traffic.  The shared default substrate pool (the fused
+    front-door executor) is dropped too: its compiled-program and
+    compile counters would otherwise let a compile-count assertion pass
+    (or a dispatch-count assertion fail) on another test's warm cache.
+    Reset before AND after: before isolates this test, after leaves
+    nothing behind for non-pytest callers.
     """
+    from repro.cluster import reset_default_pool
     from repro.planner import clear_plan_cache
     from repro.serve.query import reset_serve_counters
 
     ops.reset_dispatch_counts()
     clear_plan_cache()
     reset_serve_counters()
+    reset_default_pool()
     yield
     ops.reset_dispatch_counts()
     clear_plan_cache()
     reset_serve_counters()
+    reset_default_pool()
 
 
 @pytest.fixture(autouse=True)

@@ -1,6 +1,13 @@
 """End-to-end kernel-backend parity: cluster.sort / cluster.join with the
 Pallas path on vs off produce identical outputs AND identical (alpha, k)
-reports, on uniform and Zipf-skewed inputs, on both substrates."""
+reports, on uniform and Zipf-skewed inputs, on both substrates.
+
+Also fused-vs-round-by-round parity: the default front door now runs
+each algorithm's whole multi-round body as ONE compiled program (the
+shared jit pool); an explicit eager substrate executes the same body
+round by round, op by op.  Both must agree bitwise — outputs AND
+AlphaKReports — under VmapSubstrate and 1-device ShardMapSubstrate.
+"""
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -148,3 +155,89 @@ def test_join_statjoin_and_randjoin_parity():
                                       np.asarray(got[1].t_rows))
         np.testing.assert_array_equal(np.asarray(got[0].valid),
                                       np.asarray(got[1].valid))
+
+
+# ---------------------------------------------------------------------------
+# Fused (one compiled program) vs round-by-round (eager) execution
+# ---------------------------------------------------------------------------
+
+def run_sort_fused_and_eager(x, algorithm, fused_factory, eager_factory, **kw):
+    (kf, vf), rep_f = cluster.sort(x, algorithm=algorithm,
+                                   substrate=fused_factory(), **kw)
+    (ke, ve), rep_e = cluster.sort(x, algorithm=algorithm,
+                                   substrate=eager_factory(), **kw)
+    return (kf, vf, rep_f), (ke, ve, rep_e)
+
+
+@pytest.mark.parametrize("algorithm", ["smms", "terasort"])
+@pytest.mark.parametrize("kernel_backend", ["reference", "pallas"])
+def test_fused_vs_rounds_vmap(algorithm, kernel_backend):
+    """jit-compiled single program == eager round-by-round, bitwise."""
+    x = jnp.asarray(zipf_keys(T * M, seed=21).reshape(T, M))
+    (kf, _, rep_f), (ke, _, rep_e) = run_sort_fused_and_eager(
+        x, algorithm,
+        lambda: VmapSubstrate(T, jit=True), lambda: VmapSubstrate(T),
+        kernel_backend=kernel_backend)
+    np.testing.assert_array_equal(np.asarray(kf), np.asarray(ke))
+    assert_reports_equal(rep_f, rep_e)
+
+
+def test_fused_vs_rounds_with_values():
+    x = jnp.asarray(zipf_keys(T * M, seed=22).reshape(T, M))
+    v = jnp.asarray(np.arange(T * M, dtype=np.int32).reshape(T, M))
+    (kf, vf, rep_f), (ke, ve, rep_e) = run_sort_fused_and_eager(
+        x, "smms",
+        lambda: VmapSubstrate(T, jit=True), lambda: VmapSubstrate(T),
+        values=v, kernel_backend="pallas")
+    np.testing.assert_array_equal(np.asarray(kf), np.asarray(ke))
+    np.testing.assert_array_equal(np.asarray(vf), np.asarray(ve))
+    assert_reports_equal(rep_f, rep_e)
+
+
+@pytest.mark.parametrize("algorithm", ["smms", "terasort"])
+def test_fused_vs_rounds_shardmap_single_device(algorithm):
+    x = jnp.asarray(uniform_keys(M, seed=23).reshape(1, M))
+    (kf, _, rep_f), (ke, _, rep_e) = run_sort_fused_and_eager(
+        x, algorithm,
+        lambda: ShardMapSubstrate(1),             # jit=True default
+        lambda: ShardMapSubstrate(1, jit=False),
+        kernel_backend="pallas")
+    np.testing.assert_array_equal(np.asarray(kf), np.asarray(ke))
+    assert_reports_equal(rep_f, rep_e)
+
+
+def test_fused_vs_rounds_join():
+    """The joins fuse too: pooled-jit output == eager output + report."""
+    n, t = 240, 4
+    s_keys, t_keys = zipf_tables(n, n, theta=0.6, seed=24, domain=40)
+    rows = np.arange(n)
+    outs, reps = [], []
+    for sub in (VmapSubstrate(t, jit=True), VmapSubstrate(t)):
+        out, rep = cluster.join(s_keys, rows, t_keys, rows,
+                                algorithm="statjoin", t_machines=t,
+                                kernel_backend="pallas", substrate=sub)
+        outs.append(out)
+        reps.append(rep)
+    np.testing.assert_array_equal(np.asarray(outs[0].s_rows),
+                                  np.asarray(outs[1].s_rows))
+    np.testing.assert_array_equal(np.asarray(outs[0].t_rows),
+                                  np.asarray(outs[1].t_rows))
+    np.testing.assert_array_equal(np.asarray(outs[0].valid),
+                                  np.asarray(outs[1].valid))
+    assert_reports_equal(reps[0], reps[1])
+
+
+def test_front_door_default_is_fused():
+    """substrate=None resolves to the shared jit pool: a repeated query
+    reuses ONE compiled program (no recompile, a program-cache hit)."""
+    from repro.cluster import default_pool, reset_default_pool
+    reset_default_pool()
+    x = jnp.asarray(uniform_keys(T * M, seed=25).reshape(T, M))
+    cluster.sort(x, algorithm="smms")
+    sub = default_pool()(T)
+    first = sub.stats_snapshot()
+    cluster.sort(x, algorithm="smms")
+    second = sub.stats_snapshot()
+    assert first["compiles"] >= 1
+    assert second["compiles"] == first["compiles"]
+    assert second["program_cache_hits"] > first.get("program_cache_hits", 0)
