@@ -31,15 +31,37 @@ BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 # sort + partition search + receive merge.  terasort: fused
 # sort_partition + receive merge.  The joins ride localjoin's
 # sort_kv + three searches; randjoin adds one fused routing dispatch
-# per table side.
+# per table side.  The *_staged variants add the intermediate-hop merge,
+# the re-partition search, and split the receive merge into
+# overlap_chunks (=2) chunk merges plus one cross-run merge:
+# smms_staged = sort + search + merge + search + 2 chunk merges + final;
+# terasort_staged fuses its sort+search so it is one less.
 DISPATCH_BUDGET = {
     "smms": 3,
     "terasort": 2,
+    "smms_staged": 7,
+    "terasort_staged": 6,
     "statjoin": 4,
     "repartition": 4,
     "broadcast": 4,
     "randjoin": 6,
 }
+
+
+def _merge_bench_json(update: dict) -> None:
+    """Read-modify-write BENCH_sort.json so the kernel-compare gate and
+    the exchange-compare report can each refresh their own keys without
+    clobbering the other's."""
+    data = {}
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {}
+    data.update(update)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(data, f, indent=2)
 
 
 def run(report_rows: List[str]) -> None:
@@ -174,15 +196,14 @@ def run_kernel_compare(report_rows: List[str]) -> None:
             f"{algorithm}: {kernel_calls} pallas dispatches exceed the "
             f"fusion budget {DISPATCH_BUDGET[algorithm]}")
 
-    with open(BENCH_JSON, "w") as f:
-        json.dump({"suite": "bench_sort.run_kernel_compare",
-                   "interpret_mode": ops.INTERPRET,
-                   "note": ("interpret-mode Pallas latencies are a "
-                            "correctness datapoint, not TPU performance; "
-                            "end-to-end rows time the warm fused front "
-                            "door, best of {} runs".format(reps)),
-                   "regression": regression,
-                   "entries": entries}, f, indent=2)
+    _merge_bench_json({"suite": "bench_sort.run_kernel_compare",
+                       "interpret_mode": ops.INTERPRET,
+                       "note": ("interpret-mode Pallas latencies are a "
+                                "correctness datapoint, not TPU performance; "
+                                "end-to-end rows time the warm fused front "
+                                "door, best of {} runs".format(reps)),
+                       "regression": regression,
+                       "entries": entries})
     report_rows.append(f"kernel_compare,json,{os.path.abspath(BENCH_JSON)}")
     # fail LOUDLY (nonzero exit through the harness) when the kernel
     # path lost end-to-end — the silent-regression mode this suite
@@ -190,6 +211,90 @@ def run_kernel_compare(report_rows: List[str]) -> None:
     assert not regression, (
         "kernel path slower than reference end-to-end; see "
         f"{os.path.abspath(BENCH_JSON)} (regression: true)")
+
+
+def run_exchange_compare(report_rows: List[str]) -> None:
+    """Flat vs staged exchange at growing t: timings + peak receive bytes.
+
+    One n = 2^17 uniform workload re-sharded at t in {16, 64, 256} on
+    the vmap substrate, each sorted through the real front door with
+    ``exchange="flat"`` and ``exchange="staged"``.  Asserts bitwise
+    output parity, then reports warm best-of timings and the peak
+    per-shard receive-buffer bytes each topology actually allocated
+    (the exact capacity formulas of repro.core.exchange, priced at the
+    cap_factor the retry loop settled on).  The flat path's per-pair
+    quantization forces capacity retries at large t — the staged win
+    the acceptance gate pins is ``staged_bytes < flat_bytes`` at t=256.
+    Results land under the "exchange_compare" key of BENCH_sort.json
+    (read-modify-write: the kernel-compare gate's keys survive).
+    """
+    from repro.core.exchange import (flat_receive_capacity,
+                                     staged_receive_capacities)
+    from repro.launch.mesh import factor_shards
+
+    n = 1 << 17
+    x = uniform_keys(n, seed=12)
+    reps = 3
+    bytes_per_obj = 4
+    entries = []
+    reset_default_pool()
+
+    def best_of(xt, **kw):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.time()
+            jax.block_until_ready(cluster.sort(xt, **kw))
+            best = min(best, (time.time() - t0) * 1e6)
+        return best
+
+    for t in (16, 64, 256):
+        m = n // t
+        xt = jnp.asarray(x.reshape(t, m))
+        kw = dict(algorithm="smms", kernel_backend="reference")
+        (flat_keys, _), rep_flat = cluster.sort(xt, exchange="flat", **kw)
+        (stag_keys, _), rep_stag = cluster.sort(xt, exchange="staged", **kw)
+        assert bool(np.array_equal(np.asarray(flat_keys),
+                                   np.asarray(stag_keys))), (
+            f"t={t}: staged exchange diverged from flat")
+        assert rep_stag.exchange_topology == "staged", rep_stag.summary()
+        flat_us = best_of(xt, exchange="flat", **kw)
+        stag_us = best_of(xt, exchange="staged", **kw)
+        t1, t2 = factor_shards(t)
+        flat_bytes = bytes_per_obj * flat_receive_capacity(
+            m, t, rep_flat.cap_factor)
+        stag_bytes = bytes_per_obj * max(staged_receive_capacities(
+            m, t1, t2, rep_stag.cap_factor))
+        entries.append({
+            "t": t, "m": m, "staged_shape": [t1, t2],
+            "flat_us": round(flat_us), "staged_us": round(stag_us),
+            "flat_cap_factor": rep_flat.cap_factor,
+            "staged_cap_factor": rep_stag.cap_factor,
+            "flat_capacity_attempts": rep_flat.capacity_attempts,
+            "staged_capacity_attempts": rep_stag.capacity_attempts,
+            "flat_peak_receive_bytes": flat_bytes,
+            "staged_peak_receive_bytes": stag_bytes,
+            "flat_alpha": rep_flat.alpha, "staged_alpha": rep_stag.alpha,
+            "bitwise_equal": True,
+        })
+        report_rows.append(
+            f"exchange_compare,t={t},flat_us={flat_us:.0f},"
+            f"staged_us={stag_us:.0f},flat_bytes={flat_bytes},"
+            f"staged_bytes={stag_bytes}")
+        if t == 256:
+            assert stag_bytes < flat_bytes, (
+                f"staged exchange must shrink the peak receive buffer at "
+                f"t=256: staged {stag_bytes} vs flat {flat_bytes} bytes")
+
+    _merge_bench_json({"exchange_compare": {
+        "suite": "bench_sort.run_exchange_compare",
+        "note": ("vmap-substrate wall clock on CPU is a correctness/"
+                 "convergence datapoint; the receive-bytes columns are "
+                 "the exact static buffer sizes the exchange allocates "
+                 "(per-shard peak, any stage)"),
+        "n": n, "entries": entries}})
+    report_rows.append(
+        f"exchange_compare,json,{os.path.abspath(BENCH_JSON)}")
+    reset_default_pool()
 
 
 def run_dispatch_budget(report_rows: List[str]) -> None:
@@ -207,8 +312,9 @@ def run_dispatch_budget(report_rows: List[str]) -> None:
     s_keys, t_keys = zipf_tables(n, n, theta=0.5, seed=9, domain=40)
     rows = np.arange(n)
 
-    def sort_query(algorithm):
+    def sort_query(algorithm, exchange="flat"):
         return lambda: cluster.sort(x, algorithm=algorithm,
+                                    exchange=exchange,
                                     kernel_backend="pallas")
 
     def join_query(algorithm):
@@ -218,6 +324,8 @@ def run_dispatch_budget(report_rows: List[str]) -> None:
 
     queries = {"smms": sort_query("smms"),
                "terasort": sort_query("terasort"),
+               "smms_staged": sort_query("smms", exchange="staged"),
+               "terasort_staged": sort_query("terasort", exchange="staged"),
                "statjoin": join_query("statjoin"),
                "repartition": join_query("repartition"),
                "broadcast": join_query("broadcast"),

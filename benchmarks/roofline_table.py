@@ -79,6 +79,49 @@ def roofline_table(recs):
     return "\n".join(rows)
 
 
+def exchange_table(bench):
+    """Per-stage network bytes of the sort exchange, expected vs achieved.
+
+    Expected comes from the roofline exchange model (the same buffer
+    arithmetic the runtime allocates); achieved is what
+    bench_sort.run_exchange_compare measured.  The per-stage rows are
+    what the flat columns of the kernel table cannot show: the staged
+    topology trades one t-fan-in hop for two sqrt(t) hops, and the bytes
+    column is where that shows up.
+    """
+    ec = bench.get("exchange_compare")
+    if not ec:
+        return ""
+    from repro.launch.roofline import exchange_stage_bytes
+    rows = ["| t | topology | stage | fan-in | expected recv/shard | "
+            "measured peak | retries | wall |",
+            "|---|---|---|---|---|---|---|---|"]
+    for e in ec.get("entries", []):
+        for topo in ("flat", "staged"):
+            stages = exchange_stage_bytes(
+                e["t"], e["m"], topology=topo,
+                cap_factor=e[f"{topo}_cap_factor"])
+            peak = max(s.receive_bytes for s in stages)
+            for i, s in enumerate(stages):
+                first = i == 0
+                rows.append(
+                    "| {t} | {topo} | {st} | {f} | {exp} | {meas} | {ret} "
+                    "| {wall} |".format(
+                        t=e["t"] if first and topo == "flat" else "",
+                        topo=topo if first else "",
+                        st=s.name, f=s.fanin,
+                        exp=fmt_bytes(s.receive_bytes),
+                        meas=(fmt_bytes(e[f"{topo}_peak_receive_bytes"])
+                              + ("" if peak ==
+                                 e[f"{topo}_peak_receive_bytes"]
+                                 else " (!)")) if first else "",
+                        ret=(e[f"{topo}_capacity_attempts"] - 1)
+                        if first else "",
+                        wall=fmt_s(e[f"{topo}_us"] * 1e-6)
+                        if first else ""))
+    return "\n".join(rows)
+
+
 def skips_table(recs):
     rows = []
     for r in recs:
@@ -91,6 +134,8 @@ def skips_table(recs):
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--dir", default="experiments/dryrun")
+    p.add_argument("--bench-sort", default="BENCH_sort.json",
+                   help="BENCH_sort.json with an exchange_compare record")
     args = p.parse_args()
     recs = load(args.dir)
     ok = sum(1 for r in recs if r.get("status") == "ok")
@@ -103,6 +148,12 @@ def main():
     print(skips_table(recs))
     print("\n## Roofline (single-pod, per device)\n")
     print(roofline_table(recs))
+    if os.path.exists(args.bench_sort):
+        with open(args.bench_sort) as f:
+            table = exchange_table(json.load(f))
+        if table:
+            print("\n## Exchange network bytes (per shard, per stage)\n")
+            print(table)
 
 
 if __name__ == "__main__":

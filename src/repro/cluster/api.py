@@ -86,7 +86,8 @@ def sort(x, *, algorithm: str = "smms",
          values=None, r: int = 2, seed: int = 0,
          cap_factor: Optional[float] = None,
          backend: str = "static", kernel_backend: Optional[str] = None,
-         policy=None, donate: bool = False):
+         policy=None, exchange: str = "flat", overlap_chunks: int = 2,
+         donate: bool = False):
     """Distributed sort of x: (t, m).  Returns ((keys, values), report).
 
     algorithm: one of SORT_ALGORITHMS, or "auto" to let the planner
@@ -99,6 +100,15 @@ def sort(x, *, algorithm: str = "smms",
     REPRO_KERNEL_BACKEND env var).  Outputs and (alpha, k) reports are
     bitwise-identical across kernel backends.
 
+    exchange: shuffle topology — "flat" (one t-way all_to_all, the
+    default), "staged" (two sqrt(t)-way hops over a t1 x t2 factored
+    substrate; smaller receive buffers at large t, one extra round), or
+    "auto" (the planner's topology model decides from t and the
+    predicted receive volume — exactly how ``algorithm="auto"`` picks
+    the algorithm).  Sorted output is bitwise-identical across
+    topologies; ``report.exchange_topology`` records what actually ran
+    (non-factorable t degrades staged to flat with a warning).
+
     donate: allow the compiled program to consume (reuse) the input
     buffers instead of copying them into the exchange pipeline — do not
     touch ``x``/``values`` afterwards.  Honored on donation-capable
@@ -110,24 +120,50 @@ def sort(x, *, algorithm: str = "smms",
         raise ValueError(
             f"sort expects x of shape (t, m) — one row per machine — got "
             f"shape {np.shape(x)}; reshape with x.reshape(t, -1)")
-    substrate = _resolve_substrate(substrate, int(np.shape(x)[0]))
+    t, m = (int(d) for d in np.shape(x))
+    if exchange not in ("flat", "staged", AUTO):
+        raise ValueError(f"unknown exchange topology {exchange!r}; "
+                         f"expected 'flat', 'staged' or '{AUTO}'")
     if algorithm == AUTO:
         from repro.planner import plan_sort_query
         plan, sketch_phases = plan_sort_query(
-            x, t=int(np.shape(x)[0]), r=r, kernel_backend=kernel_backend,
-            substrate=substrate)
+            x, t=t, r=r, kernel_backend=kernel_backend,
+            substrate=_resolve_substrate(substrate, t))
         out, report = sort(x, algorithm=plan.algorithm, substrate=substrate,
                            values=values, r=r, seed=seed,
                            cap_factor=cap_factor, backend=backend,
                            kernel_backend=kernel_backend, policy=policy,
-                           donate=donate)
+                           exchange=(plan.exchange if exchange == AUTO
+                                     else exchange),
+                           overlap_chunks=overlap_chunks, donate=donate)
         _attach_plan(report, plan, sketch_phases)
         return out, report
+    if exchange == AUTO:
+        from repro.planner import choose_exchange
+        exchange, _ = choose_exchange(t, m, algorithm=algorithm, r=r,
+                                      cap_factor=cap_factor,
+                                      overlap_chunks=overlap_chunks)
+    # Resolve providers/None with the topology's axis spec; an explicit
+    # Substrate instance passes through (the core wrappers reconcile it
+    # with the requested topology, warning on impossible combinations).
+    if not isinstance(substrate, Substrate):
+        from repro.launch.mesh import STAGED_AXIS_NAMES, factor_shards
+        fs = factor_shards(t, warn=(exchange == "staged")) \
+            if exchange == "staged" else None
+        if fs is None:
+            substrate = _resolve_substrate(substrate, t)
+            exchange = "flat"
+        else:
+            substrate = _resolve_substrate(
+                substrate, (STAGED_AXIS_NAMES[0], fs[0]),
+                (STAGED_AXIS_NAMES[1], fs[1]))
     if algorithm == "smms":
         from repro.core.smms import smms_sort
         return smms_sort(x, r=r, cap_factor=cap_factor, values=values,
                          backend=backend, kernel_backend=kernel_backend,
-                         substrate=substrate, policy=policy, donate=donate)
+                         substrate=substrate, policy=policy,
+                         exchange=exchange, overlap_chunks=overlap_chunks,
+                         donate=donate)
     if algorithm == "terasort":
         from repro.core.terasort import terasort_sort
         if values is not None:
@@ -135,11 +171,15 @@ def sort(x, *, algorithm: str = "smms",
                                  backend=backend, values=values,
                                  kernel_backend=kernel_backend,
                                  substrate=substrate, policy=policy,
+                                 exchange=exchange,
+                                 overlap_chunks=overlap_chunks,
                                  donate=donate)
         flat, report = terasort_sort(x, seed=seed, cap_factor=cap_factor,
                                      backend=backend,
                                      kernel_backend=kernel_backend,
                                      substrate=substrate, policy=policy,
+                                     exchange=exchange,
+                                     overlap_chunks=overlap_chunks,
                                      donate=donate)
         return (flat, None), report
     raise ValueError(f"unknown sort algorithm {algorithm!r}; "

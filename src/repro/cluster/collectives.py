@@ -126,6 +126,95 @@ class CollectiveTape:
             self.record(sent=s, received=r)
         return out
 
+    def all_gather_multi(self, x, axis_names, *, count=None,
+                         track: bool = True):
+        """Ordered nested gather over factored sub-axes.
+
+        The result's leading dims are the axis sizes, outermost first
+        (``axis_names=("i1", "i2")`` over a (c,)-operand yields
+        (t1, t2, c) in global machine order g = i1*t2 + i2 — reshape to
+        (t, c) reproduces the flat gather bitwise).  Each hop's traffic
+        is recorded separately: the relayed copies genuinely transit the
+        network twice, and k_network must see that.
+        """
+        c = jnp.asarray(count if count is not None else _leading_count(x))
+        out = x
+        for name in reversed(tuple(axis_names)):
+            out = self.all_gather(out, name, count=c, track=track)
+            c = c * lax.psum(1, name)
+        return out
+
+    def staged_all_to_all(self, keys_buf, axis_names, *, values_buf=None,
+                          sent=None, pad=None, restage=None, chunks: int = 1,
+                          chunk_fn=None, phase_prefix: str = "shuffle"):
+        """Two-hop exchange over factored sub-axes (the AMS-style staging).
+
+        Stage 1 is one all_to_all over ``axis_names[0]``: row g of
+        ``keys_buf`` is addressed to machine *group* g.  Between the
+        hops, ``restage(landed_keys, landed_values)`` maps the stage-1
+        landing to ``(buf2, vals2, sent2)`` with ``buf2`` rows addressed
+        to the final machines along ``axis_names[1]`` — the compacted
+        exchange passes its merge + re-partition here.  Without a
+        ``restage``, a pure relay runs: ``keys_buf`` must then be
+        (t1, t2, C) with block [g, d2] addressed to machine (g, d2), and
+        the stage-2 landing, reassembled source-major, is bitwise equal
+        to the flat t-way all_to_all of the same buffer.
+
+        Stage 2 is issued in ``chunks`` column slices; ``chunk_fn(keys,
+        values)`` runs on each landed chunk *between* the chunked
+        collectives — on an async runtime chunk i's merge overlaps chunk
+        i+1's exchange (double-buffering).  ``chunks`` must divide the
+        stage-2 row length.
+
+        Each stage records into its own phase (``"<prefix> s1"`` /
+        ``"<prefix> s2"``) so alpha counts the extra synchronization and
+        k_network's per-phase max sees each stage's true peak — exactly
+        the accounting the flat exchange gets for its single phase.
+        Returns ``(chunk_outputs, sent_stage2)``.
+        """
+        a1, a2 = axis_names
+        with self.phase(f"{phase_prefix} s1"):
+            rk = self.all_to_all(keys_buf, a1, sent=sent, pad=pad)
+            rv = (self.all_to_all(values_buf, a1, track=False)
+                  if values_buf is not None else None)
+        if restage is not None:
+            buf2, vals2, sent2 = restage(rk, rv)
+        else:
+            if rk.ndim < 2:
+                raise ValueError("relay staging needs a (t1, t2, ...) "
+                                 "buffer; pass restage= for other layouts")
+            swap = lambda y: jnp.reshape(jnp.swapaxes(y, 0, 1),
+                                         (y.shape[1], -1))
+            buf2 = swap(rk)
+            vals2 = swap(rv) if rv is not None else None
+            if pad is not None:
+                vrow = jnp.sum(
+                    (buf2 < jnp.asarray(pad, buf2.dtype)).reshape(
+                        buf2.shape[0], -1), axis=1)
+                sent2 = jnp.sum(vrow) - vrow[lax.axis_index(a2)]
+            else:
+                sent2 = jnp.asarray(
+                    (buf2.shape[0] - 1) * int(np.prod(buf2.shape[1:])))
+        chunks = max(1, int(chunks))
+        width = buf2.shape[1]
+        if width % chunks != 0:
+            raise ValueError(f"chunks={chunks} must divide the stage-2 "
+                             f"row length {width}")
+        cc = width // chunks
+        outs = []
+        with self.phase(f"{phase_prefix} s2"):
+            for j in range(chunks):
+                ck = lax.slice_in_dim(buf2, j * cc, (j + 1) * cc, axis=1)
+                cv = (lax.slice_in_dim(vals2, j * cc, (j + 1) * cc, axis=1)
+                      if vals2 is not None else None)
+                s = sent2 if j == 0 else jnp.zeros((), jnp.int32)
+                ok = self.all_to_all(ck, a2, sent=s, pad=pad)
+                ov = (self.all_to_all(cv, a2, track=False)
+                      if cv is not None else None)
+                outs.append(chunk_fn(ok, ov) if chunk_fn is not None
+                            else (ok, ov))
+        return outs, sent2
+
     def ragged_all_to_all(self, operand, output, input_offsets, send_sizes,
                           output_offsets, recv_sizes, *, axis_name: str,
                           sent=None, track: bool = True):

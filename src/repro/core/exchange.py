@@ -42,6 +42,8 @@ __all__ = [
     "static_exchange",
     "ragged_exchange",
     "exchange_sorted_segments",
+    "flat_receive_capacity",
+    "staged_receive_capacities",
 ]
 
 # Sentinel key for padded slots.  Keys are required to be finite floats or
@@ -166,6 +168,118 @@ def ragged_exchange(x_sorted: jnp.ndarray, starts: jnp.ndarray,
     return recv, recv_v, jnp.sum(recv_sizes)
 
 
+def flat_receive_capacity(m: int, t: int, cap_factor: float) -> int:
+    """Receive-buffer slots of the flat exchange: t * ceil-per-pair.
+
+    This is the exact formula the flat path sizes its landing buffer
+    with — exported so the planner's topology model and the benchmark's
+    peak-receive-bytes report price the same quantization the hardware
+    pays (at large t, ``cap_total/t`` rounds *up* per pair, and a single
+    hot pair forces the whole factor through the retry loop).
+    """
+    return int(-(-int(cap_factor * m) // t) * t)
+
+
+def staged_receive_capacities(m: int, t1: int, t2: int, cap_factor: float,
+                              overlap_chunks: int = 2) -> Tuple[int, int]:
+    """(stage-1, stage-2) receive-buffer slots of the staged exchange.
+
+    Stage 1 lands (t1, C1) with C1 = ceil(cap_factor*m / t1); stage 2
+    lands (t2, C2) with C2 rounded up so ``overlap_chunks`` divides it.
+    Per-pair loads at each stage are m/t1-scale rather than m/t-scale,
+    so the base factor survives quantization that forces the flat path
+    into capacity retries.
+    """
+    c1 = -(-int(cap_factor * m) // t1)
+    chunks = max(1, int(overlap_chunks))
+    c2 = -(-int(cap_factor * m) // t2)
+    c2 = -(-c2 // chunks) * chunks
+    return t1 * c1, t2 * c2
+
+
+def _staged_exchange(x_sorted, interior, starts, lens, *, axis_names,
+                     t1: int, t2: int, m: int, cap_factor: float,
+                     values, kernel_backend, valid_len, overlap_chunks: int,
+                     tape, phase_prefix: str) -> "ExchangeResult":
+    """Two-level compacted exchange (AMS-style): group-hop, merge,
+    re-partition, final hop with overlapped chunk merges.
+
+    Objects travel to their *destination group* along ``axis_names[0]``
+    first (one segment per group: t2 consecutive flat segments fused),
+    are merged and re-cut against the group's t2-1 interior boundaries,
+    then travel to their final machine along ``axis_names[1]``.  The
+    boundaries are global, so the final per-machine multiset is exactly
+    the flat path's — sorted output parity is bitwise.  Per-stage
+    capacities are ceil(cap_factor*m / t1) and / t2 (m/sqrt(t)-scale
+    pair loads), which is where the peak-receive win over the flat
+    t * ceil(cap_factor*m / t) buffer comes from.
+    """
+    a1, a2 = axis_names
+    chunks = max(1, int(overlap_chunks))
+    c1 = -(-int(cap_factor * m) // t1)
+    c2 = -(-int(cap_factor * m) // t2)
+    c2 = -(-c2 // chunks) * chunks
+    # group segmentation: group g's segment = flat segments [g*t2, (g+1)*t2)
+    g_starts = starts[::t2]                                      # (t1,)
+    g_ends = jnp.concatenate([starts[t2::t2],
+                              jnp.full((1,), m, starts.dtype)])
+    g_lens = g_ends - g_starts
+    kbuf1, vbuf1, drop1 = build_send_buffer(x_sorted, g_starts, g_lens, c1,
+                                            values, valid_len=valid_len)
+    me1 = lax.axis_index(a1)
+    sent1 = m - g_lens[me1]
+    aux = {}
+
+    def restage(rk, rv):
+        # merge the t1 landed sorted rows, then re-cut by MY group's
+        # interior boundaries b[g*t2+1 .. g*t2+t2-1] (global indices
+        # interior[g*t2 .. g*t2+t2-2]) — the same side='left' rule the
+        # flat partition applies, so routing is identical.
+        if rv is not None:
+            merged, merged_v = ops.merge_sorted_rows_kv(
+                rk, rv, backend=kernel_backend)
+        else:
+            merged = ops.merge_sorted_rows(rk, backend=kernel_backend)
+            merged_v = None
+        count1 = jnp.sum(merged < jnp.asarray(PAD, merged.dtype)
+                         ).astype(jnp.int32)
+        local_interior = lax.dynamic_slice(interior, (me1 * t2,), (t2 - 1,))
+        s2_starts, s2_lens = partition_sorted(merged, local_interior,
+                                              kernel_backend=kernel_backend,
+                                              valid_len=count1)
+        kbuf2, vbuf2, drop2 = build_send_buffer(merged, s2_starts, s2_lens,
+                                                c2, merged_v,
+                                                valid_len=count1)
+        aux["drop2"] = drop2
+        return kbuf2, vbuf2, count1 - s2_lens[lax.axis_index(a2)]
+
+    def chunk_fn(rk, rv):
+        if rv is not None:
+            return ops.merge_sorted_rows_kv(rk, rv, backend=kernel_backend)
+        return ops.merge_sorted_rows(rk, backend=kernel_backend), None
+
+    outs, sent2 = tape.staged_all_to_all(
+        kbuf1, (a1, a2), values_buf=vbuf1, sent=sent1, pad=PAD,
+        restage=restage, chunks=chunks, chunk_fn=chunk_fn,
+        phase_prefix=phase_prefix)
+    if len(outs) == 1:
+        final_k, final_v = outs[0]
+    else:
+        # cross-run merge of the per-chunk merges (each run is sorted)
+        stacked = jnp.stack([ck for ck, _ in outs])
+        if values is not None:
+            final_k, final_v = ops.merge_sorted_rows_kv(
+                stacked, jnp.stack([cv for _, cv in outs]),
+                backend=kernel_backend)
+        else:
+            final_k = ops.merge_sorted_rows(stacked, backend=kernel_backend)
+            final_v = None
+    count = jnp.sum(final_k < jnp.asarray(PAD, final_k.dtype)
+                    ).astype(jnp.int32)
+    dropped = tape.psum(drop1 + aux["drop2"], (a1, a2)).astype(jnp.int32)
+    return ExchangeResult(final_k, final_v, count, sent1 + sent2, dropped)
+
+
 class ExchangeResult(NamedTuple):
     keys: jnp.ndarray             # (capacity,) sorted ascending, pads last
     values: Optional[jnp.ndarray]
@@ -176,7 +290,7 @@ class ExchangeResult(NamedTuple):
 
 def exchange_sorted_segments(x_sorted: jnp.ndarray,
                              interior: jnp.ndarray,
-                             *, axis_name: str, t: int,
+                             *, axis_name, t: int,
                              cap_factor: float,
                              values: Optional[jnp.ndarray] = None,
                              backend: str = "static",
@@ -184,7 +298,11 @@ def exchange_sorted_segments(x_sorted: jnp.ndarray,
                              kernel_backend: Optional[str] = None,
                              sort_input: bool = False,
                              valid_len: Optional[int] = None,
-                             tape=None) -> ExchangeResult:
+                             tape=None,
+                             staged_shape: Optional[Tuple[int, int]] = None,
+                             overlap_chunks: int = 2,
+                             phase_prefix: str = "shuffle"
+                             ) -> ExchangeResult:
     """Round-3 shuffle: deliver bucket k of every device to device k.
 
     x_sorted: (m,) locally sorted keys.  interior: (t-1,) boundaries.
@@ -204,6 +322,14 @@ def exchange_sorted_segments(x_sorted: jnp.ndarray,
     ``valid_len=m`` accepts keys (and values) pre-padded past m real
     objects with the sort sentinel (``ops.pad_pow2``), avoiding per-op
     pad/unpad round trips; mutually exclusive with ``sort_input``.
+
+    ``staged_shape=(t1, t2)`` selects the two-level staged topology:
+    ``axis_name`` must then be the (sub-axis-1, sub-axis-2) name pair of
+    a t1 x t2 substrate and the shuffle runs as two ~sqrt(t)-way hops
+    (see :func:`_staged_exchange`); the per-stage traffic lands in its
+    own tape phase (``"<phase_prefix> s1"`` / ``"s2"``), so staged
+    callers must NOT wrap this call in their own phase context.
+    Output keys are bitwise equal to the flat path's.
     """
     if backend not in ("static", "ragged"):
         raise ValueError(f"unknown exchange backend {backend!r}; "
@@ -211,6 +337,18 @@ def exchange_sorted_segments(x_sorted: jnp.ndarray,
     if sort_input and valid_len is not None:
         raise ValueError("sort_input=True takes unpadded input; "
                          "valid_len cannot be combined with it")
+    if staged_shape is not None:
+        t1, t2 = int(staged_shape[0]), int(staged_shape[1])
+        if t1 * t2 != t or min(t1, t2) < 2:
+            raise ValueError(f"staged_shape {staged_shape} must factor "
+                             f"t={t} with both sub-axes >= 2")
+        if backend != "static":
+            raise NotImplementedError(
+                "staged exchange supports the static backend only")
+        if not merge:
+            raise ValueError("staged exchange implies merge=True "
+                             "(the intermediate hop re-partitions a "
+                             "merged vector)")
     m = valid_len if valid_len is not None else x_sorted.shape[0]
     cap_total = int(-(-int(cap_factor * m) // t) * t)  # round up to mult of t
     cap_pair = cap_total // t
@@ -225,6 +363,14 @@ def exchange_sorted_segments(x_sorted: jnp.ndarray,
         starts, lens = partition_sorted(x_sorted, interior,
                                         kernel_backend=kernel_backend,
                                         valid_len=valid_len)
+    if staged_shape is not None:
+        return _staged_exchange(
+            x_sorted, interior, starts, lens, axis_names=tuple(axis_name),
+            t1=t1, t2=t2, m=m, cap_factor=cap_factor, values=values,
+            kernel_backend=kernel_backend, valid_len=valid_len,
+            overlap_chunks=overlap_chunks,
+            tape=tape if tape is not None else _null_tape(),
+            phase_prefix=phase_prefix)
     me = lax.axis_index(axis_name)
     sent = m - lens[me]  # objects leaving this device
     tape = tape if tape is not None else _null_tape()

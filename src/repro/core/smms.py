@@ -36,7 +36,62 @@ from .boundaries import boundaries_jax, equidepth_samples
 from .exchange import ExchangeResult, exchange_sorted_segments
 from .alpha_k import smms_workload_bound
 
-__all__ = ["smms_shard", "smms_sort", "SortResult", "default_cap_factor"]
+__all__ = ["smms_shard", "smms_sort", "SortResult", "default_cap_factor",
+           "resolve_exchange_topology"]
+
+
+def resolve_exchange_topology(substrate: Optional[Substrate], t: int,
+                              exchange: str = "flat"):
+    """Resolve (substrate, staged_shape) for a t-machine sort.
+
+    The one place the host wrappers decide flat-vs-staged:
+
+    * a 2-axis substrate always runs staged over its own (t1, t2) shape
+      (there is no single axis to run the flat exchange over);
+    * ``exchange="staged"`` with no substrate resolves a pooled 2-axis
+      substrate over the balanced factorization of t — non-factorable t
+      warns and degrades to flat (the staged path is an optimization,
+      never a requirement);
+    * ``exchange="staged"`` with an explicit 1-axis substrate warns and
+      stays flat (the caller pinned the topology by picking the mesh).
+
+    ``staged_shape=None`` in the result means the flat exchange.
+    """
+    import warnings
+
+    from repro.launch.mesh import STAGED_AXIS_NAMES, factor_shards
+
+    if exchange not in ("flat", "staged"):
+        raise ValueError(f"unknown exchange topology {exchange!r}; "
+                         "expected 'flat' or 'staged'")
+    if substrate is not None and not callable(substrate) \
+            and len(substrate.axes) == 2:
+        t1, t2 = substrate.shape
+        if min(t1, t2) < 2:
+            raise ValueError(f"2-axis substrate {substrate.shape} cannot "
+                             "stage the exchange: both sub-axes must be "
+                             ">= 2")
+        return substrate, (t1, t2)
+    pool = substrate if callable(substrate) and not isinstance(
+        substrate, Substrate) else None
+    if exchange == "staged":
+        if substrate is not None and pool is None:
+            warnings.warn(
+                "explicit single-axis substrate cannot run the staged "
+                "exchange; falling back to the flat topology",
+                stacklevel=2)
+            return substrate, None
+        fs = factor_shards(t, warn=True)
+        provider = pool if pool is not None else default_pool()
+        if fs is None:
+            return provider(t), None
+        return provider((STAGED_AXIS_NAMES[0], fs[0]),
+                        (STAGED_AXIS_NAMES[1], fs[1])), fs
+    if substrate is None:
+        return default_pool()(t), None
+    if pool is not None:
+        return pool(t), None
+    return substrate, None
 
 
 class SortResult(NamedTuple):
@@ -53,12 +108,14 @@ def default_cap_factor(n: int, t: int, r: int, slack: float = 1.05) -> float:
     return CapacityPolicy.smms(n, t, r, slack=slack).first_factor
 
 
-def smms_shard(x_local: jnp.ndarray, *, axis_name: str, t: int, r: int = 2,
+def smms_shard(x_local: jnp.ndarray, *, axis_name, t: int, r: int = 2,
                cap_factor: Optional[float] = None,
                values: Optional[jnp.ndarray] = None,
                backend: str = "static",
                local_sort=None,
                kernel_backend: Optional[str] = None,
+               staged_shape: Optional[tuple] = None,
+               overlap_chunks: int = 2,
                tape: Optional[CollectiveTape] = None) -> SortResult:
     """Per-device SMMS body.  x_local: (m,) this machine's objects.
 
@@ -67,6 +124,12 @@ def smms_shard(x_local: jnp.ndarray, *, axis_name: str, t: int, r: int = 2,
     "reference" = jnp, None = ops.DEFAULT_BACKEND); results are bitwise
     identical either way.  An explicit ``local_sort`` callable overrides
     the Round-1 keys-only sort (test hook).
+
+    ``staged_shape=(t1, t2)`` runs Round 3 as the two-level staged
+    exchange: ``axis_name`` must then be the (sub-axis-1, sub-axis-2)
+    name pair of a t1 x t2 substrate.  The shuffle splits into two tape
+    phases ("round3 shuffle s1"/"s2"), so alpha rises from 3 to 4 while
+    the sorted output stays bitwise equal to the flat path.
     """
     m = x_local.shape[0]
     n = m * t
@@ -93,18 +156,34 @@ def smms_shard(x_local: jnp.ndarray, *, axis_name: str, t: int, r: int = 2,
             xs = ops.sort(ops.pad_pow2(x_local), backend=kernel_backend,
                           prepadded=True)
         lam = equidepth_samples(xs[:m], s)                # (s+1,)
-        lam_all = tape.all_gather(lam, axis_name)         # (t, s+1)
+        if staged_shape is not None:
+            lam_all = tape.all_gather_multi(lam, axis_name)   # (t1, t2, s+1)
+            lam_all = lam_all.reshape(t, s + 1)
+        else:
+            lam_all = tape.all_gather(lam, axis_name)     # (t, s+1)
 
     # -- Round 2: replicated Algorithm 1 (no traffic, still a round) --------
     with tape.phase("round2 boundaries"):
         b = boundaries_jax(lam_all, m, s)                 # (t+1,)
 
     # -- Round 3: bucketed shuffle + merge ----------------------------------
-    with tape.phase("round3 shuffle"):
+    if staged_shape is not None:
+        # The staged exchange declares its own per-stage phases
+        # ("round3 shuffle s1"/"s2"); wrapping it in an outer phase here
+        # would add an empty round and inflate alpha.
         ex: ExchangeResult = exchange_sorted_segments(
             xs, b[1:-1], axis_name=axis_name, t=t, cap_factor=cap_factor,
             values=values, backend=backend, merge=True,
-            kernel_backend=kernel_backend, valid_len=valid_len, tape=tape)
+            kernel_backend=kernel_backend, valid_len=valid_len, tape=tape,
+            staged_shape=staged_shape, overlap_chunks=overlap_chunks,
+            phase_prefix="round3 shuffle")
+    else:
+        with tape.phase("round3 shuffle"):
+            ex = exchange_sorted_segments(
+                xs, b[1:-1], axis_name=axis_name, t=t,
+                cap_factor=cap_factor, values=values, backend=backend,
+                merge=True, kernel_backend=kernel_backend,
+                valid_len=valid_len, tape=tape)
     return SortResult(ex.keys, ex.values, ex.count, ex.sent, ex.dropped, b)
 
 
@@ -126,6 +205,8 @@ def smms_sort(x: jnp.ndarray, r: int = 2,
               kernel_backend: Optional[str] = None,
               substrate: Optional[Substrate] = None,
               policy: Optional[CapacityPolicy] = None,
+              exchange: str = "flat",
+              overlap_chunks: int = 2,
               donate: bool = False):
     """Sort x of shape (t, m) across t machines on the given substrate.
 
@@ -135,11 +216,17 @@ def smms_sort(x: jnp.ndarray, r: int = 2,
     calls.  ``donate=True`` lets that program consume the input buffers
     (honored only when the capacity schedule is single-shot — a retry
     must re-read the operands — and on platforms with donation support).
+
+    ``exchange="staged"`` routes Round 3 through the two-level staged
+    exchange over a (t1, t2)-factored substrate (see
+    :func:`resolve_exchange_topology` for the fallback rules); the
+    sorted output is bitwise equal to the flat path and
+    ``report.exchange_topology`` records which topology actually ran.
     """
     t, m = x.shape
     n = t * m
-    if substrate is None:
-        substrate = default_pool()(t)
+    substrate, staged_shape = resolve_exchange_topology(substrate, t,
+                                                        exchange)
     assert substrate.t == t, (substrate, t)
     if policy is None:
         policy = (CapacityPolicy.fixed(cap_factor) if cap_factor is not None
@@ -147,18 +234,28 @@ def smms_sort(x: jnp.ndarray, r: int = 2,
     donate_argnums = ()
     if donate and policy.max_retries == 0:
         donate_argnums = (0,) if values is None else (0, 1)
+    if staged_shape is not None:
+        xr = x.reshape(staged_shape + (m,))
+        vr = (values.reshape(staged_shape + values.shape[1:])
+              if values is not None else None)
+        axis_arg = substrate.axis_names
+    else:
+        xr, vr, axis_arg = x, values, substrate.axis_name
 
     def attempt(factor):
-        static = dict(axis_name=substrate.axis_name, t=t, r=r,
+        static = dict(axis_name=axis_arg, t=t, r=r,
                       cap_factor=float(factor), backend=backend,
                       kernel_backend=kernel_backend)
+        if staged_shape is not None:
+            static.update(staged_shape=staged_shape,
+                          overlap_chunks=int(overlap_chunks))
         if values is not None:
             res, tape = substrate.run(
-                functools.partial(_smms_shard_kv, **static), x, values,
+                functools.partial(_smms_shard_kv, **static), xr, vr,
                 donate_argnums=donate_argnums)
         else:
             res, tape = substrate.run(
-                functools.partial(smms_shard, **static), x,
+                functools.partial(smms_shard, **static), xr,
                 donate_argnums=donate_argnums)
         return (res, tape), int(np.asarray(res.dropped).reshape(-1)[0])
 
@@ -170,10 +267,14 @@ def smms_sort(x: jnp.ndarray, r: int = 2,
     vals = None
     if res.values is not None:
         v = np.asarray(res.values)
+        if staged_shape is not None:      # (t1, t2, C, ...) -> (t, C, ...)
+            v = v.reshape((t,) + v.shape[2:])
         vals = np.concatenate([v[i, :counts[i]] for i in range(t)])
 
     report = tape.report(algorithm=f"SMMS(r={r})", t=t, n_in=n, n_out=n,
                          workload=counts)
+    report.exchange_topology = ("staged" if staged_shape is not None
+                                else "flat")
     report.theoretical_workload_bound = smms_workload_bound(n, t, r)
     report.total_dropped = 0
     report.cap_factor = factor

@@ -35,27 +35,42 @@ from repro.cluster.substrate import Substrate, default_pool
 
 from .exchange import exchange_sorted_segments
 from .sampling import algorithm_s, terasort_sample_count
-from .smms import SortResult
+from .smms import SortResult, resolve_exchange_topology
 from .alpha_k import terasort_workload_bound
 
 __all__ = ["terasort_shard", "terasort_sort"]
 
 
-def terasort_shard(x_local: jnp.ndarray, rng: jax.Array, *, axis_name: str,
+def terasort_shard(x_local: jnp.ndarray, rng: jax.Array, *, axis_name,
                    t: int, q: int, cap_factor: float = 5.5,
                    values: Optional[jnp.ndarray] = None,
                    backend: str = "static",
                    kernel_backend: Optional[str] = None,
+                   staged_shape: Optional[tuple] = None,
+                   overlap_chunks: int = 2,
                    tape: Optional[CollectiveTape] = None) -> SortResult:
-    """Per-device Terasort body.  x_local: (m,), rng: per-device PRNG key."""
+    """Per-device Terasort body.  x_local: (m,), rng: per-device PRNG key.
+
+    ``staged_shape=(t1, t2)`` runs Round 3 as the two-level staged
+    exchange over the ``axis_name`` sub-axis pair (alpha 3 -> 4, output
+    bitwise unchanged) — same contract as
+    :func:`repro.core.smms.smms_shard`.
+    """
     m = x_local.shape[0]
     if tape is None:
         tape = CollectiveTape()
 
     # -- Round 1: Algorithm-S sampling --------------------------------------
+    # (The staged gather relays samples hop-by-hop; the global SORT of
+    # the pooled samples makes boundary selection order-independent, so
+    # boundaries match the flat path bitwise.)
     with tape.phase("round1->2 samples"):
         samples = algorithm_s(rng, x_local, q)            # (q,)
-        all_samples = jnp.sort(tape.all_gather(samples, axis_name).reshape(-1))
+        if staged_shape is not None:
+            gathered = tape.all_gather_multi(samples, axis_name)
+        else:
+            gathered = tape.all_gather(samples, axis_name)
+        all_samples = jnp.sort(gathered.reshape(-1))
 
     # -- Round 2: every ceil(s/t)-th sample as boundary (replicated) --------
     with tape.phase("round2 boundaries"):
@@ -69,12 +84,24 @@ def terasort_shard(x_local: jnp.ndarray, rng: jax.Array, *, axis_name: str,
     # into ONE kernel dispatch (ops.sort_partition[_kv]) — unlike SMMS,
     # Terasort's sort and partition are adjacent (no sample gather in
     # between), so the whole pre-shuffle pipeline is a single pass.
-    with tape.phase("round3 shuffle"):
+    if staged_shape is not None:
+        # staged path: the exchange declares its own "round3 shuffle
+        # s1"/"s2" phases — no outer phase, or alpha double-counts.
         ex = exchange_sorted_segments(x_local, interior, axis_name=axis_name,
                                       t=t, cap_factor=cap_factor,
                                       values=values, backend=backend,
                                       merge=True, sort_input=True,
-                                      kernel_backend=kernel_backend, tape=tape)
+                                      kernel_backend=kernel_backend,
+                                      tape=tape, staged_shape=staged_shape,
+                                      overlap_chunks=overlap_chunks,
+                                      phase_prefix="round3 shuffle")
+    else:
+        with tape.phase("round3 shuffle"):
+            ex = exchange_sorted_segments(
+                x_local, interior, axis_name=axis_name, t=t,
+                cap_factor=cap_factor, values=values, backend=backend,
+                merge=True, sort_input=True,
+                kernel_backend=kernel_backend, tape=tape)
     b = jnp.concatenate([all_samples[:1], interior, all_samples[-1:]])
     return SortResult(ex.keys, ex.values, ex.count, ex.sent, ex.dropped, b)
 
@@ -93,6 +120,8 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
                   substrate: Optional[Substrate] = None,
                   policy: Optional[CapacityPolicy] = None,
                   values: Optional[jnp.ndarray] = None,
+                  exchange: str = "flat",
+                  overlap_chunks: int = 2,
                   donate: bool = False):
     """Host wrapper over t machines on a substrate.  x: (t, m).
 
@@ -109,8 +138,8 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
     n = t * m
     q = terasort_sample_count(n, t)
     rngs = jax.random.split(jax.random.key(seed), t)
-    if substrate is None:
-        substrate = default_pool()(t)
+    substrate, staged_shape = resolve_exchange_topology(substrate, t,
+                                                        exchange)
     assert substrate.t == t, (substrate, t)
     if policy is None:
         policy = (CapacityPolicy.fixed(cap_factor) if cap_factor is not None
@@ -118,18 +147,29 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
     donate_argnums = ()
     if donate and policy.max_retries == 0:
         donate_argnums = (0,) if values is None else (0, 2)
+    if staged_shape is not None:
+        xr = x.reshape(staged_shape + (m,))
+        rr = rngs.reshape(staged_shape + rngs.shape[1:])
+        vr = (values.reshape(staged_shape + values.shape[1:])
+              if values is not None else None)
+        axis_arg = substrate.axis_names
+    else:
+        xr, rr, vr, axis_arg = x, rngs, values, substrate.axis_name
 
     def attempt(factor):
-        static = dict(axis_name=substrate.axis_name, t=t, q=q,
+        static = dict(axis_name=axis_arg, t=t, q=q,
                       cap_factor=float(factor), backend=backend,
                       kernel_backend=kernel_backend)
+        if staged_shape is not None:
+            static.update(staged_shape=staged_shape,
+                          overlap_chunks=int(overlap_chunks))
         if values is not None:
             res, tape = substrate.run(
                 functools.partial(_terasort_shard_kv, **static),
-                x, rngs, values, donate_argnums=donate_argnums)
+                xr, rr, vr, donate_argnums=donate_argnums)
         else:
             res, tape = substrate.run(
-                functools.partial(terasort_shard, **static), x, rngs,
+                functools.partial(terasort_shard, **static), xr, rr,
                 donate_argnums=donate_argnums)
         return (res, tape), int(np.asarray(res.dropped).reshape(-1)[0])
 
@@ -141,10 +181,14 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
     vals = None
     if res.values is not None:
         v = np.asarray(res.values)
+        if staged_shape is not None:      # (t1, t2, C, ...) -> (t, C, ...)
+            v = v.reshape((t,) + v.shape[2:])
         vals = np.concatenate([v[i, :counts[i]] for i in range(t)])
 
     report = tape.report(algorithm="Terasort+AlgS", t=t, n_in=n, n_out=n,
                          workload=counts)
+    report.exchange_topology = ("staged" if staged_shape is not None
+                                else "flat")
     report.theoretical_workload_bound = terasort_workload_bound(n, t)
     report.total_dropped = 0
     report.cap_factor = factor

@@ -179,8 +179,63 @@ def _rank_kernel(qk_ref, qi_ref, bk_ref, bi_ref, pos_ref, *, c: int):
         qk_ref[...], qi_ref[...], bk_ref[...], bi_ref[...], c)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _bin_search_pairs_bounded(qk, qi, bk, bi, n_valid, steps: int
+                              ) -> jnp.ndarray:
+    """Count pairs in ONE bound block lexicographically < each query.
+
+    The blocked twin of :func:`_bin_search_pairs_block`: ``bk``/``bi``
+    is a (1, bb) column slice of a bound row and ``n_valid`` (traced)
+    is how many of its slots are real.  ``steps`` is static (sized for
+    the full block); once lo == hi the extra iterations are saturated
+    no-ops, so a short tail block just wastes a few compares.  The mid
+    clamp keeps the gather in-range even for an empty block (n_valid=0,
+    where lo == hi == 0 from the start and the probe result is unused).
+    """
+    lo = jnp.zeros(qk.shape, jnp.int32)
+    hi = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), qk.shape)
+    width = bk.shape[-1]
+    for _ in range(steps):
+        mid = jnp.clip((lo + hi) // 2, 0, width - 1)
+        k_mid = jnp.take_along_axis(bk, mid, axis=-1)
+        i_mid = jnp.take_along_axis(bi, mid, axis=-1)
+        pred = (k_mid < qk) | ((k_mid == qk) & (i_mid < qi))
+        go_right = pred & (lo < hi)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+        hi = jnp.maximum(hi, lo)
+    return lo
+
+
+def _rank_kernel_blocked(qk_ref, qi_ref, bk_ref, bi_ref, pos_ref, *, c: int,
+                         bb: int, steps: int):
+    """Rank accumulation with the bound rows blocked along columns.
+
+    Grid: (query rows, query blocks, bound rows, bound blocks).  A
+    row's contribution to a query's rank is the count of its pairs <
+    the query, and counts are additive over any column partition of the
+    (sorted) row — so each (bound row, bound block) pair adds its own
+    bounded search result.  Per-step VMEM is O(bb) instead of O(row):
+    the Pallas pipeline double-buffers the (1, bb) bound blocks, DMA-ing
+    block b+1 while block b is being searched — the overlap that lets
+    the staged exchange's chunked merges proceed while later chunks are
+    still in flight.
+    """
+    k = pl.program_id(2)
+    blk = pl.program_id(3)
+
+    @pl.when((k == 0) & (blk == 0))
+    def _init():
+        pos_ref[...] = jnp.zeros_like(pos_ref)
+
+    valid = jnp.clip(c - blk * bb, 0, bb)
+    pos_ref[...] += _bin_search_pairs_bounded(
+        qk_ref[...], qi_ref[...], bk_ref[...], bi_ref[...], valid, steps)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "bound_block", "interpret"))
 def merge_ranks(keys: jnp.ndarray, ids: jnp.ndarray, block_n: int = 1024,
+                bound_block: int = None,
                 interpret: bool = True) -> jnp.ndarray:
     """Global rank of every (key, id) pair.  keys/ids: (t, c), rows sorted.
 
@@ -189,26 +244,53 @@ def merge_ranks(keys: jnp.ndarray, ids: jnp.ndarray, block_n: int = 1024,
     ``ops``' merge dispatcher feeds it.  Returns (t, c) int32 positions:
     element (i, j)'s index in the fully merged order.  Positions are a
     permutation of [0, t*c) because the pairs are globally unique.
+
+    ``bound_block=None`` holds each full bound row in VMEM per grid
+    step.  An int blocks the bound rows into (1, bound_block) slices on
+    a fourth grid axis — the double-buffered variant: per-step VMEM
+    drops to O(bound_block) and the pipeline overlaps each block's DMA
+    with the previous block's search.  Ranks are bitwise identical
+    either way (counts are additive over the column partition).
     """
     t, c = keys.shape
     bn = min(block_n, c)
-    pad = (-c) % bn
+    bb = None if bound_block is None else min(int(bound_block), c)
+    # pad so both the query blocking and (if any) the bound blocking
+    # divide the width; never hit by the ops dispatcher (c is pow2 and
+    # the block sizes are pow2), guarded for direct callers
+    width = -(-c // bn) * bn
+    if bb is not None:
+        width = -(-width // bb) * bb
+    pad = width - c
     if pad:
-        # never hit by the ops dispatcher (c is pow2, bn divides it);
-        # guarded for direct callers
         keys = jnp.pad(keys, ((0, 0), (0, pad)),
                        constant_values=sort_sentinel(keys.dtype))
         ids = jnp.pad(ids, ((0, 0), (0, pad)),
                       constant_values=jnp.iinfo(jnp.int32).max)
     cb = keys.shape[1] // bn
+    if bb is None:
+        pos = pl.pallas_call(
+            functools.partial(_rank_kernel, c=c),
+            grid=(t, cb, t),
+            in_specs=[pl.BlockSpec((1, bn), lambda i, j, k: (i, j)),
+                      pl.BlockSpec((1, bn), lambda i, j, k: (i, j)),
+                      pl.BlockSpec((1, keys.shape[1]), lambda i, j, k: (k, 0)),
+                      pl.BlockSpec((1, ids.shape[1]), lambda i, j, k: (k, 0))],
+            out_specs=pl.BlockSpec((1, bn), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct(keys.shape, jnp.int32),
+            interpret=interpret,
+        )(keys, ids, keys, ids)
+        return pos[:, :c]
+    nb = keys.shape[1] // bb
+    steps = max(1, math.ceil(math.log2(bb + 1)))
     pos = pl.pallas_call(
-        functools.partial(_rank_kernel, c=c),
-        grid=(t, cb, t),
-        in_specs=[pl.BlockSpec((1, bn), lambda i, j, k: (i, j)),
-                  pl.BlockSpec((1, bn), lambda i, j, k: (i, j)),
-                  pl.BlockSpec((1, keys.shape[1]), lambda i, j, k: (k, 0)),
-                  pl.BlockSpec((1, ids.shape[1]), lambda i, j, k: (k, 0))],
-        out_specs=pl.BlockSpec((1, bn), lambda i, j, k: (i, j)),
+        functools.partial(_rank_kernel_blocked, c=c, bb=bb, steps=steps),
+        grid=(t, cb, t, nb),
+        in_specs=[pl.BlockSpec((1, bn), lambda i, j, k, b: (i, j)),
+                  pl.BlockSpec((1, bn), lambda i, j, k, b: (i, j)),
+                  pl.BlockSpec((1, bb), lambda i, j, k, b: (k, b)),
+                  pl.BlockSpec((1, bb), lambda i, j, k, b: (k, b))],
+        out_specs=pl.BlockSpec((1, bn), lambda i, j, k, b: (i, j)),
         out_shape=jax.ShapeDtypeStruct(keys.shape, jnp.int32),
         interpret=interpret,
     )(keys, ids, keys, ids)

@@ -64,6 +64,12 @@ DEFAULT_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "reference")
 # double buffering).  Longer rows fall back to the reference path.
 MAX_KERNEL_LANES = 1 << 16
 
+# Bound-row rows longer than this make the rank-merge kernel block its
+# bound side into (1, RANK_MERGE_BOUND_BLOCK) slices (fused.merge_ranks
+# bound_block=...) — the double-buffered variant whose per-step VMEM is
+# O(block) instead of O(row).
+RANK_MERGE_BOUND_BLOCK = 1 << 11
+
 # (op, path) -> number of dispatch decisions, counted at trace time.
 # Ticks happen while substrates trace concurrently-submitted queries, so
 # the read-modify-write goes under a lock (Counter.__iadd__ is not atomic).
@@ -79,7 +85,7 @@ __all__ = [
     "merge_sorted_rows", "merge_sorted_rows_kv", "flash_attention",
     "resolve_backend", "reset_dispatch_counts", "kernel_eligible",
     "INTERPRET", "BACKENDS", "DEFAULT_BACKEND", "DISPATCH_COUNTS",
-    "MAX_KERNEL_LANES",
+    "MAX_KERNEL_LANES", "RANK_MERGE_BOUND_BLOCK",
 ]
 
 
@@ -365,6 +371,9 @@ def _rank_merge(keys: jnp.ndarray):
     position is its rank in the lexicographic (key, id) order — computed
     by the blocked ``fused.merge_ranks`` kernel one row-pair at a time —
     and a host-side scatter places keys and the stable permutation.
+    Rows longer than ``RANK_MERGE_BOUND_BLOCK`` additionally block the
+    bound side of the search (the double-buffered kernel variant), so
+    per-step VMEM stays bounded however long the receive rows grow.
     Returns (merged (t*c,), order (t*c,) int32), bitwise equal to the
     stable flat argsort.
     """
@@ -372,7 +381,10 @@ def _rank_merge(keys: jnp.ndarray):
     kp = bitonic._pad_sorted_rows(keys, bitonic.sort_sentinel(keys.dtype))
     tp2, cp2 = kp.shape
     ip = bitonic._pad_iota_unique(t, c, tp2, cp2)
-    pos = fused.merge_ranks(kp, ip, interpret=INTERPRET).reshape(-1)
+    bound_block = RANK_MERGE_BOUND_BLOCK if cp2 > RANK_MERGE_BOUND_BLOCK \
+        else None
+    pos = fused.merge_ranks(kp, ip, bound_block=bound_block,
+                            interpret=INTERPRET).reshape(-1)
     merged = jnp.zeros((tp2 * cp2,), keys.dtype).at[pos].set(kp.reshape(-1))
     order = jnp.zeros((tp2 * cp2,), jnp.int32).at[pos].set(ip.reshape(-1))
     return merged[:t * c], order[:t * c]

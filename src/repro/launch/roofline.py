@@ -193,6 +193,51 @@ class RooflineTerms:
         }
 
 
+@dataclasses.dataclass
+class ExchangeStage:
+    """One hop of a sort exchange, in the same units as RooflineTerms.
+
+    ``receive_bytes`` is the static per-shard receive buffer the exchange
+    allocates for this hop (its peak possible traffic — the quantity the
+    capacity theorems bound and BENCH_sort.json measures); ``fanin`` is
+    how many peers contribute to it.
+    """
+    name: str
+    fanin: int
+    receive_bytes: int
+
+    @property
+    def t_link(self) -> float:
+        """Hop time at link bandwidth if the buffer fills (upper bound)."""
+        return self.receive_bytes / LINK_BW
+
+
+def exchange_stage_bytes(t: int, m: int, *, topology: str = "flat",
+                         cap_factor: float, bytes_per_obj: int = 4,
+                         overlap_chunks: int = 2) -> List[ExchangeStage]:
+    """Per-stage network bytes of the sort shuffle (flat or staged).
+
+    Mirrors the exact buffer arithmetic of ``repro.core.exchange`` (the
+    imports are deferred: that module needs jax, this one must stay
+    importable in jax-free tooling).  ``topology="staged"`` with a
+    non-factorable ``t`` degrades to the flat single stage, matching the
+    runtime fallback.
+    """
+    from repro.core.exchange import (flat_receive_capacity,
+                                     staged_receive_capacities)
+    from repro.launch.mesh import factor_shards
+
+    fs = factor_shards(t) if topology == "staged" else None
+    if fs is None:
+        cap = flat_receive_capacity(m, t, cap_factor)
+        return [ExchangeStage("shuffle", t, cap * bytes_per_obj)]
+    t1, t2 = fs
+    cap1, cap2 = staged_receive_capacities(
+        m, t1, t2, cap_factor, overlap_chunks=overlap_chunks)
+    return [ExchangeStage("shuffle s1", t1, cap1 * bytes_per_obj),
+            ExchangeStage("shuffle s2", t2, cap2 * bytes_per_obj)]
+
+
 def model_flops(cfg, shape) -> float:
     """6*N_active*D for training, 2*N_active*D for serving (D =
     tokens/step; MoE archs only compute their routed experts, so the

@@ -11,7 +11,8 @@ predicted (alpha, k, bytes-shuffled, peak-receive) per algorithm, and
 under a shard fingerprint, and hands ``cluster.sort`` / ``cluster.join``
 the winner when the caller says ``algorithm="auto"``.
 """
-from .cost import CostEstimate, join_costs, select, sort_costs
+from .cost import (CostEstimate, choose_exchange, exchange_costs,
+                   join_costs, select, sort_costs)
 from .plan import (QueryPlan, clear_plan_cache, plan_join_query,
                    plan_sort_query, planner_stats)
 from .sketch import (DataProfile, TableProfile, countmin_query, misra_gries,
@@ -20,6 +21,7 @@ from .sketch import (DataProfile, TableProfile, countmin_query, misra_gries,
 
 __all__ = [
     "CostEstimate", "sort_costs", "join_costs", "select",
+    "choose_exchange", "exchange_costs",
     "QueryPlan", "plan_sort_query", "plan_join_query", "clear_plan_cache",
     "planner_stats",
     "TableProfile", "DataProfile", "misra_gries", "countmin_query",

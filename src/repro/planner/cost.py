@@ -31,6 +31,7 @@ from repro.core.sampling import terasort_sample_count
 __all__ = [
     "ROUND_COST_OBJECTS", "BROADCAST_MEM_BUDGET", "TERASORT_EXPECTED_K",
     "CostEstimate", "sort_costs", "join_costs", "select",
+    "exchange_costs", "choose_exchange",
 ]
 
 # Objects-equivalent charge of one synchronized round (barrier latency).
@@ -192,6 +193,116 @@ def join_costs(profile, t: int,
 
     return {"repartition": repart, "statjoin": stat, "randjoin": rand,
             "broadcast": bcast}
+
+
+# ---------------------------------------------------------------------------
+# exchange topology: flat t-way all_to_all vs two-level staged (AMS-style)
+# ---------------------------------------------------------------------------
+
+def _expected_max_pair_load(mean: float, fanin: int) -> float:
+    """Expected max of ``fanin`` ~Poisson(mean) per-pair loads.
+
+    The flat exchange splits each receiver's ~m objects over t sender
+    pairs; with uniform boundaries the pair loads behave like balls in
+    bins, whose max overshoots the mean by ~sqrt(2 mu ln t) + ln t.
+    This is the quantity the static per-pair capacity must cover — one
+    hot pair overflows the whole tile and triggers a capacity retry.
+    """
+    if mean <= 0 or fanin <= 1:
+        return max(mean, 0.0)
+    ln_f = math.log(fanin)
+    return mean + math.sqrt(2.0 * mean * ln_f) + ln_f
+
+
+def _retry_factor(base_factor: float, m: int, fanout: int,
+                  growth: float = 2.0, max_retries: int = 3) -> float:
+    """The capacity factor the retry loop is *predicted* to settle at:
+    grow ``base_factor`` until the per-pair slot count ceil(f*m)/fanout
+    covers the expected max pair load (mirrors CapacityPolicy's
+    schedule)."""
+    need = _expected_max_pair_load(m / fanout, fanout)
+    f = base_factor
+    for _ in range(max_retries):
+        if -(-int(f * m) // fanout) >= need:
+            break
+        f *= growth
+    return f
+
+
+def exchange_costs(t: int, m: int, *, cap_factor: float,
+                   overlap_chunks: int = 2) -> Dict[str, dict]:
+    """Predicted peak per-shard receive-buffer objects, flat vs staged.
+
+    Both topologies move the same ~m objects per machine; what differs
+    is the *buffer* each one must allocate.  The flat path quantizes
+    its capacity per (src, dst) pair — ceil(cap*m)/t slots each — so at
+    large t a single expected-hot pair drives the whole factor through
+    the retry loop.  The staged path's pair loads are m/t1- and
+    m/t2-scale (sqrt t), where the base factor survives.  Values are
+    computed with the exact buffer formulas the exchange allocates with
+    (repro.core.exchange capacity helpers).
+    """
+    from repro.core.exchange import (flat_receive_capacity,
+                                     staged_receive_capacities)
+    from repro.launch.mesh import factor_shards
+
+    flat_factor = _retry_factor(cap_factor, m, t)
+    flat = {
+        "topology": "flat",
+        "cap_factor": flat_factor,
+        "predicted_retries": round(math.log(flat_factor / cap_factor, 2.0)),
+        "peak_receive_objects": flat_receive_capacity(m, t, flat_factor),
+        "alpha_exchange": 1,
+    }
+    fs = factor_shards(t)
+    if fs is None:
+        return {"flat": flat}
+    t1, t2 = fs
+    f1 = _retry_factor(cap_factor, m, t1)
+    f2 = _retry_factor(cap_factor, m, t2)
+    staged_factor = max(f1, f2)
+    s1, s2 = staged_receive_capacities(m, t1, t2, staged_factor,
+                                       overlap_chunks=overlap_chunks)
+    staged = {
+        "topology": "staged",
+        "shape": fs,
+        "cap_factor": staged_factor,
+        "predicted_retries": round(math.log(staged_factor / cap_factor, 2.0)),
+        "peak_receive_objects": max(s1, s2),
+        "alpha_exchange": 2,
+    }
+    return {"flat": flat, "staged": staged}
+
+
+def choose_exchange(t: int, m: int, *, algorithm: str = "smms", r: int = 2,
+                    cap_factor: Optional[float] = None,
+                    overlap_chunks: int = 2):
+    """Pick the exchange topology for a (t, m) sort: ("flat"|"staged",
+    costs-dict).
+
+    The staged path buys its smaller receive buffer with one extra
+    synchronized round, so it must win by more than the round charge:
+    staged iff ``staged_peak + ROUND_COST_OBJECTS < flat_peak``.
+    ``cap_factor=None`` prices the algorithm's own theorem-derived
+    starting factor (the one the retry loop actually starts from).
+    """
+    from repro.cluster.capacity import CapacityPolicy
+
+    if cap_factor is None:
+        n = t * m
+        if algorithm == "terasort":
+            cap_factor = CapacityPolicy.terasort(n, t, slack=1.1).first_factor
+        else:
+            cap_factor = CapacityPolicy.smms(n, t, r).first_factor
+    costs = exchange_costs(t, m, cap_factor=cap_factor,
+                           overlap_chunks=overlap_chunks)
+    if "staged" not in costs:
+        return "flat", costs
+    staged = costs["staged"]["peak_receive_objects"]
+    flat = costs["flat"]["peak_receive_objects"]
+    if staged + ROUND_COST_OBJECTS < flat:
+        return "staged", costs
+    return "flat", costs
 
 
 def select(costs: Dict[str, CostEstimate]) -> CostEstimate:

@@ -26,7 +26,8 @@ import numpy as np
 
 from repro.cluster.substrate import Substrate, VmapSubstrate
 
-from .cost import CostEstimate, join_costs, select, sort_costs
+from .cost import (CostEstimate, choose_exchange, join_costs, select,
+                   sort_costs)
 from .sketch import profile_join_tables, profile_sorted_shards
 
 __all__ = [
@@ -57,11 +58,14 @@ class QueryPlan:
     candidates: Dict[str, CostEstimate]
     profile: object                  # TableProfile | DataProfile
     cached: bool = False             # served from the plan cache
+    exchange: str = "flat"           # shuffle topology ("flat" | "staged")
+    exchange_costs: Optional[Dict] = None   # choose_exchange details
 
     def summary(self) -> str:
         ranked = sorted(self.candidates.values(), key=lambda c: c.score)
         lines = [f"plan[{self.kind}] -> {self.algorithm}"
-                 f" (cached={self.cached}, fp={self.fingerprint[:12]})"]
+                 f" (exchange={self.exchange}, cached={self.cached}, "
+                 f"fp={self.fingerprint[:12]})"]
         for c in ranked:
             mark = "*" if c.algorithm == self.algorithm else " "
             lines.append(
@@ -148,9 +152,13 @@ def plan_sort_query(x, *, t: int, r: int = 2,
                                           kernel_backend=kernel_backend)
     costs = sort_costs(profile, t, r=r)
     chosen = select(costs)
+    m = max(1, profile.n // t)
+    topology, ex_costs = choose_exchange(t, m, algorithm=chosen.algorithm,
+                                         r=r)
     plan = QueryPlan(kind="sort", algorithm=chosen.algorithm, t=t,
                      fingerprint=key, predicted=chosen, candidates=costs,
-                     profile=profile)
+                     profile=profile, exchange=topology,
+                     exchange_costs=ex_costs)
     _cache_put(key, plan)
     return plan, tape.phases(t)
 

@@ -49,6 +49,22 @@ np.testing.assert_array_equal(np.asarray(kv), np.asarray(ks))
 assert rep_v.k_workload == rep_s.k_workload
 print("Terasort substrate parity OK:", rep_s.summary())
 
+# ---- staged exchange on a real (i1, i2) = (4, 2) mesh ---------------------
+(kf, _), rep_f = cluster.sort(x, algorithm="smms",
+                              substrate=ShardMapSubstrate(t))
+(kv2, _), rep_v2 = cluster.sort(x, algorithm="smms", exchange="staged",
+                                substrate=VmapSubstrate(("i1", 4), ("i2", 2)))
+(ks2, _), rep_s2 = cluster.sort(x, algorithm="smms", exchange="staged",
+                                substrate=ShardMapSubstrate(("i1", 4),
+                                                            ("i2", 2)))
+np.testing.assert_array_equal(np.asarray(kv2), np.asarray(ks2))
+np.testing.assert_array_equal(np.asarray(kf), np.asarray(ks2))
+assert rep_s2.exchange_topology == "staged"
+assert rep_v2.k_workload == rep_s2.k_workload == rep_f.k_workload
+assert rep_v2.k_network == rep_s2.k_network
+assert rep_v2.alpha == rep_s2.alpha == 4
+print("SMMS staged-exchange mesh parity OK:", rep_s2.summary())
+
 # ---- ragged backend: lowers on capable builds, fails loudly elsewhere -----
 if compat.HAS_RAGGED:
     from jax.sharding import PartitionSpec as P
