@@ -27,7 +27,10 @@ def main() -> None:
         ("Tables 2-3/Fig 15: StatJoin stats overhead",
          bench_join.run_statjoin_overhead),
         ("Thms 1/2/3/6: alpha-k verification", bench_alpha_k.run),
-        ("MoE dispatch (beyond-paper)", bench_moe_dispatch.run),
+        ("MoE dispatch (beyond-paper) -> BENCH_moe.json",
+         bench_moe_dispatch.run),
+        ("MoE cluster dispatch-count budget",
+         bench_moe_dispatch.run_dispatch_budget),
         ("Pallas kernels", bench_kernels.run),
         ("Serving engine vs one-shot -> BENCH_serve.json",
          bench_serve.run),

@@ -16,7 +16,8 @@ One runtime, two executors, uniform accounting:
   planner in :mod:`repro.planner`.
 """
 from . import compat
-from .api import AUTO, JOIN_ALGORITHMS, SORT_ALGORITHMS, join, sort
+from .api import (AUTO, JOIN_ALGORITHMS, MOE_DISPATCH_MODES,
+                  SORT_ALGORITHMS, join, moe_dispatch, sort)
 from .capacity import CapacityOverflowError, CapacityPolicy, run_with_capacity
 from .collectives import CollectiveTape
 from .substrate import (ShardMapSubstrate, Substrate, SubstratePool,
@@ -25,7 +26,8 @@ from .substrate import (ShardMapSubstrate, Substrate, SubstratePool,
 
 __all__ = [
     "compat",
-    "sort", "join", "SORT_ALGORITHMS", "JOIN_ALGORITHMS", "AUTO",
+    "sort", "join", "moe_dispatch",
+    "SORT_ALGORITHMS", "JOIN_ALGORITHMS", "MOE_DISPATCH_MODES", "AUTO",
     "CapacityPolicy", "CapacityOverflowError", "run_with_capacity",
     "CollectiveTape",
     "Substrate", "VmapSubstrate", "ShardMapSubstrate", "SubstratePool",

@@ -29,10 +29,12 @@ import numpy as np
 
 from .substrate import Substrate, default_pool
 
-__all__ = ["sort", "join", "SORT_ALGORITHMS", "JOIN_ALGORITHMS", "AUTO"]
+__all__ = ["sort", "join", "moe_dispatch", "SORT_ALGORITHMS",
+           "JOIN_ALGORITHMS", "MOE_DISPATCH_MODES", "AUTO"]
 
 SORT_ALGORITHMS = ("smms", "terasort")
 JOIN_ALGORITHMS = ("randjoin", "statjoin", "repartition", "broadcast")
+MOE_DISPATCH_MODES = ("capacity", "alpha_k", "cluster")
 AUTO = "auto"
 
 # ``substrate=`` accepts a Substrate, None, or a *provider* — any
@@ -308,3 +310,124 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
                             kernel_backend=kernel_backend,
                             substrate=_resolve_substrate(substrate,
                                                          t_machines))
+
+
+import functools as _functools
+
+
+@_functools.lru_cache(maxsize=1)
+def _dense_moe_jit():
+    import jax
+    from repro.models.moe import moe_layer
+    return jax.jit(moe_layer, static_argnames=("cfg", "act"))
+
+
+def moe_dispatch(params, x, cfg, *, mode: Optional[str] = None,
+                 t_machines: int = 8,
+                 substrate: Optional[Substrate] = None, policy=None,
+                 act: str = "swiglu", kernel_backend: Optional[str] = None,
+                 rng=None):
+    """One MoE layer with dispatch as a first-class cluster workload.
+
+    Token->expert routing is the skew-join problem (tokens keyed by
+    expert id; a hot expert is Join Product Skew), so it dispatches like
+    :func:`join`.  Returns ``(y, report)`` — y shaped like x, and an
+    AlphaKReport whose per-slot/per-expert workload vectors
+    (``report.slot_workload`` / ``report.expert_workload``) are the
+    measured dispatch balance.
+
+    mode (default ``cfg.dispatch``):
+
+    * ``"capacity"`` — the dense capacity-factor layer
+      (:func:`repro.models.moe.moe_layer`); hot experts DROP tokens
+      (``report.total_dropped``) — the Standard-Repartition-Join
+      analogue.
+    * ``"alpha_k"``  — the dense StatJoin-planned layer: hot-expert
+      replicas + the Theorem-6 slot capacity from
+      ``CapacityPolicy.moe_dispatch()``.
+    * ``"cluster"``  — route tokens through the instrumented cluster
+      exchange (:func:`repro.core.moe_dispatch.cluster_moe_dispatch`):
+      per-expert counts taped by the collectives, ``plan_slots`` driven
+      by the planner's CountMin/heavy-hitter estimate of the routing
+      histogram, capacities from ``CapacityPolicy`` with
+      retry-on-overflow.  Needs the token count to divide over
+      ``t_machines``.
+    * ``"auto"``     — sketch the routing ids once
+      (:func:`repro.planner.plan_moe_query`), score the three modes in
+      the cost model, dispatch to the winner; the report carries the
+      :class:`QueryPlan` exactly like ``sort``/``join``.
+
+    rng: RandJoin-style ``replica_choice="random"`` draw for the dense
+    alpha_k layer (required there, unused elsewhere).
+    """
+    import dataclasses as _dc
+
+    mode = cfg.dispatch if mode is None else mode
+    if mode not in MOE_DISPATCH_MODES + (AUTO,):
+        raise ValueError(f"unknown dispatch mode {mode!r}; expected one "
+                         f"of {MOE_DISPATCH_MODES + (AUTO,)}")
+    d = int(np.shape(x)[-1])
+    tt = int(np.prod(np.shape(x)[:-1]))
+    e, k = int(cfg.num_experts), int(cfg.top_k)
+
+    plan = sketch_phases = None
+    if mode in (AUTO, "cluster"):
+        if tt % t_machines:
+            raise ValueError(
+                f"moe_dispatch mode {mode!r} shards tokens over machines: "
+                f"token count {tt} must divide over t_machines={t_machines}")
+        from repro.planner import expert_counts_estimate, plan_moe_query
+        plan, sketch_phases = plan_moe_query(
+            np.asarray(x).reshape(tt, d), params["router"],
+            t_machines=t_machines, num_experts=e, top_k=k,
+            extra_slots=cfg.extra_slots,
+            capacity_factor=cfg.capacity_factor,
+            kernel_backend=kernel_backend,
+            substrate=_resolve_substrate(substrate, t_machines))
+        if mode == AUTO:
+            mode = plan.algorithm
+
+    if mode == "cluster":
+        from repro.core.moe_dispatch import cluster_moe_dispatch
+        counts = expert_counts_estimate(plan.profile, e)
+        y, report = cluster_moe_dispatch(
+            params, x, cfg, t_machines=t_machines, counts=counts,
+            substrate=substrate, policy=policy, act=act,
+            kernel_backend=kernel_backend)
+        _attach_plan(report, plan, sketch_phases)
+        return y, report
+
+    # dense modes: one jitted moe_layer call; the report's "machines"
+    # are the dispatch slots (the layer is a single SPMD program — slot
+    # balance IS its workload balance, and there are no exchange phases
+    # to tape, hence alpha = 0).
+    import jax.numpy as jnp
+    from jax import lax
+
+    from repro.core.alpha_k import AlphaKReport
+
+    cfg_run = cfg if cfg.dispatch == mode else _dc.replace(cfg,
+                                                           dispatch=mode)
+    y, stats = _dense_moe_jit()(params, jnp.asarray(x), cfg=cfg_run,
+                                act=act, rng=rng)
+    slot_load = np.asarray(stats.slot_load, dtype=np.int64)
+    n_slots = int(slot_load.shape[0])
+    # exact host-side recount of the routing histogram (same f32
+    # einsum/top_k expression the layer runs)
+    xt = jnp.asarray(x).reshape(tt, d)
+    ids = lax.top_k(jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                               jnp.asarray(params["router"])), k)[1]
+    expert_workload = np.bincount(np.asarray(ids).reshape(-1),
+                                  minlength=e)
+    report = AlphaKReport(algorithm=f"moe[{mode}]", t=n_slots,
+                          n_in=tt * k, n_out=tt * k, workload=slot_load,
+                          phases=[])
+    report.dispatch_mode = mode
+    report.slot_workload = slot_load
+    report.expert_workload = expert_workload
+    report.k_slot = float(slot_load.max() / max(1.0, tt * k / n_slots))
+    report.k_expert = float(expert_workload.max() / max(1.0, tt * k / e))
+    report.total_dropped = int(np.asarray(stats.dropped))
+    if plan is not None:
+        _attach_plan(report, plan, sketch_phases)
+    return y, report

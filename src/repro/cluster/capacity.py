@@ -85,6 +85,15 @@ class CapacityPolicy:
         """Cor. 3: per-machine output < 2 MN/t w.p. >= 1 - 1.2e-9."""
         return cls(base_factor=2.0, **kw)
 
+    @classmethod
+    def moe_dispatch(cls, **kw) -> "CapacityPolicy":
+        """Theorem 6 applied to expert routing: the StatJoin slot plan
+        splits a hot expert's tokens evenly over its replicas, so no slot
+        receives more than 2 * T * K / n_slots assignments — the MoE
+        capacity factor is the paper's deterministic join bound, not a
+        hand-tuned constant."""
+        return cls(base_factor=2.0, **kw)
+
 
 def run_with_capacity(attempt: Callable[[float], Tuple[object, int]],
                       policy: CapacityPolicy) -> Tuple[object, float, int]:

@@ -109,17 +109,23 @@ class CollectiveTape:
 
     def all_to_all(self, x, axis_name: str, *, split_axis: int = 0,
                    concat_axis: int = 0, sent=None, pad=None,
-                   track: bool = True):
+                   received=None, track: bool = True):
         """Dense exchange; ``pad`` makes the received count sentinel-aware.
 
         ``sent`` defaults to every element of ``x`` (the whole buffer
         leaves conceptually; pass the exact off-device count when known).
+        ``received`` overrides the landed count for buffers with no
+        sentinel structure (e.g. the MoE return exchange, whose tiles
+        are dense payload rows — only the caller knows how many carry
+        real objects); it wins over ``pad``.
         """
         out = lax.all_to_all(x, axis_name, split_axis=split_axis,
                              concat_axis=concat_axis, tiled=False)
         if track:
             s = jnp.asarray(sent if sent is not None else int(np.prod(jnp.shape(x))))
-            if pad is not None:
+            if received is not None:
+                r = jnp.asarray(received)
+            elif pad is not None:
                 r = jnp.sum(out < jnp.asarray(pad, out.dtype))
             else:
                 r = jnp.asarray(int(np.prod(jnp.shape(out))))

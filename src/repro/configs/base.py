@@ -19,13 +19,17 @@ class MoEConfig:
     #                         the Standard-Repartition-Join analogue)
     #           'alpha_k'   = StatJoin-planned hot-expert replication
     #                         (the paper's technique as MoE dispatch)
+    #           'cluster'   = route through the instrumented cluster
+    #                         exchange (repro.cluster.moe_dispatch)
+    #           'auto'      = planner-scored choice among the above
     dispatch: str = "alpha_k"
     capacity_factor: float = 1.25    # for 'capacity' dispatch
     extra_slots: int = 8             # replicas for hot experts ('alpha_k')
-    # Theorem-6 slot capacity multiplier: 2.0 = the paper's deterministic
-    # no-drop bound; the planner usually equalizes loads to ~1x mean, so
-    # perf runs may shrink this (drops are counted + retryable).
-    alpha_k_cap: float = 2.0
+    # Theorem-6 slot capacity multiplier.  None (the default) derives it
+    # from CapacityPolicy.moe_dispatch() — the paper's deterministic
+    # 2 * T * K / n_slots no-drop bound plus the policy slack; set a
+    # float to pin a hand-chosen factor (drops are counted + retryable).
+    alpha_k_cap: Optional[float] = None
     replica_choice: str = "round_robin"  # 'round_robin' (StatJoin-style
     #                                       even split) | 'random' (RandJoin)
 

@@ -42,6 +42,9 @@ __all__ = [
     "static_exchange",
     "ragged_exchange",
     "exchange_sorted_segments",
+    "exchange_routed_rows",
+    "return_routed_rows",
+    "RoutedRows",
     "flat_receive_capacity",
     "staged_receive_capacities",
 ]
@@ -166,6 +169,87 @@ def ragged_exchange(x_sorted: jnp.ndarray, starts: jnp.ndarray,
             values, out_v, in_offsets, sizes, output_offsets, recv_sizes,
             axis_name=axis_name, track=False)
     return recv, recv_v, jnp.sum(recv_sizes)
+
+
+class RoutedRows(NamedTuple):
+    """Landed state of :func:`exchange_routed_rows` — everything the
+    receive side needs to unpack the tiles AND everything the send side
+    needs to invert the routing for a return trip."""
+    recv_keys: jnp.ndarray      # (t, cap_pair) owner keys; PAD = empty slot
+    recv_payload: jnp.ndarray   # (t, cap_pair, w) payload rows, zeros on pads
+    perm: jnp.ndarray           # (n,) stable argsort of owner (send order)
+    dest_sorted: jnp.ndarray    # (n,) int32 destination of each sorted row
+    starts: jnp.ndarray         # (t,) first sorted row addressed to dest k
+    lens: jnp.ndarray           # (t,) rows addressed to dest k
+    cap_pair: int               # static per-(src, dst) tile capacity
+    local_drop: jnp.ndarray     # rows dropped at send (pair overflow)
+
+
+def exchange_routed_rows(owner: jnp.ndarray, payload: jnp.ndarray, *,
+                         axis_name, t: int, cap_pair: int,
+                         kernel_backend: Optional[str] = None,
+                         tape=None) -> RoutedRows:
+    """Deliver payload row i to machine ``owner[i]`` through the flat
+    static exchange — the slot-major transpose as a first-class routed
+    exchange (MoE expert dispatch's shuffle).
+
+    owner: (n,) int destinations in [0, t).  payload: (n, w) rows (meta
+    columns + features).  The rows are stably sorted by owner (the same
+    ``ops.sort_kv`` permutation realization the sort algorithms use, so
+    the Pallas kernel path applies), cut into t contiguous segments, and
+    packed into the (t, cap_pair) tile of :func:`static_exchange`; the
+    staged topology is not offered here because the payload rows are not
+    1-D-mergeable (the staged path's intermediate hop re-merges, which
+    only 1-D key/value columns support).  Per-pair overflow is counted
+    in ``local_drop`` — the caller's CapacityPolicy retry loop recovers,
+    exactly as for the sort shuffles.
+    """
+    tape = tape if tape is not None else _null_tape()
+    n = owner.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    owner_f = owner.astype(jnp.float32)
+    owner_sorted, perm = ops.sort_kv(owner_f, iota, backend=kernel_backend)
+    pay_sorted = payload[perm]
+    interior = jnp.arange(1, t, dtype=jnp.float32)
+    starts, lens = partition_sorted(owner_sorted, interior,
+                                    kernel_backend=kernel_backend)
+    keys_buf, vals_buf, local_drop = build_send_buffer(
+        owner_sorted, starts, lens, cap_pair, pay_sorted)
+    me = lax.axis_index(axis_name)
+    sent = n - lens[me]
+    recv_k, recv_v = static_exchange(keys_buf, axis_name, vals_buf,
+                                     tape=tape, sent=sent)
+    return RoutedRows(recv_k, recv_v, perm, owner_sorted.astype(jnp.int32),
+                      starts, lens, cap_pair, local_drop)
+
+
+def return_routed_rows(back_tiles: jnp.ndarray, routed: RoutedRows, *,
+                       axis_name, tape=None, sent=None, received=None
+                       ) -> jnp.ndarray:
+    """Invert :func:`exchange_routed_rows`: ship processed rows home.
+
+    ``back_tiles``: (t, cap_pair, w_out) where tile j holds the
+    processed versions of the rows source j landed here, in landed
+    order — ``lax.all_to_all`` applied twice is an involution, so tile
+    j of the second exchange arrives at j in exactly the (dst, col)
+    layout j packed its send buffer with.  Rows that overflowed the
+    pair capacity on the way out come back as zeros.  Returns (n, w_out)
+    rows in the caller's ORIGINAL (pre-sort) order.  ``sent``/
+    ``received`` feed the tape (the return tiles are dense payload with
+    no sentinel, so the caller supplies the true counts).
+    """
+    tape = tape if tape is not None else _null_tape()
+    ret = tape.all_to_all(back_tiles, axis_name, split_axis=0,
+                          concat_axis=0, sent=sent, received=received)
+    n = routed.perm.shape[0]
+    p = jnp.arange(n, dtype=jnp.int32)
+    offset = p - routed.starts[routed.dest_sorted]
+    ok = offset < routed.cap_pair
+    safe = jnp.clip(offset, 0, routed.cap_pair - 1)
+    rows = jnp.where(ok[:, None], ret[routed.dest_sorted, safe],
+                     jnp.zeros((), ret.dtype))
+    out = jnp.zeros((n,) + ret.shape[2:], ret.dtype)
+    return out.at[routed.perm].set(rows)
 
 
 def flat_receive_capacity(m: int, t: int, cap_factor: float) -> int:

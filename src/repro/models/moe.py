@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import functools
 import math
+import warnings
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -45,6 +46,9 @@ class MoEStats(NamedTuple):
     dropped: jnp.ndarray        # tokens dropped (scalar)
     max_slot_load: jnp.ndarray  # max tokens landing on one slot
     mean_slot_load: jnp.ndarray
+    # (NS,) per-slot assignment counts — the workload vector the cluster
+    # front door turns into an AlphaKReport (None on old callers).
+    slot_load: Optional[jnp.ndarray] = None
 
 
 def init_moe(key, d: int, cfg: MoEConfig, dtype):
@@ -105,12 +109,24 @@ def moe_layer(params, x: jnp.ndarray, cfg: MoEConfig, act: str = "swiglu",
     train_4k).  The single group->slot transpose that remains IS the MoE
     all-to-all, sized T*k*d like it should be.
     """
+    if cfg.dispatch not in ("capacity", "alpha_k"):
+        raise ValueError(
+            f"moe_layer implements the dense 'capacity'/'alpha_k' dispatch "
+            f"modes only, got {cfg.dispatch!r}; route "
+            f"dispatch='cluster'/'auto' through repro.cluster.moe_dispatch")
     orig_shape = x.shape
     d = x.shape[-1]
     xt = x.reshape(-1, d)
     tt = xt.shape[0]                       # tokens (global)
     e, k = cfg.num_experts, cfg.top_k
     if tt % groups:
+        # same contract as launch/mesh.py:factor_shards — degrade loudly,
+        # never silently: the caller sized groups to the data mesh and a
+        # single flat group changes the GSPMD sharding story entirely.
+        warnings.warn(
+            f"groups={groups} does not divide the token count {tt}; "
+            "falling back to a single dispatch group (flat scatter)",
+            stacklevel=2)
         groups = 1
     tg = tt // groups                      # tokens per group
 
@@ -138,15 +154,27 @@ def moe_layer(params, x: jnp.ndarray, cfg: MoEConfig, act: str = "swiglu",
             prefix(onehot_e) - onehot_e,
             flat_ids[..., None], axis=2)[..., 0]       # (G, Tg*K)
         r_e = replicas[flat_ids]
-        if cfg.replica_choice == "random" and rng is not None:
+        if cfg.replica_choice == "random":
+            if rng is None:
+                raise ValueError(
+                    "replica_choice='random' needs an rng key: pass rng= "
+                    "to moe_layer (the RandJoin tuple-to-interval draw "
+                    "must not silently degrade to the even split)")
             rho = jax.random.randint(rng, flat_ids.shape, 0, 1 << 30) % r_e
         else:                                          # StatJoin even split
             rho = pos_in_e % r_e
         slot = jnp.take_along_axis(
             slot_table[flat_ids],
             jnp.clip(rho, 0, cfg.extra_slots)[..., None], axis=2)[..., 0]
-        # Theorem 6 bound, split per group (+25% inter-group slack)
-        capacity = max(1, math.ceil(cfg.alpha_k_cap * tt * k / n_slots
+        # Theorem 6 bound, split per group (+25% inter-group slack);
+        # the default multiplier comes from the capacity policy (the
+        # paper's deterministic 2x bound + slack), not a hand constant.
+        if cfg.alpha_k_cap is None:
+            from repro.cluster.capacity import CapacityPolicy
+            cap_mult = CapacityPolicy.moe_dispatch().first_factor
+        else:
+            cap_mult = cfg.alpha_k_cap
+        capacity = max(1, math.ceil(cap_mult * tt * k / n_slots
                                     / groups
                                     * (1.25 if groups > 1 else 1.0)))
     else:
@@ -214,5 +242,6 @@ def moe_layer(params, x: jnp.ndarray, cfg: MoEConfig, act: str = "swiglu",
 
     stats = MoEStats(dropped=dropped,
                      max_slot_load=jnp.max(slot_counts),
-                     mean_slot_load=jnp.mean(slot_counts.astype(jnp.float32)))
+                     mean_slot_load=jnp.mean(slot_counts.astype(jnp.float32)),
+                     slot_load=slot_counts)
     return y.reshape(orig_shape), stats

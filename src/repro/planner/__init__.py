@@ -12,19 +12,22 @@ under a shard fingerprint, and hands ``cluster.sort`` / ``cluster.join``
 the winner when the caller says ``algorithm="auto"``.
 """
 from .cost import (CostEstimate, choose_exchange, exchange_costs,
-                   join_costs, select, sort_costs)
+                   join_costs, moe_dispatch_costs, select, select_dispatch,
+                   sort_costs)
 from .plan import (QueryPlan, clear_plan_cache, plan_join_query,
-                   plan_sort_query, planner_stats)
-from .sketch import (DataProfile, TableProfile, countmin_query, misra_gries,
+                   plan_moe_query, plan_sort_query, planner_stats)
+from .sketch import (DataProfile, TableProfile, countmin_query,
+                     expert_counts_estimate, misra_gries,
                      profile_join_tables, profile_sorted_shards,
                      shard_sketch, sketch_table)
 
 __all__ = [
     "CostEstimate", "sort_costs", "join_costs", "select",
     "choose_exchange", "exchange_costs",
-    "QueryPlan", "plan_sort_query", "plan_join_query", "clear_plan_cache",
-    "planner_stats",
+    "moe_dispatch_costs", "select_dispatch",
+    "QueryPlan", "plan_sort_query", "plan_join_query", "plan_moe_query",
+    "clear_plan_cache", "planner_stats",
     "TableProfile", "DataProfile", "misra_gries", "countmin_query",
     "shard_sketch", "sketch_table", "profile_join_tables",
-    "profile_sorted_shards",
+    "profile_sorted_shards", "expert_counts_estimate",
 ]

@@ -26,13 +26,14 @@ import numpy as np
 
 from repro.cluster.substrate import Substrate, VmapSubstrate
 
-from .cost import (CostEstimate, choose_exchange, join_costs, select,
-                   sort_costs)
-from .sketch import profile_join_tables, profile_sorted_shards
+from .cost import (CostEstimate, choose_exchange, join_costs,
+                   moe_dispatch_costs, select, select_dispatch, sort_costs)
+from .sketch import (expert_counts_estimate, profile_join_tables,
+                     profile_sorted_shards, sketch_table)
 
 __all__ = [
     "QueryPlan", "fingerprint_arrays", "plan_sort_query", "plan_join_query",
-    "clear_plan_cache", "planner_stats", "PLAN_CACHE_MAX",
+    "plan_moe_query", "clear_plan_cache", "planner_stats", "PLAN_CACHE_MAX",
 ]
 
 PLAN_CACHE_MAX = 128
@@ -194,3 +195,59 @@ def plan_join_query(s_keys, t_keys, *, t_machines: int,
                      profile=profile)
     _cache_put(key, plan)
     return plan, tape.phases(t)
+
+
+def plan_moe_query(x, router, *, t_machines: int, num_experts: int,
+                   top_k: int, extra_slots: int,
+                   capacity_factor: float = 1.25,
+                   kernel_backend: Optional[str] = None,
+                   substrate: Optional[Substrate] = None):
+    """Sketch -> score -> choose for ``cluster.moe_dispatch(mode="auto")``.
+
+    The sketched table is the router's top-k expert-id stream — routing
+    IS a join keyed by expert id, so the same heavy-hitter/CountMin
+    machinery that prices skew joins prices dispatch skew.  Returns
+    ``(QueryPlan, sketch_phases)``; ``plan.profile`` is the id
+    TableProfile, and per-expert counts are re-derived from it via
+    :func:`expert_counts_estimate` (nothing MoE-specific is cached).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    t = t_machines
+    key = fingerprint_arrays(
+        x, router,
+        extra=f"moe|t={t}|e={num_experts}|k={top_k}|r={extra_slots}"
+              f"|cf={capacity_factor}")
+    plan = _cache_get(key)
+    phases = []
+    if plan is None:
+        sub = substrate if (substrate is not None and substrate.t == t
+                            and len(substrate.axes) == 1) \
+            else _sketch_substrate(t)
+        _tick("sketch_runs")
+        # Exactly the dispatch body's routing expression (vmapped einsum
+        # + top_k in f32) so the sketched ids ARE the runtime ids.
+        xr = jnp.asarray(x).reshape(t, -1, x.shape[-1])
+        ids = jax.vmap(
+            lambda xl: lax.top_k(
+                jnp.einsum("md,de->me", xl.astype(jnp.float32),
+                           jnp.asarray(router)), top_k)[1])(xr)
+        ids = ids.reshape(t, -1).astype(jnp.int32)
+        profile, tape = sketch_table(ids, sub,
+                                     kernel_backend=kernel_backend,
+                                     sample=None)
+        tokens = ids.shape[0] * ids.shape[1] // top_k
+        counts = expert_counts_estimate(profile, num_experts)
+        costs = moe_dispatch_costs(
+            counts, tokens=tokens, top_k=top_k, num_experts=num_experts,
+            extra_slots=extra_slots, t_machines=t,
+            capacity_factor=capacity_factor)
+        chosen = select_dispatch(costs)
+        plan = QueryPlan(kind="moe", algorithm=chosen.algorithm, t=t,
+                         fingerprint=key, predicted=chosen, candidates=costs,
+                         profile=profile)
+        _cache_put(key, plan)
+        phases = tape.phases(t)
+    return plan, phases

@@ -1,0 +1,194 @@
+"""Cluster-routed MoE dispatch: expert routing through the instrumented
+exchange (`cluster.moe_dispatch`).
+
+The tentpole contract under test: the cluster path emits a *real*
+AlphaKReport — per-expert counts taped by the collectives inside the
+jitted program, so ``report.expert_workload`` must match a host-side
+recount of the routing decision **bitwise**; the slot capacity comes
+from ``CapacityPolicy.moe_dispatch()`` (Theorem 6), not a hand constant;
+and ``mode="auto"`` scores capacity/alpha_k/cluster through the planner
+exactly like ``cluster.sort``/``cluster.join``.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import cluster
+from repro.cluster.capacity import CapacityPolicy
+from repro.configs.base import MoEConfig
+from repro.models.moe import init_moe
+from repro.planner import (clear_plan_cache, moe_dispatch_costs,
+                           planner_stats, select_dispatch)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_plan_cache():
+    clear_plan_cache()
+    yield
+    clear_plan_cache()
+
+
+def _setup(d=32, e=8, k=2, tokens=256, hot=True, seed=0):
+    cfg = MoEConfig(num_experts=e, top_k=k, d_ff_expert=32,
+                    extra_slots=8)
+    params = init_moe(jax.random.key(seed), d, cfg, jnp.float32)
+    if hot:
+        router = np.array(params["router"]) * 0.01
+        router[:, 0] += np.linspace(0.3, 0.8, d)
+        params["router"] = jnp.asarray(router)
+    x = jnp.asarray(np.random.default_rng(seed + 5)
+                    .standard_normal((tokens, d)).astype(np.float32))
+    return params, x, cfg
+
+
+def _oracle(params, x, k):
+    """Dense per-token evaluation: every token visits its own top-k."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        params["router"])
+    gv, ids = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(gv, axis=-1)
+    wg = params["w_gate"][ids]
+    wu = params["w_up"][ids]
+    wd = params["w_down"][ids]
+    xe = jnp.broadcast_to(x[:, None, :], ids.shape + (x.shape[-1],))
+    g = jnp.einsum("tkd,tkdf->tkf", xe, wg)
+    u = jnp.einsum("tkd,tkdf->tkf", xe, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(g.dtype) * u
+    out = jnp.einsum("tkf,tkfd->tkd", h, wd)
+    return jnp.sum(out * gates[..., None], axis=1)
+
+
+def _routing_recount(params, x, t, k, e):
+    """The shard body's exact routing expression, re-run host-side."""
+    xr = x.reshape(t, -1, x.shape[-1])
+    ids = jax.vmap(lambda xl: jax.lax.top_k(
+        jnp.einsum("md,de->me", xl.astype(jnp.float32),
+                   params["router"]), k)[1])(xr)
+    return np.bincount(np.asarray(ids).reshape(-1), minlength=e)
+
+
+def test_cluster_matches_dense_oracle():
+    params, x, cfg = _setup()
+    y, rep = cluster.moe_dispatch(params, x, cfg, mode="cluster",
+                                  t_machines=4)
+    assert rep.total_dropped == 0
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(_oracle(params, x, cfg.top_k)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_cluster_expert_workload_matches_recount_bitwise():
+    params, x, cfg = _setup()
+    t = 4
+    _, rep = cluster.moe_dispatch(params, x, cfg, mode="cluster",
+                                  t_machines=t)
+    recount = _routing_recount(params, x, t, cfg.top_k, cfg.num_experts)
+    assert np.array_equal(rep.expert_workload, recount), \
+        (rep.expert_workload, recount)
+    # per-slot counts cover every assignment and regroup to the experts
+    tk = x.shape[0] * cfg.top_k
+    assert int(rep.slot_workload.sum()) == tk
+    regroup = np.bincount(rep.slot2expert, weights=rep.slot_workload,
+                          minlength=cfg.num_experts).astype(np.int64)
+    assert np.array_equal(regroup, recount)
+    assert rep.alpha == 3              # route stats, dispatch, experts
+
+
+def test_cluster_capacity_comes_from_policy():
+    params, x, cfg = _setup()
+    _, rep = cluster.moe_dispatch(params, x, cfg, mode="cluster",
+                                  t_machines=4)
+    tk = x.shape[0] * cfg.top_k
+    n_slots = cfg.num_experts + cfg.extra_slots
+    want = int(np.ceil(CapacityPolicy.moe_dispatch().first_factor
+                       * tk / n_slots))
+    assert rep.capacity == want
+    assert rep.capacity_attempts == 1 and rep.cap_factor == \
+        CapacityPolicy.moe_dispatch().first_factor
+
+
+def test_cluster_capacity_retry_recovers():
+    """An undersized starting factor overflows, the shared retry loop
+    regrows it, and the final answer is unchanged."""
+    params, x, cfg = _setup()
+    policy = CapacityPolicy(base_factor=0.25, slack=1.0, growth=2.0,
+                            max_retries=4)
+    y, rep = cluster.moe_dispatch(params, x, cfg, mode="cluster",
+                                  t_machines=4, policy=policy)
+    assert rep.capacity_attempts > 1
+    assert rep.total_dropped == 0
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(_oracle(params, x, cfg.top_k)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_auto_mode_attaches_plan():
+    params, x, cfg = _setup()
+    y, rep = cluster.moe_dispatch(params, x, cfg, mode="auto",
+                                  t_machines=4)
+    plan = rep.query_plan
+    assert plan.kind == "moe"
+    assert set(plan.candidates) == {"capacity", "alpha_k", "cluster"}
+    assert rep.algorithm == f"moe[{plan.algorithm}]"
+    assert rep.predicted_alpha == plan.predicted.alpha
+    assert rep.sketch_phases            # the sketch round ran and taped
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(_oracle(params, x, cfg.top_k)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_auto_prices_hot_capacity_as_infeasible():
+    params, x, cfg = _setup(tokens=512)
+    _, rep = cluster.moe_dispatch(params, x, cfg, mode="auto",
+                                  t_machines=4)
+    cand = rep.query_plan.candidates
+    assert not cand["capacity"].feasible     # sketch saw the hot expert
+    assert rep.query_plan.algorithm in ("alpha_k", "cluster")
+    assert rep.total_dropped == 0
+
+
+def test_plan_cache_short_circuits_sketch():
+    params, x, cfg = _setup()
+    cluster.moe_dispatch(params, x, cfg, mode="auto", t_machines=4)
+    _, rep2 = cluster.moe_dispatch(params, x, cfg, mode="auto",
+                                   t_machines=4)
+    assert rep2.query_plan.cached
+    assert rep2.sketch_phases == []
+    stats = planner_stats()
+    assert stats["cache_hits"] >= 1 and stats["sketch_runs"] == 1
+
+
+def test_dense_modes_report_dispatch_balance():
+    params, x, cfg = _setup(tokens=2048, k=1)
+    _, rep_cap = cluster.moe_dispatch(params, x, cfg, mode="capacity")
+    _, rep_ak = cluster.moe_dispatch(params, x, cfg, mode="alpha_k")
+    # capacity dispatch is the repartition analogue: hot expert drops
+    assert rep_cap.total_dropped > 0
+    assert rep_ak.total_dropped == 0
+    assert rep_cap.alpha == 0 and rep_ak.alpha == 0   # no taped exchange
+    assert rep_ak.k_slot <= rep_cap.k_slot
+    # both report the same measured routing histogram
+    recount = np.bincount(
+        np.asarray(jax.lax.top_k(
+            jnp.einsum("td,de->te", x.astype(jnp.float32),
+                       params["router"]), 1)[1]).reshape(-1),
+        minlength=cfg.num_experts)
+    assert np.array_equal(rep_cap.expert_workload, recount)
+    assert np.array_equal(rep_ak.expert_workload, recount)
+
+
+def test_mode_validation():
+    params, x, cfg = _setup(tokens=64)
+    with pytest.raises(ValueError, match="unknown dispatch mode"):
+        cluster.moe_dispatch(params, x, cfg, mode="bogus")
+    with pytest.raises(ValueError, match="divide"):
+        cluster.moe_dispatch(params, x, cfg, mode="cluster", t_machines=7)
+
+
+def test_cost_model_all_infeasible_falls_back_to_alpha_k():
+    counts = np.full(4, 1e9)
+    costs = moe_dispatch_costs(counts, tokens=64, top_k=1, num_experts=4,
+                               extra_slots=2, t_machines=2)
+    assert not any(c.feasible for c in costs.values())
+    assert select_dispatch(costs).algorithm == "alpha_k"

@@ -108,3 +108,82 @@ def test_random_replica_choice_randjoin_mode():
     _, stats = _run("alpha_k", x,
                     {"extra_slots": 8, "replica_choice": "round_robin"})
     assert int(stats.dropped) < 0.02 * tokens
+
+
+def test_random_replica_choice_requires_rng():
+    """RandJoin's tuple-to-interval draw must not silently degrade to the
+    even split when no key is supplied."""
+    d, e, tokens = 16, 4, 64
+    cfg = MoEConfig(num_experts=e, top_k=1, d_ff_expert=8,
+                    dispatch="alpha_k", extra_slots=4,
+                    replica_choice="random")
+    params = init_moe(jax.random.key(0), d, cfg, jnp.float32)
+    x = skewed_inputs(d, tokens, e, 0.6, seed=3)
+    with pytest.raises(ValueError, match="rng"):
+        moe_layer(params, x, cfg)
+    # with a key it runs and stays balanced
+    _, stats = moe_layer(params, x, cfg, rng=jax.random.key(7))
+    assert int(stats.dropped) < 0.05 * tokens
+
+
+def test_moe_layer_rejects_cluster_dispatch():
+    cfg = MoEConfig(num_experts=4, top_k=1, d_ff_expert=8,
+                    dispatch="cluster")
+    params = init_moe(jax.random.key(0), 16, cfg, jnp.float32)
+    with pytest.raises(ValueError, match="cluster"):
+        moe_layer(params, skewed_inputs(16, 32, 4, 0.0), cfg)
+
+
+def test_groups_fallback_warns_and_divisible_groups_match_flat():
+    d, e, tokens = 16, 4, 128
+    cfg = MoEConfig(num_experts=e, top_k=2, d_ff_expert=8,
+                    dispatch="alpha_k", extra_slots=4)
+    params = init_moe(jax.random.key(2), d, cfg, jnp.float32)
+    x = skewed_inputs(d, tokens, e, 0.0, seed=4)
+    # non-dividing group count: loud fallback, same answer as flat
+    with pytest.warns(UserWarning, match="does not divide"):
+        y_fb, stats_fb = moe_layer(params, x, cfg, groups=3)
+    y_flat, stats_flat = moe_layer(params, x, cfg, groups=1)
+    np.testing.assert_allclose(np.asarray(y_fb), np.asarray(y_flat))
+    # a dividing group count keeps the group-local scatter exact: every
+    # token's k expert rows are identical, only buffer layout changes
+    y_g, stats_g = moe_layer(params, x, cfg, groups=4)
+    assert int(stats_g.dropped) == 0
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_flat),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_plan_slots_greedy_matches_bruteforce():
+    """The greedy split (largest per-replica load gets the next slot) is
+    optimal for minimizing max_e c_e / r_e — check against brute force
+    over every allocation of R extra slots to E experts."""
+    import itertools
+
+    e, r = 4, 3
+    rng = np.random.default_rng(11)
+    for trial in range(8):
+        counts = rng.integers(1, 1000, size=e).astype(np.int32)
+        _, replicas, _ = plan_slots(jnp.asarray(counts), e, r)
+        greedy = float(np.max(counts / np.asarray(replicas)))
+        best = min(
+            float(np.max(counts / (1 + np.bincount(alloc, minlength=e))))
+            for alloc in itertools.combinations_with_replacement(range(e), r))
+        assert greedy <= best + 1e-6, (trial, counts, greedy, best)
+
+
+def test_theorem6_capacity_yields_zero_drops():
+    """With the default policy-derived slot capacity (Theorem 6's
+    2*T*K/n_slots plus policy slack, no hand-tuned alpha_k_cap), the hot
+    router drops nothing — not 'near zero', zero."""
+    d, tokens = 32, 4096
+    x = skewed_inputs(d, tokens, 8, 0.6)
+    cfg = MoEConfig(num_experts=8, top_k=1, d_ff_expert=16,
+                    dispatch="alpha_k", extra_slots=8)
+    assert cfg.alpha_k_cap is None     # the policy-derived default
+    params = init_moe(jax.random.key(0), d, cfg, jnp.float32)
+    router = np.array(params["router"]) * 0.01
+    router[:, 0] += np.linspace(0.3, 0.8, d)
+    params["router"] = jnp.asarray(router)
+    _, stats = moe_layer(params, x, cfg)
+    assert int(stats.dropped) == 0
+    assert np.asarray(stats.slot_load).sum() == tokens * cfg.top_k
