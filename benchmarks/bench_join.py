@@ -15,6 +15,7 @@ import numpy as np
 from repro import cluster
 from repro.core.alpha_k import statjoin_workload_bound
 from repro.data import scalar_skew_tables, zipf_tables
+from repro.obs import timeit
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           os.pardir, "BENCH_join.json")
@@ -192,21 +193,18 @@ def run_planner_compare(report_rows: List[str]) -> None:
     clear_plan_cache()
     cluster.join(s_big, rows_big, t_big, rows_big, algorithm="auto",
                  t_machines=t)              # warm every jit cache
-    plan_s, total_s = [], []
-    plan = None
-    for _ in range(5):                      # best-of-5 damps timer noise
-        clear_plan_cache()
-        t0 = time.time()
-        plan, _ = plan_join_query(s_big, t_big, t_machines=t)
-        plan_s.append(time.time() - t0)
-        clear_plan_cache()
-        t0 = time.time()
-        cluster.join(s_big, rows_big, t_big, rows_big, algorithm="auto",
-                     t_machines=t)
-        total_s.append(time.time() - t0)
-    # best-of-N on BOTH sides: comparing min-plan against max-total
-    # would bias the ratio low and let a >10% overhead sneak past
-    plan_s, total_s = min(plan_s), min(total_s)
+    # best-of-5 damps timer noise; setup= clears the plan cache outside
+    # the clock so every rep really re-plans.  best-of-N on BOTH sides:
+    # comparing min-plan against max-total would bias the ratio low and
+    # let a >10% overhead sneak past.
+    plan_res = timeit(lambda: plan_join_query(s_big, t_big, t_machines=t),
+                      reps=5, warmup=0, setup=clear_plan_cache)
+    total_res = timeit(
+        lambda: cluster.join(s_big, rows_big, t_big, rows_big,
+                             algorithm="auto", t_machines=t),
+        reps=5, warmup=0, setup=clear_plan_cache)
+    plan = plan_res.last_result[0]
+    plan_s, total_s = plan_res.best_s, total_res.best_s
     pct = 100.0 * plan_s / total_s
     entries.append({"cell": f"join_overhead(t={t},m={m})",
                     "plan_us": round(plan_s * 1e6),

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from typing import List
 
 import numpy as np
@@ -29,6 +28,7 @@ from repro.cluster.substrate import reset_default_pool
 from repro.configs.base import MoEConfig
 from repro.kernels import ops
 from repro.models.moe import init_moe
+from repro.obs import timeit
 from repro.planner import clear_plan_cache
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -83,12 +83,10 @@ def run(report_rows: List[str]) -> None:
             _, rep = cluster.moe_dispatch(params, x, cfg, mode=mode,
                                           t_machines=t_machines)
             # warm best-of timing (compiled programs + plan cache hot)
-            best = float("inf")
-            for _ in range(reps):
-                t0 = time.time()
-                jax.block_until_ready(cluster.moe_dispatch(
-                    params, x, cfg, mode=mode, t_machines=t_machines)[0])
-                best = min(best, (time.time() - t0) * 1e6)
+            best = timeit(
+                lambda: cluster.moe_dispatch(
+                    params, x, cfg, mode=mode, t_machines=t_machines)[0],
+                reps=reps, warmup=0).best_us
             drop_pct = 100.0 * rep.total_dropped / assignments
             slot = np.asarray(rep.slot_workload, np.float64)
             imb = float(slot.max() / max(1.0, slot.mean()))

@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from typing import List
 
 import numpy as np
@@ -27,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.cluster import SubstratePool
 from repro.data import uniform_keys, zipf_tables
+from repro.obs import timeit
 from repro.serve import QueryEngine, join_query, sort_query
 from repro.serve.query import run_spec
 
@@ -77,10 +77,8 @@ def run(report_rows: List[str]) -> None:
 
     # ---- warm the one-shot path (plan cache) + run its measured trace -----
     warm_results = {s.fingerprint(): run_direct(s) for s in pool_specs}
-    t0 = time.time()
-    for spec in trace:
-        run_direct(spec)
-    dt_base = time.time() - t0
+    dt_base = timeit(lambda: [run_direct(s) for s in trace],
+                     reps=1, warmup=0).best_s
     qps_base = len(trace) / dt_base
 
     # ---- engine constructed AFTER the baseline so its ServeStats deltas
@@ -91,9 +89,8 @@ def run(report_rows: List[str]) -> None:
     compiles_after_warm = sub_pool.stats()["compiles"]
 
     # ---- engine: the same trace, submitted as traffic ---------------------
-    t0 = time.time()
-    results = engine.run(trace)
-    dt_engine = time.time() - t0
+    eng_res = timeit(lambda: engine.run(trace), reps=1, warmup=0)
+    results, dt_engine = eng_res.last_result, eng_res.best_s
     qps_engine = len(trace) / dt_engine
     stats = engine.stats()
     # captured BEFORE the ablation engine touches the same pool, so this
@@ -104,9 +101,8 @@ def run(report_rows: List[str]) -> None:
     # ---- ablation: result LRU off (pure batching + program cache) ---------
     engine_nc = QueryEngine(pool=sub_pool, max_batch=32,
                             batch_window_s=0.005, result_cache_size=0)
-    t0 = time.time()
-    results_nc = engine_nc.run(trace)
-    dt_nc = time.time() - t0
+    nc_res = timeit(lambda: engine_nc.run(trace), reps=1, warmup=0)
+    results_nc, dt_nc = nc_res.last_result, nc_res.best_s
     qps_nc = len(trace) / dt_nc
     engine_nc.close()
     assert all(r.ok for r in results_nc)

@@ -21,6 +21,7 @@ from repro.cluster.substrate import reset_default_pool
 from repro.core.alpha_k import smms_workload_bound, terasort_workload_bound
 from repro.data import lidar_like, uniform_keys, zipf_tables
 from repro.kernels import ops
+from repro.obs import timeit
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           os.pardir, "BENCH_sort.json")
@@ -156,12 +157,8 @@ def run_kernel_compare(report_rows: List[str]) -> None:
 
     def best_of(**kw):
         """Best of ``reps`` warm runs (the cold compile already happened)."""
-        best = float("inf")
-        for _ in range(reps):
-            t0 = time.time()
-            jax.block_until_ready(cluster.sort(x, **kw))
-            best = min(best, (time.time() - t0) * 1e6)
-        return best
+        return timeit(lambda: cluster.sort(x, **kw),
+                      reps=reps, warmup=0).best_us
 
     for algorithm in ("smms", "terasort"):
         (ref_keys, _), rep_ref = cluster.sort(x, algorithm=algorithm,
@@ -240,12 +237,8 @@ def run_exchange_compare(report_rows: List[str]) -> None:
     reset_default_pool()
 
     def best_of(xt, **kw):
-        best = float("inf")
-        for _ in range(reps):
-            t0 = time.time()
-            jax.block_until_ready(cluster.sort(xt, **kw))
-            best = min(best, (time.time() - t0) * 1e6)
-        return best
+        return timeit(lambda: cluster.sort(xt, **kw),
+                      reps=reps, warmup=0).best_us
 
     for t in (16, 64, 256):
         m = n // t

@@ -14,7 +14,8 @@ from typing import List
 
 def main() -> None:
     from benchmarks import (bench_alpha_k, bench_join, bench_kernels,
-                            bench_moe_dispatch, bench_serve, bench_sort)
+                            bench_moe_dispatch, bench_serve, bench_sort,
+                            trace_report)
 
     rows: List[str] = []
     suites = [
@@ -34,6 +35,9 @@ def main() -> None:
         ("Pallas kernels", bench_kernels.run),
         ("Serving engine vs one-shot -> BENCH_serve.json",
          bench_serve.run),
+        ("Traced query + roofline join -> TRACE_query.json",
+         trace_report.run),
+        ("Tracing-off overhead gate", trace_report.run_overhead_gate),
     ]
     failures = []
     for name, fn in suites:

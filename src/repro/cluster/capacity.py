@@ -18,6 +18,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Iterator, Tuple
 
+from ..obs import trace as obs_trace
+
 __all__ = ["CapacityPolicy", "CapacityOverflowError", "run_with_capacity"]
 
 
@@ -107,6 +109,10 @@ def run_with_capacity(attempt: Callable[[float], Tuple[object, int]],
     result, dropped, factor = None, 0, policy.first_factor
     for factor in policy.factors():
         attempts += 1
+        if attempts > 1:    # an actual retry (the first try is not one)
+            obs_trace.event("capacity_retry", attempt=attempts,
+                            cap_factor=float(factor),
+                            dropped=int(dropped))
         result, dropped = attempt(factor)
         if int(dropped) == 0:
             return result, factor, attempts

@@ -43,6 +43,7 @@ from jax.sharding import PartitionSpec as P
 
 from . import compat
 from .collectives import CollectiveTape
+from ..obs import trace as obs_trace
 
 __all__ = ["Substrate", "VmapSubstrate", "ShardMapSubstrate",
            "SubstratePool", "default_substrate", "default_pool",
@@ -154,8 +155,26 @@ class Substrate:
             return ()
         if not _donation_supported():
             self.stats["donation_dropped"] += 1
+            obs_trace.event("donation_dropped",
+                            platform=jax.default_backend())
             return ()
         return tuple(sorted({int(i) for i in donate_argnums}))
+
+    def _attach_phases(self, sp: Optional["obs_trace.Span"],
+                       snap: CollectiveTape) -> None:
+        """Attach the bound tape's phases as leaf spans under ``sp``.
+
+        Phases execute inside ONE compiled program, so per-phase host
+        time is not observable; each phase becomes an instant child
+        carrying the same bound ``sent``/``received`` arrays the
+        AlphaKReport's PhaseStats are built from — span bytes therefore
+        reconcile bitwise with the report by construction.
+        """
+        if sp is None:
+            return
+        for ph in snap.phases(self.t):
+            sp.add_child(f"phase:{ph.name}", sent=ph.sent,
+                         received=ph.received)
 
     def run(self, shard_fn: Callable, *args, donate_argnums=()):
         """Execute ``shard_fn(*local_args, tape=tape)`` on every machine.
@@ -206,7 +225,9 @@ class VmapSubstrate(Substrate):
         return fn, tape
 
     def run(self, shard_fn: Callable, *args, donate_argnums=()):
-        with self._lock:
+        with self._lock, obs_trace.span(
+                "substrate.run", body=_fn_label(shard_fn),
+                substrate=type(self).__name__, t=self.t) as sp:
             self.stats["runs"] += 1
             donate = self._donation(donate_argnums)
             if not self._jit:
@@ -222,13 +243,19 @@ class VmapSubstrate(Substrate):
                         jax.jit(fn, donate_argnums=donate), tape)
                     self.stats["compiles"] += 1
                     self.stats[f"compiles[{_fn_label(shard_fn)}]"] += 1
+                    if sp is not None:
+                        sp.add_event("compile", body=_fn_label(shard_fn))
                 else:
                     self.stats["program_cache_hits"] += 1
+                    if sp is not None:
+                        sp.add_event("program_cache_hit")
                 fn, tape = cached
                 if donate:
                     self.stats["donated_runs"] += 1
             out, frames = fn(*args)
-            return out, tape.bound_snapshot(jax.tree.map(np.asarray, frames))
+            snap = tape.bound_snapshot(jax.tree.map(np.asarray, frames))
+            self._attach_phases(sp, snap)
+            return out, snap
 
 
 class ShardMapSubstrate(Substrate):
@@ -258,7 +285,9 @@ class ShardMapSubstrate(Substrate):
                       for a in args))
 
     def run(self, shard_fn: Callable, *args, donate_argnums=()):
-        with self._lock:
+        with self._lock, obs_trace.span(
+                "substrate.run", body=_fn_label(shard_fn),
+                substrate=type(self).__name__, t=self.t) as sp:
             self.stats["runs"] += 1
             donate = self._donation(donate_argnums) if self._jit else ()
             key = self._signature(shard_fn, args) + (donate,)
@@ -286,13 +315,19 @@ class ShardMapSubstrate(Substrate):
                 self._compiled[key] = cached
                 self.stats["compiles"] += 1
                 self.stats[f"compiles[{_fn_label(shard_fn)}]"] += 1
+                if sp is not None:
+                    sp.add_event("compile", body=_fn_label(shard_fn))
             else:
                 self.stats["program_cache_hits"] += 1
+                if sp is not None:
+                    sp.add_event("program_cache_hit")
             fn, tape = cached
             if donate:
                 self.stats["donated_runs"] += 1
             out, frames = fn(*args)
-            return out, tape.bound_snapshot(jax.tree.map(np.asarray, frames))
+            snap = tape.bound_snapshot(jax.tree.map(np.asarray, frames))
+            self._attach_phases(sp, snap)
+            return out, snap
 
 
 class SubstratePool:

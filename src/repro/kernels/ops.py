@@ -34,9 +34,27 @@ or duplicates values) while jnp.sort moves NaNs last.
 ``backend=None`` resolves to the module default (``DEFAULT_BACKEND``,
 seeded from the ``REPRO_KERNEL_BACKEND`` env var, ``"reference"`` when
 unset) so a whole test run can be flipped to the kernel path without
-touching call sites.  Dispatch decisions are counted in
-``DISPATCH_COUNTS`` (one tick per *trace*, not per execution) so tests
-can prove which path actually ran.
+touching call sites.
+
+Dispatch accounting — TWO counters with different semantics:
+
+* ``DISPATCH_COUNTS[(op, path)]`` ticks once per *trace* (dispatch
+  decision), NOT per execution: a query whose fused body is served from
+  the compiled-program cache ticks nothing.  This is exactly what the
+  fusion budget gates want ("how many kernel launches does one cold
+  query trace?") and stays their contract.  Mirrored into the obs
+  registry as ``kernel_dispatch_traces_total{op,path}``.
+* ``kernel_dispatch_execs_total{op,path}`` (obs registry) ticks once
+  per *execution* — a ``jax.debug.callback`` inserted at trace time
+  fires every time the compiled program actually runs, so cached
+  re-executions are visible.  Opt-in via ``REPRO_EXEC_COUNTS=1`` or
+  :func:`enable_exec_counts` because the callback is baked into the
+  compiled program: toggling only affects programs compiled *after* the
+  flip (``reset_default_pool()`` to re-trace), and host callbacks add
+  per-execution overhead, so the default stays off.
+
+With tracing active (``repro.obs.trace``), every dispatch decision also
+lands as a ``kernel_dispatch`` event on the enclosing span.
 
 On this CPU container the kernels run with interpret=True (the kernel
 body executes in Python/XLA on CPU — correctness path).  On a real TPU
@@ -46,13 +64,17 @@ runtime set ``repro.kernels.ops.INTERPRET = False`` (or export
 from __future__ import annotations
 
 import collections
+import functools
 import os
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
 
 from . import bitonic, bucketize, fused, flash_attention as fa
+from ..obs import trace as obs_trace
+from ..obs.metrics import REGISTRY
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
@@ -76,6 +98,17 @@ RANK_MERGE_BOUND_BLOCK = 1 << 11
 DISPATCH_COUNTS: collections.Counter = collections.Counter()
 _COUNTS_LOCK = threading.Lock()
 
+# Execution-time counting (see the module docstring): when on, _tick
+# inserts a host callback so kernel_dispatch_execs_total in the obs
+# registry ticks per program EXECUTION, cached programs included.
+EXEC_COUNTS_ENABLED = os.environ.get("REPRO_EXEC_COUNTS", "0") == "1"
+
+# Optional per-op host timing: each dispatcher call (trace or eager
+# execute) lands in the kernel_op_seconds{op} registry histogram.  Off
+# by default — the block_until_ready serialization distorts pipelined
+# runs, so this is a debugging lens, not an always-on metric.
+OP_TIMING_ENABLED = os.environ.get("REPRO_OP_TIMING", "0") == "1"
+
 _KERNEL_KEY_DTYPES = frozenset(
     jnp.dtype(d) for d in (jnp.float32, jnp.bfloat16, jnp.int32))
 
@@ -86,6 +119,8 @@ __all__ = [
     "resolve_backend", "reset_dispatch_counts", "kernel_eligible",
     "INTERPRET", "BACKENDS", "DEFAULT_BACKEND", "DISPATCH_COUNTS",
     "MAX_KERNEL_LANES", "RANK_MERGE_BOUND_BLOCK",
+    "EXEC_COUNTS_ENABLED", "OP_TIMING_ENABLED",
+    "enable_exec_counts", "exec_dispatch_counts",
 ]
 
 
@@ -99,13 +134,70 @@ def resolve_backend(backend) -> str:
 
 
 def reset_dispatch_counts() -> None:
+    """Clear the per-trace counter (the registry's execution counters
+    are reset separately, via ``repro.obs.reset_registry``)."""
     with _COUNTS_LOCK:
         DISPATCH_COUNTS.clear()
+
+
+def enable_exec_counts(on: bool = True) -> None:
+    """Flip execution-time dispatch counting for future traces.
+
+    Already-compiled programs keep their old behavior (the callback is
+    baked in at trace time) — call
+    ``repro.cluster.substrate.reset_default_pool()`` to re-trace.
+    """
+    global EXEC_COUNTS_ENABLED
+    EXEC_COUNTS_ENABLED = bool(on)
+
+
+def exec_dispatch_counts():
+    """{(op, path): executions} from the registry's exec counter."""
+    out = {}
+    for labels, v in REGISTRY.counters_matching(
+            "kernel_dispatch_execs_total").items():
+        d = dict(labels)
+        out[(d.get("op", "?"), d.get("path", "?"))] = int(v)
+    return out
+
+
+def _exec_tick(op: str, path: str) -> None:
+    # Host callback body: fires once per execution of the compiled
+    # program that traced the dispatch (jax.debug.callback), on a
+    # runtime thread — the registry counter is its own lock domain.
+    REGISTRY.counter("kernel_dispatch_execs_total", op=op, path=path).inc()
 
 
 def _tick(op: str, path: str) -> None:
     with _COUNTS_LOCK:
         DISPATCH_COUNTS[(op, path)] += 1
+    REGISTRY.counter("kernel_dispatch_traces_total", op=op, path=path).inc()
+    obs_trace.event("kernel_dispatch", op=op, path=path)
+    if EXEC_COUNTS_ENABLED:
+        jax.debug.callback(functools.partial(_exec_tick, op, path))
+
+
+def _op_timing(fn):
+    """Record per-call host time of a dispatcher when OP_TIMING_ENABLED.
+
+    Measures the dispatcher call plus a block_until_ready on its result
+    (a no-op on tracers, so under jit this times the *trace*; eagerly it
+    times the real execution).  Disabled (the default) costs one bool
+    check per dispatch.
+    """
+    name = fn.__name__
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kw):
+        if not OP_TIMING_ENABLED:
+            return fn(*args, **kw)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args, **kw))
+        REGISTRY.histogram("kernel_op_seconds", op=name).observe(
+            time.perf_counter() - t0)
+        return out
+
+    return wrapper
 
 
 _next_pow2 = bitonic._next_pow2
@@ -185,6 +277,7 @@ def kernel_eligible(op: str, x, y=None) -> bool:
 # sort / sort_kv
 # ---------------------------------------------------------------------------
 
+@_op_timing
 def sort(x: jnp.ndarray, *, backend=None, block_rows: int = 8,
          prepadded: bool = False) -> jnp.ndarray:
     """Ascending sort along the last axis.  x: (n,) or (rows, n).
@@ -209,6 +302,7 @@ def sort(x: jnp.ndarray, *, backend=None, block_rows: int = 8,
     return jnp.sort(x, axis=-1)
 
 
+@_op_timing
 def sort_kv(keys: jnp.ndarray, values, *, backend=None, block_rows: int = 8,
             prepadded: bool = False):
     """Stable sort of (keys, values) by key: returns (sorted, permuted).
@@ -248,6 +342,7 @@ def sort_kv(keys: jnp.ndarray, values, *, backend=None, block_rows: int = 8,
 # searchsorted / bucketize
 # ---------------------------------------------------------------------------
 
+@_op_timing
 def searchsorted(sorted_arr: jnp.ndarray, queries: jnp.ndarray, *,
                  side: str = "left", backend=None, block_n: int = 1024,
                  valid_len=None) -> jnp.ndarray:
@@ -275,6 +370,7 @@ def searchsorted(sorted_arr: jnp.ndarray, queries: jnp.ndarray, *,
     return ids
 
 
+@_op_timing
 def sort_partition(x: jnp.ndarray, interior: jnp.ndarray, *, backend=None):
     """Fused local sort + contiguous-destination partition (one dispatch).
 
@@ -302,6 +398,7 @@ def sort_partition(x: jnp.ndarray, interior: jnp.ndarray, *, backend=None):
     return xs, starts, ends - starts
 
 
+@_op_timing
 def sort_partition_kv(keys: jnp.ndarray, values, interior: jnp.ndarray, *,
                       backend=None):
     """Payload-carrying :func:`sort_partition` (stable, one dispatch).
@@ -334,6 +431,7 @@ def sort_partition_kv(keys: jnp.ndarray, values, interior: jnp.ndarray, *,
     return ks, vs, starts, ends - starts
 
 
+@_op_timing
 def bucketize_histogram(keys: jnp.ndarray, boundaries: jnp.ndarray, t: int,
                         *, backend=None, block_n: int = 1024):
     """Fused bucket-id + histogram (SMMS Round-3 planning).
@@ -390,6 +488,7 @@ def _rank_merge(keys: jnp.ndarray):
     return merged[:t * c], order[:t * c]
 
 
+@_op_timing
 def merge_sorted_rows(x: jnp.ndarray, *, backend=None) -> jnp.ndarray:
     """Merge already-sorted rows into one sorted vector.  x: (t, c).
 
@@ -409,6 +508,7 @@ def merge_sorted_rows(x: jnp.ndarray, *, backend=None) -> jnp.ndarray:
     return jnp.sort(x.reshape(-1))
 
 
+@_op_timing
 def merge_sorted_rows_kv(keys: jnp.ndarray, values, *, backend=None):
     """Merge sorted rows carrying payload.  keys: (t, c); values: (t, c, ...).
 

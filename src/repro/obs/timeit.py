@@ -1,0 +1,82 @@
+"""Shared warmup + best-of-N timing — one definition for every bench.
+
+Every benchmark used to hand-roll the same loop (run once to warm the
+compiled-program cache, then keep the min of N timed repetitions).
+Centralizing it means bench numbers and trace spans agree by
+construction: the measured region is exactly ``fn()`` plus a
+``jax.block_until_ready`` on its result, timed with the same
+``time.perf_counter`` clock the span tracer uses.
+
+Best-of (not mean-of) is deliberate: on a shared CI container the
+minimum is the least-noisy estimator of the warm path's true cost —
+every slower sample is the same work plus scheduler noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional
+
+__all__ = ["TimeitResult", "timeit"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeitResult:
+    """Warm-path timing summary; all times in seconds."""
+    best_s: float
+    mean_s: float
+    times_s: List[float]
+    reps: int
+    warmup: int
+    last_result: Any = None
+
+    @property
+    def best_us(self) -> float:
+        return self.best_s * 1e6
+
+    @property
+    def mean_us(self) -> float:
+        return self.mean_s * 1e6
+
+
+def _block(out: Any) -> Any:
+    """Wait for async (JAX) results so the stop-clock sees real work."""
+    try:
+        import jax
+    except ImportError:  # pragma: no cover - jax is always present here
+        return out
+    try:
+        return jax.block_until_ready(out)
+    except (TypeError, ValueError):
+        return out  # non-array result (e.g. a report dataclass)
+
+
+def timeit(fn: Callable[[], Any], *, reps: int = 5, warmup: int = 1,
+           block: bool = True,
+           setup: Optional[Callable[[], None]] = None) -> TimeitResult:
+    """Best of ``reps`` timed calls after ``warmup`` untimed ones.
+
+    ``fn`` takes no arguments (close over inputs).  ``setup`` runs
+    before every *timed* rep, outside the clock — use it to reset
+    counters the measured call mutates.
+    """
+    if reps < 1:
+        raise ValueError(f"reps must be >= 1, got {reps}")
+    out = None
+    for _ in range(max(0, warmup)):
+        out = fn()
+        if block:
+            out = _block(out)
+    times: List[float] = []
+    for _ in range(reps):
+        if setup is not None:
+            setup()
+        t0 = time.perf_counter()
+        out = fn()
+        if block:
+            out = _block(out)
+        times.append(time.perf_counter() - t0)
+    return TimeitResult(best_s=min(times),
+                        mean_s=sum(times) / len(times),
+                        times_s=times, reps=reps,
+                        warmup=max(0, warmup), last_result=out)

@@ -25,6 +25,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.cluster.substrate import Substrate, VmapSubstrate
+from repro.obs import trace as obs_trace
 
 from .cost import (CostEstimate, choose_exchange, join_costs,
                    moe_dispatch_costs, select, select_dispatch, sort_costs)
@@ -142,26 +143,30 @@ def plan_sort_query(x, *, t: int, r: int = 2,
     Returns ``(QueryPlan, sketch_phases)``; the phases are [] on a
     cache hit (no sketch ran)."""
     key = fingerprint_arrays(x, extra=f"sort|t={t}|r={r}")
-    plan = _cache_get(key)
-    if plan is not None:
-        return plan, []
-    sub = substrate if (substrate is not None and substrate.t == t
-                        and len(substrate.axes) == 1) \
-        else _sketch_substrate(t)
-    _tick("sketch_runs")
-    profile, tape = profile_sorted_shards(x, sub,
-                                          kernel_backend=kernel_backend)
-    costs = sort_costs(profile, t, r=r)
-    chosen = select(costs)
-    m = max(1, profile.n // t)
-    topology, ex_costs = choose_exchange(t, m, algorithm=chosen.algorithm,
-                                         r=r)
-    plan = QueryPlan(kind="sort", algorithm=chosen.algorithm, t=t,
-                     fingerprint=key, predicted=chosen, candidates=costs,
-                     profile=profile, exchange=topology,
-                     exchange_costs=ex_costs)
-    _cache_put(key, plan)
-    return plan, tape.phases(t)
+    with obs_trace.span("plan.sort", t=t):
+        plan = _cache_get(key)
+        if plan is not None:
+            obs_trace.event("plan.cache_hit", fingerprint=key[:12])
+            return plan, []
+        sub = substrate if (substrate is not None and substrate.t == t
+                            and len(substrate.axes) == 1) \
+            else _sketch_substrate(t)
+        _tick("sketch_runs")
+        with obs_trace.span("planner.sketch"):
+            profile, tape = profile_sorted_shards(
+                x, sub, kernel_backend=kernel_backend)
+        with obs_trace.span("planner.score"):
+            costs = sort_costs(profile, t, r=r)
+            chosen = select(costs)
+            m = max(1, profile.n // t)
+            topology, ex_costs = choose_exchange(
+                t, m, algorithm=chosen.algorithm, r=r)
+        plan = QueryPlan(kind="sort", algorithm=chosen.algorithm, t=t,
+                         fingerprint=key, predicted=chosen, candidates=costs,
+                         profile=profile, exchange=topology,
+                         exchange_costs=ex_costs)
+        _cache_put(key, plan)
+        return plan, tape.phases(t)
 
 
 def plan_join_query(s_keys, t_keys, *, t_machines: int,
@@ -176,25 +181,29 @@ def plan_join_query(s_keys, t_keys, *, t_machines: int,
     t = t_machines
     key = fingerprint_arrays(s_keys, t_keys,
                              extra=f"join|t={t}|mem={mem_budget}")
-    plan = _cache_get(key)
-    if plan is not None:
-        return plan, []
-    sub = substrate if (substrate is not None and substrate.t == t
-                        and len(substrate.axes) == 1) \
-        else _sketch_substrate(t)
-    _tick("sketch_runs")
-    s32 = np.asarray(s_keys, np.int32)
-    t32 = np.asarray(t_keys, np.int32)
-    profile, tape = profile_join_tables(s32, t32, t, sub,
-                                        masked=int(MASKED_KEY),
-                                        kernel_backend=kernel_backend)
-    costs = join_costs(profile, t, mem_budget=mem_budget)
-    chosen = select(costs)
-    plan = QueryPlan(kind="join", algorithm=chosen.algorithm, t=t,
-                     fingerprint=key, predicted=chosen, candidates=costs,
-                     profile=profile)
-    _cache_put(key, plan)
-    return plan, tape.phases(t)
+    with obs_trace.span("plan.join", t=t):
+        plan = _cache_get(key)
+        if plan is not None:
+            obs_trace.event("plan.cache_hit", fingerprint=key[:12])
+            return plan, []
+        sub = substrate if (substrate is not None and substrate.t == t
+                            and len(substrate.axes) == 1) \
+            else _sketch_substrate(t)
+        _tick("sketch_runs")
+        s32 = np.asarray(s_keys, np.int32)
+        t32 = np.asarray(t_keys, np.int32)
+        with obs_trace.span("planner.sketch"):
+            profile, tape = profile_join_tables(
+                s32, t32, t, sub, masked=int(MASKED_KEY),
+                kernel_backend=kernel_backend)
+        with obs_trace.span("planner.score"):
+            costs = join_costs(profile, t, mem_budget=mem_budget)
+            chosen = select(costs)
+        plan = QueryPlan(kind="join", algorithm=chosen.algorithm, t=t,
+                         fingerprint=key, predicted=chosen, candidates=costs,
+                         profile=profile)
+        _cache_put(key, plan)
+        return plan, tape.phases(t)
 
 
 def plan_moe_query(x, router, *, t_machines: int, num_experts: int,
@@ -220,34 +229,40 @@ def plan_moe_query(x, router, *, t_machines: int, num_experts: int,
         x, router,
         extra=f"moe|t={t}|e={num_experts}|k={top_k}|r={extra_slots}"
               f"|cf={capacity_factor}")
-    plan = _cache_get(key)
-    phases = []
-    if plan is None:
-        sub = substrate if (substrate is not None and substrate.t == t
-                            and len(substrate.axes) == 1) \
-            else _sketch_substrate(t)
-        _tick("sketch_runs")
-        # Exactly the dispatch body's routing expression (vmapped einsum
-        # + top_k in f32) so the sketched ids ARE the runtime ids.
-        xr = jnp.asarray(x).reshape(t, -1, x.shape[-1])
-        ids = jax.vmap(
-            lambda xl: lax.top_k(
-                jnp.einsum("md,de->me", xl.astype(jnp.float32),
-                           jnp.asarray(router)), top_k)[1])(xr)
-        ids = ids.reshape(t, -1).astype(jnp.int32)
-        profile, tape = sketch_table(ids, sub,
-                                     kernel_backend=kernel_backend,
-                                     sample=None)
-        tokens = ids.shape[0] * ids.shape[1] // top_k
-        counts = expert_counts_estimate(profile, num_experts)
-        costs = moe_dispatch_costs(
-            counts, tokens=tokens, top_k=top_k, num_experts=num_experts,
-            extra_slots=extra_slots, t_machines=t,
-            capacity_factor=capacity_factor)
-        chosen = select_dispatch(costs)
-        plan = QueryPlan(kind="moe", algorithm=chosen.algorithm, t=t,
-                         fingerprint=key, predicted=chosen, candidates=costs,
-                         profile=profile)
-        _cache_put(key, plan)
-        phases = tape.phases(t)
+    with obs_trace.span("plan.moe", t=t):
+        plan = _cache_get(key)
+        phases = []
+        if plan is None:
+            sub = substrate if (substrate is not None and substrate.t == t
+                                and len(substrate.axes) == 1) \
+                else _sketch_substrate(t)
+            _tick("sketch_runs")
+            with obs_trace.span("planner.sketch"):
+                # Exactly the dispatch body's routing expression (vmapped
+                # einsum + top_k in f32) so the sketched ids ARE the
+                # runtime ids.
+                xr = jnp.asarray(x).reshape(t, -1, x.shape[-1])
+                ids = jax.vmap(
+                    lambda xl: lax.top_k(
+                        jnp.einsum("md,de->me", xl.astype(jnp.float32),
+                                   jnp.asarray(router)), top_k)[1])(xr)
+                ids = ids.reshape(t, -1).astype(jnp.int32)
+                profile, tape = sketch_table(ids, sub,
+                                             kernel_backend=kernel_backend,
+                                             sample=None)
+            with obs_trace.span("planner.score"):
+                tokens = ids.shape[0] * ids.shape[1] // top_k
+                counts = expert_counts_estimate(profile, num_experts)
+                costs = moe_dispatch_costs(
+                    counts, tokens=tokens, top_k=top_k,
+                    num_experts=num_experts, extra_slots=extra_slots,
+                    t_machines=t, capacity_factor=capacity_factor)
+                chosen = select_dispatch(costs)
+            plan = QueryPlan(kind="moe", algorithm=chosen.algorithm, t=t,
+                             fingerprint=key, predicted=chosen,
+                             candidates=costs, profile=profile)
+            _cache_put(key, plan)
+            phases = tape.phases(t)
+        else:
+            obs_trace.event("plan.cache_hit", fingerprint=key[:12])
     return plan, phases

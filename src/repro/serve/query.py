@@ -54,6 +54,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.cluster.substrate import SubstratePool
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
 
 from .batching import LengthBucketScheduler
 
@@ -223,6 +225,12 @@ class QueryResult:
     cached: bool = False              # served from the result LRU
     latency_s: float = 0.0            # submit -> done (queueing included)
     exec_s: float = 0.0               # the cluster call alone
+    # Per-request timeline, when the engine's tracer is enabled: the
+    # root Span of this request's trace (planner / substrate / phase
+    # children below it — see repro.obs.trace).  Coalesced twins share
+    # the leader's trace; result-LRU hits carry none (nothing executed).
+    trace_id: Optional[str] = None
+    trace: Any = None
 
     @property
     def algorithm(self) -> Optional[str]:
@@ -332,6 +340,11 @@ class QueryEngine:
         compiled programs too.
     kernel_backend : default kernel dispatch for specs that don't pin
         one ("pallas" / "reference" / None = ops.DEFAULT_BACKEND).
+    tracer      : a :class:`repro.obs.Tracer` for per-request span
+        trees; defaults to the process-global tracer (disabled unless
+        ``repro.obs.enable()`` was called), so tracing costs nothing
+        until someone opts in.  ``engine.tracer.last()`` /
+        ``QueryResult.trace`` expose the captured trees.
     result_cache_size : content-addressed LRU of finished results.
         Every algorithm behind the front door is pure and explicitly
         seeded, so an identical fingerprint (same bytes, same
@@ -349,6 +362,7 @@ class QueryEngine:
                  pool: Optional[SubstratePool] = None,
                  kernel_backend: Optional[str] = None,
                  result_cache_size: int = 64,
+                 tracer: Optional[obs_trace.Tracer] = None,
                  autostart: bool = True):
         if max_pending < 1 or max_batch < 1 or workers < 1:
             raise ValueError("max_pending, max_batch and workers must be >= 1")
@@ -364,11 +378,14 @@ class QueryEngine:
         self._ids = itertools.count()
         self._batch_ids = itertools.count()
         self._lock = threading.Lock()          # stats below
-        # bounded window: a long-lived front door must not grow a float
-        # per query forever (and stats() percentiles stay O(window))
-        self._latencies: "collections.deque[float]" = \
-            collections.deque(maxlen=8192)
-        self._counts = collections.Counter()
+        self.tracer = tracer if tracer is not None \
+            else obs_trace.get_tracer()
+        # Engine-local metrics registry: request counters + a streaming
+        # latency histogram, so a mid-run stats() is O(buckets) however
+        # long the engine has served (no per-query float list to scan).
+        self.metrics = MetricsRegistry()
+        self._latency_hist = self.metrics.histogram(
+            "serve_request_latency_seconds")
         self._first_submit: Optional[float] = None
         self._last_done: Optional[float] = None
         self._inflight: Dict[str, List[_Ticket]] = {}
@@ -429,6 +446,14 @@ class QueryEngine:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    # ---- engine-local metric helpers (the registry backs ServeStats) --
+    def _count(self, name: str, n: int = 1) -> None:
+        self.metrics.counter("serve_events_total", event=name).inc(n)
+
+    def _count_value(self, name: str) -> int:
+        return int(self.metrics.counter_value("serve_events_total",
+                                              event=name))
+
     def _drain_failed(self, msg: str) -> None:
         while True:
             try:
@@ -464,8 +489,7 @@ class QueryEngine:
                 self._admit.put(ticket, block=block, timeout=timeout)
         except queue.Full:
             _tick("rejected")
-            with self._lock:
-                self._counts["rejected"] += 1
+            self._count("rejected")
             raise AdmissionError(
                 f"admission queue full ({self._admit.maxsize} pending)")
         _tick("admitted")
@@ -586,8 +610,7 @@ class QueryEngine:
             return
         batch_id = next(self._batch_ids)
         _tick("batches")
-        with self._lock:
-            self._counts["batches"] += 1
+        self._count("batches")
         leaders: List[Tuple[_Ticket, str]] = []
         for it in items:
             try:
@@ -643,32 +666,42 @@ class QueryEngine:
     def _from_cache(self, cached: QueryResult, it: _Ticket,
                     batch_id: int) -> QueryResult:
         _tick("result_cache_hits")
-        with self._lock:
-            self._counts["result_cache_hits"] += 1
+        self._count("result_cache_hits")
         return dataclasses.replace(
             cached, query_id=it.query_id, spec=it.spec, batch_id=batch_id,
             cached=True, coalesced=False, exec_s=0.0,
+            trace_id=None, trace=None,   # an LRU hit executed nothing
             report=_copy_report(cached.report))
 
     def _execute(self, it: _Ticket, batch_id: int) -> QueryResult:
         spec = it.spec
         t0 = time.monotonic()
+        root = None
+        # The ROOT span opens here — in the thread that runs the work —
+        # so every instrumented layer below (planner, capacity retries,
+        # substrate runs, tape phases, kernel dispatch events) attaches
+        # to this request's tree via the thread's trace context.
         try:
-            value, report = run_spec(spec, substrate=self.pool,
-                                     kernel_backend=self.kernel_backend)
+            with self.tracer.trace("query", kind=spec.kind,
+                                   query_id=it.query_id, batch=batch_id,
+                                   tag=spec.tag) as root:
+                value, report = run_spec(
+                    spec, substrate=self.pool,
+                    kernel_backend=self.kernel_backend)
             ok, error = True, None
         except Exception as exc:       # isolate failures per query
             value, report, ok, error = None, None, False, repr(exc)
         exec_s = time.monotonic() - t0
         return QueryResult(query_id=it.query_id, spec=spec, ok=ok,
                            value=value, report=report, error=error,
-                           batch_id=batch_id, exec_s=exec_s)
+                           batch_id=batch_id, exec_s=exec_s,
+                           trace_id=root.trace_id if root else None,
+                           trace=root)
 
     def _replica(self, result: QueryResult, w: _Ticket) -> QueryResult:
         """A coalesced twin: same value, its own identity + report copy."""
         _tick("coalesced")
-        with self._lock:
-            self._counts["coalesced"] += 1
+        self._count("coalesced")
         return dataclasses.replace(
             result, query_id=w.query_id, spec=w.spec, coalesced=True,
             report=_copy_report(result.report))
@@ -680,18 +713,19 @@ class QueryEngine:
         result.latency_s = done - it.submitted_at
         with self._lock:
             self._last_done = done
-            if result.ok:
-                self._counts["served"] += 1
-                if not result.coalesced and not result.cached:
-                    # a real execution (retries only counted once per run)
-                    self._counts["executed"] += 1
-                    self._counts["capacity_retries"] += \
-                        result.capacity_retries
-                self._latencies.append(result.latency_s)
-                _tick("served")
-            else:
-                self._counts["failed"] += 1
-                _tick("failed")
+        if result.ok:
+            self._count("served")
+            if not result.coalesced and not result.cached:
+                # a real execution (retries only counted once per run)
+                self._count("executed")
+                if result.capacity_retries:
+                    self._count("capacity_retries",
+                                result.capacity_retries)
+            self._latency_hist.observe(result.latency_s)
+            _tick("served")
+        else:
+            self._count("failed")
+            _tick("failed")
         it._result = result
         it._done.set()
 
@@ -707,37 +741,38 @@ class QueryEngine:
         pool_stats = {k: pool_now.get(k, 0) - self._pool_base.get(k, 0)
                       for k in set(pool_now) | set(self._pool_base)}
         with self._lock:
-            lat = np.asarray(self._latencies, np.float64)
             wall = ((self._last_done - self._first_submit)
                     if self._first_submit is not None
                     and self._last_done is not None else 0.0)
-            served = self._counts["served"]
-            hits = delta.get("cache_hits", 0)
-            misses = delta.get("cache_misses", 0)
-            return ServeStats(
-                served=served,
-                executed=self._counts["executed"],
-                failed=self._counts["failed"],
-                rejected=self._counts["rejected"],
-                coalesced=self._counts["coalesced"],
-                result_cache_hits=self._counts["result_cache_hits"],
-                batches=self._counts["batches"],
-                wall_s=wall,
-                qps=served / wall if wall > 0 else 0.0,
-                p50_latency_s=float(np.percentile(lat, 50)) if lat.size else 0.0,
-                p99_latency_s=float(np.percentile(lat, 99)) if lat.size else 0.0,
-                plan_cache_hits=hits,
-                plan_cache_misses=misses,
-                sketch_runs=delta.get("sketch_runs", 0),
-                plan_cache_hit_rate=(hits / (hits + misses)
-                                     if hits + misses else 0.0),
-                compiles=pool_stats.get("compiles", 0),
-                program_cache_hits=pool_stats.get("program_cache_hits", 0),
-                capacity_retries=self._counts["capacity_retries"],
-                program_counts={k[len("compiles["):-1]: v
-                                for k, v in sorted(pool_stats.items())
-                                if k.startswith("compiles[") and v},
-                programs_per_query=(pool_stats.get("runs", 0)
-                                    / self._counts["executed"]
-                                    if self._counts["executed"] else 0.0),
-            )
+        served = self._count_value("served")
+        executed = self._count_value("executed")
+        hits = delta.get("cache_hits", 0)
+        misses = delta.get("cache_misses", 0)
+        # percentiles straight from the streaming histogram: O(buckets)
+        # however many requests this engine has served
+        return ServeStats(
+            served=served,
+            executed=executed,
+            failed=self._count_value("failed"),
+            rejected=self._count_value("rejected"),
+            coalesced=self._count_value("coalesced"),
+            result_cache_hits=self._count_value("result_cache_hits"),
+            batches=self._count_value("batches"),
+            wall_s=wall,
+            qps=served / wall if wall > 0 else 0.0,
+            p50_latency_s=self._latency_hist.quantile(0.50),
+            p99_latency_s=self._latency_hist.quantile(0.99),
+            plan_cache_hits=hits,
+            plan_cache_misses=misses,
+            sketch_runs=delta.get("sketch_runs", 0),
+            plan_cache_hit_rate=(hits / (hits + misses)
+                                 if hits + misses else 0.0),
+            compiles=pool_stats.get("compiles", 0),
+            program_cache_hits=pool_stats.get("program_cache_hits", 0),
+            capacity_retries=self._count_value("capacity_retries"),
+            program_counts={k[len("compiles["):-1]: v
+                            for k, v in sorted(pool_stats.items())
+                            if k.startswith("compiles[") and v},
+            programs_per_query=(pool_stats.get("runs", 0) / executed
+                                if executed else 0.0),
+        )

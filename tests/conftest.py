@@ -50,19 +50,26 @@ def _reset_shared_counters():
     Reset before AND after: before isolates this test, after leaves
     nothing behind for non-pytest callers.
     """
+    from repro import obs
     from repro.cluster import reset_default_pool
     from repro.planner import clear_plan_cache
     from repro.serve.query import reset_serve_counters
 
-    ops.reset_dispatch_counts()
-    clear_plan_cache()
-    reset_serve_counters()
-    reset_default_pool()
+    def _reset_all():
+        ops.reset_dispatch_counts()
+        clear_plan_cache()
+        reset_serve_counters()
+        reset_default_pool()
+        # observability globals: the process-wide metrics registry (the
+        # kernel dispatch counters tick into it) and the default tracer
+        # (tests that enable tracing must not leak spans — or an
+        # enabled tracer — into the next test)
+        obs.reset_registry()
+        obs.set_tracer(obs.Tracer(enabled=False))
+
+    _reset_all()
     yield
-    ops.reset_dispatch_counts()
-    clear_plan_cache()
-    reset_serve_counters()
-    reset_default_pool()
+    _reset_all()
 
 
 @pytest.fixture(autouse=True)
