@@ -22,7 +22,7 @@ from .capacity import CapacityOverflowError, CapacityPolicy, run_with_capacity
 from .collectives import CollectiveTape
 from .substrate import (ShardMapSubstrate, Substrate, SubstratePool,
                         VmapSubstrate, default_pool, default_substrate,
-                        reset_default_pool)
+                        recommend_pool_size, reset_default_pool)
 
 __all__ = [
     "compat",
@@ -32,4 +32,5 @@ __all__ = [
     "CollectiveTape",
     "Substrate", "VmapSubstrate", "ShardMapSubstrate", "SubstratePool",
     "default_substrate", "default_pool", "reset_default_pool",
+    "recommend_pool_size",
 ]

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import collections
 import functools
+import math
 import threading
 from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
@@ -47,7 +48,8 @@ from ..obs import trace as obs_trace
 
 __all__ = ["Substrate", "VmapSubstrate", "ShardMapSubstrate",
            "SubstratePool", "default_substrate", "default_pool",
-           "reset_default_pool", "DONATION_PLATFORMS"]
+           "reset_default_pool", "recommend_pool_size",
+           "DONATION_PLATFORMS"]
 
 AxisSpec = Union[int, Tuple[str, int]]
 
@@ -405,6 +407,36 @@ def reset_default_pool() -> None:
     global _DEFAULT_POOL
     with _DEFAULT_POOL_LOCK:
         _DEFAULT_POOL = None
+
+
+def recommend_pool_size(qps: float, service_time_s: float, *,
+                        target_utilization: float = 0.7,
+                        max_replicas: int = 64) -> int:
+    """Replica count for an observed load, by Little's law.
+
+    A replica serving one request at a time sustains
+    ``1 / service_time_s`` QPS at full utilization; running fleets at
+    ``target_utilization`` (default 0.7) leaves headroom so queueing
+    delay stays bounded under arrival bursts.  So:
+
+        replicas = ceil(qps * service_time_s / target_utilization)
+
+    clamped to ``[1, max_replicas]``.  This is the QPS-derived sizing
+    hook behind ``EngineReplicas.suggest_replicas()`` — feed it the
+    measured arrival rate and mean execution time from ``ServeStats``.
+    Non-positive qps or service time mean "no observed load": returns 1.
+    """
+    if not 0.0 < target_utilization <= 1.0:
+        raise ValueError(
+            f"target_utilization must be in (0, 1], got {target_utilization}")
+    if max_replicas < 1:
+        raise ValueError(f"max_replicas must be >= 1, got {max_replicas}")
+    if qps <= 0 or service_time_s <= 0:
+        return 1
+    # round at 9 digits before ceil: 100*0.07/0.7 is 10.000000000000002
+    # in binary and must size as 10 replicas, not 11
+    need = math.ceil(round(qps * service_time_s / target_utilization, 9))
+    return max(1, min(int(max_replicas), int(need)))
 
 
 def default_substrate(*axes: AxisSpec,

@@ -87,11 +87,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     chips = mesh.size
 
     # ---- 1. production lowering: full depth, scanned --------------------
-    t0 = time.time()
+    # monotonic: an NTP step mid-compile must not corrupt compile_s
+    t0 = time.monotonic()
     bundle = build_step(cfg, mesh, shape, **step_kw)
     lowered = bundle.lower()
     compiled = lowered.compile()
-    rec["compile_s"] = round(time.time() - t0, 1)
+    rec["compile_s"] = round(time.monotonic() - t0, 1)
     ma = compiled.memory_analysis()
     rec["memory_per_device"] = {
         "arguments_bytes": int(ma.argument_size_in_bytes),

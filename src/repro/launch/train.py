@@ -57,14 +57,15 @@ def train(cfg: ArchConfig, steps: int, *, mesh=None, batch: int = 8,
 
     pipeline = TokenPipeline(cfg.vocab_size, batch, seq, seed=seed)
     losses: List[float] = []
-    t0 = time.time()
+    # monotonic: tok/s must survive wall-clock (NTP) steps mid-run
+    t0 = time.monotonic()
     for step in range(start_step, steps):
         data = pipeline.batch_at(step)
         params, opt, metrics = bundle.fn(params, opt, data)
         loss = float(metrics["loss"])
         losses.append(loss)
         if step % log_every == 0:
-            dt = time.time() - t0
+            dt = time.monotonic() - t0
             tok_s = (step - start_step + 1) * batch * seq / max(dt, 1e-9)
             print(f"[train] step {step:5d}  loss {loss:8.4f}  "
                   f"gnorm {float(metrics['grad_norm']):7.3f}  "

@@ -233,6 +233,14 @@ class MetricsRegistry:
                      if k[0] == name]
         return {k[1]: c.value for k, c in items}
 
+    def histograms_matching(self, name: str) -> Dict[LabelKey, Histogram]:
+        """All label-variants of one histogram name (per-class latency
+        tables: the values are the live Histogram objects, so callers
+        read quantiles without copying bucket arrays)."""
+        with self._lock:
+            return {k[1]: h for k, h in self._histograms.items()
+                    if k[0] == name}
+
     def reset(self) -> None:
         with self._lock:
             self._counters.clear()

@@ -9,15 +9,21 @@
 lazily (PEP 562) — importing the query engine must not import
 transformer code.
 """
-from .batching import LengthBucketScheduler
-from .query import (AdmissionError, EngineClosedError, QueryEngine,
-                    QueryResult, QuerySpec, ServeStats, join_query,
-                    sort_query)
+from .batching import ContinuousBatcher, LengthBucketScheduler
+from .query import (PRIORITY_HIGH, PRIORITY_LOW, PRIORITY_NORMAL,
+                    AdmissionError, DeadlineExceededError, EngineClosedError,
+                    EngineReplicas, QueryEngine, QueryResult, QuerySpec,
+                    ResultCache, ResultTimeout, ServeStats, ShedError,
+                    join_query, sort_query)
 
 __all__ = [
-    "LengthBucketScheduler", "generate",
-    "QueryEngine", "QuerySpec", "QueryResult", "ServeStats",
-    "AdmissionError", "EngineClosedError", "sort_query", "join_query",
+    "LengthBucketScheduler", "ContinuousBatcher", "generate",
+    "QueryEngine", "EngineReplicas", "QuerySpec", "QueryResult",
+    "ServeStats", "ResultCache",
+    "AdmissionError", "EngineClosedError", "ShedError",
+    "DeadlineExceededError", "ResultTimeout",
+    "PRIORITY_HIGH", "PRIORITY_NORMAL", "PRIORITY_LOW",
+    "sort_query", "join_query",
 ]
 
 

@@ -2,11 +2,28 @@
 
 ``QueryEngine`` turns the one-shot ``cluster.sort``/``cluster.join``
 entry points into a service.  Callers build :func:`sort_query` /
-:func:`join_query` specs and ``submit()`` them (or ``run()`` a whole
-trace); a dispatcher thread admits them through a **bounded queue**
-(backpressure: a full queue blocks, or raises :class:`AdmissionError`
-in non-blocking mode), forms **micro-batches** of compatible requests,
-and executes them over a shared :class:`~repro.cluster.SubstratePool`.
+:func:`join_query` specs — optionally with a **priority class** and a
+**deadline** — and ``submit()`` them (or ``run()`` a whole trace); a
+dispatcher thread admits them through a bounded **per-class priority
+queue**, forms micro-batches by **continuous batching** (compatible
+requests join in-flight buckets the moment they arrive — no fixed
+batch-window boundary), and executes them over a shared
+:class:`~repro.cluster.SubstratePool`.
+
+SLO-aware admission, in one paragraph: classes are served strictly
+best-first (``PRIORITY_HIGH`` before ``PRIORITY_NORMAL`` before
+``PRIORITY_LOW``).  When the admission queue is **full**, a submit of
+class c evicts the newest queued request of the *worst strictly-lower*
+class — that request is shed with a typed :class:`ShedError` — and
+only blocks (or raises :class:`AdmissionError`) when nothing worse is
+queued.  So overload sheds by class instead of blocking everyone, and
+a high-priority request can never be displaced by a lower one.
+Requests carrying ``deadline_s`` that expire before execution are shed
+with :class:`DeadlineExceededError` instead of being run late.  Every
+shed is surfaced: ``ServeStats.shed``/``expired``/``shed_by_class``,
+plus ``serve_shed_total{class,reason}`` counters and per-class
+``serve_request_latency_seconds{class}`` histograms in both the
+engine's registry and the process-global ``repro.obs`` registry.
 
 What the engine shares across requests — the reason it beats a loop of
 one-shot calls on sustained traffic:
@@ -17,23 +34,30 @@ one-shot calls on sustained traffic:
   one-shot path re-executes an eager vmap per call.  ``ServeStats``
   reports the compile count so recompiles are visible, not silent.
 * **Plans.**  All requests share the planner's blake2b
-  content-fingerprint LRU (now thread-safe), so a repeated
+  content-fingerprint LRU (thread-safe), so a repeated
   ``algorithm="auto"`` query skips its sketch pass.
-* **Results of identical queries.**  Micro-batching groups compatible
-  requests — same (kind, algorithm, parameter) bucket, sizes clustered
-  by the SMMS length-bucketing scheduler — and **coalesces**
-  duplicates: one execution serves every identical request in flight.
-  A bounded content-addressed **result LRU** extends the same idea
-  across time: the algorithms are pure and explicitly seeded, so an
-  equal fingerprint provably means an equal result.  Either way each
-  request receives its own :class:`QueryResult` (report copied — no
-  cross-request state).
+* **Results of identical queries.**  Continuous batching groups
+  compatible requests — same (kind, algorithm, parameter) bucket,
+  sizes clustered by the SMMS length-bucketing scheduler — and
+  **coalesces** duplicates: one execution serves every identical
+  request in flight.  A bounded content-addressed **result LRU**
+  (:class:`ResultCache`, shareable across engines) extends the same
+  idea across time: the algorithms are pure and explicitly seeded, so
+  an equal fingerprint provably means an equal result.  Either way
+  each request receives its own :class:`QueryResult` (report copied —
+  no cross-request state).
+
+Scaling past one engine: :class:`EngineReplicas` puts N engines behind
+one front door, sharing the SubstratePool and the ResultCache — the
+4-layer cache contract (DESIGN.md §9) makes the sharing exact, so
+replica-mode results are bitwise-identical to a single engine's.
 
 Per-request results carry the full ``AlphaKReport`` (the paper's
 (alpha, k) guarantee, surfaced per query), the plan when the planner
 chose the algorithm, and the capacity-retry count; :meth:`QueryEngine
-.stats` aggregates them into :class:`ServeStats` (QPS, p50/p99 latency,
-plan-cache hit rate, recompiles, capacity retries).
+.stats` aggregates them into :class:`ServeStats` (QPS, p50/p99 latency
+overall and per class, shed/expired counts, plan-cache hit rate,
+recompiles, capacity retries).
 
 Every query is executed by the same ``repro.cluster`` code path a
 direct call uses — results are bitwise-identical to sequential one-shot
@@ -53,20 +77,39 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.cluster.substrate import SubstratePool
+from repro.cluster.substrate import SubstratePool, recommend_pool_size
+from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import MetricsRegistry
 
-from .batching import LengthBucketScheduler
+from .batching import ContinuousBatcher, LengthBucketScheduler
 
 __all__ = [
-    "AdmissionError", "EngineClosedError", "QuerySpec", "QueryResult",
-    "ServeStats", "QueryEngine", "sort_query", "join_query", "run_spec",
+    "AdmissionError", "EngineClosedError", "ShedError",
+    "DeadlineExceededError", "ResultTimeout",
+    "QuerySpec", "QueryResult", "ServeStats", "QueryEngine",
+    "EngineReplicas", "ResultCache",
+    "sort_query", "join_query", "run_spec",
+    "PRIORITY_HIGH", "PRIORITY_NORMAL", "PRIORITY_LOW",
     "SERVE_COUNTERS", "reset_serve_counters",
 ]
 
+# Priority classes: smaller = more important.  Any non-negative int is
+# accepted (classes beyond LOW simply sort later); these three are the
+# named tiers the metrics label by name.
+PRIORITY_HIGH = 0
+PRIORITY_NORMAL = 1
+PRIORITY_LOW = 2
+PRIORITY_NAMES = {PRIORITY_HIGH: "high", PRIORITY_NORMAL: "normal",
+                  PRIORITY_LOW: "low"}
+
+
+def _class_name(priority: int) -> str:
+    return PRIORITY_NAMES.get(priority, str(priority))
+
+
 # Module-level serving counters (submitted/admitted/rejected/served/
-# failed/coalesced/executed/batches) — the serve twin of
+# failed/shed/expired/coalesced/executed/batches) — the serve twin of
 # ops.DISPATCH_COUNTS, reset by the autouse conftest fixture so no test
 # sees another test's traffic.
 SERVE_COUNTERS: collections.Counter = collections.Counter()
@@ -87,8 +130,31 @@ class AdmissionError(RuntimeError):
     """The admission queue is full (non-blocking submit) or timed out."""
 
 
+class ShedError(AdmissionError):
+    """Shed under overload: a higher class took this request's slot."""
+
+
+class DeadlineExceededError(RuntimeError):
+    """The request's deadline passed before it could execute."""
+
+
 class EngineClosedError(RuntimeError):
     """submit() after close()."""
+
+
+class ResultTimeout(TimeoutError):
+    """``ticket.result(timeout)`` expired; carries the ticket's status
+    ("queued" / "batched" / "executing" / ...) so a deadline-aware
+    caller can decide whether re-submitting is safe (still queued) or
+    would duplicate work (already executing)."""
+
+    def __init__(self, query_id: int, timeout: Optional[float],
+                 status: str):
+        self.query_id = query_id
+        self.status = status
+        super().__init__(
+            f"query {query_id} not served within {timeout}s "
+            f"(status: {status})")
 
 
 # ---------------------------------------------------------------------------
@@ -104,11 +170,19 @@ class QuerySpec:
     ``params`` everything that forwards to ``cluster.sort``/``cluster
     .join``.  Specs are content-fingerprinted (same blake2b scheme as
     the plan cache) for coalescing: equal fingerprint == equal query.
+
+    ``priority`` and ``deadline_s`` are *serving* attributes — they
+    shape admission and shedding but not the computation, so they are
+    deliberately excluded from the fingerprint and the compatibility
+    bucket: a high- and a low-priority copy of the same query coalesce
+    to one execution.
     """
     kind: str                         # "sort" | "join"
     arrays: Tuple[Any, ...]
     params: Tuple[Tuple[str, Any], ...]   # sorted, hashable
     tag: str = ""                     # caller label, not part of identity
+    priority: int = PRIORITY_NORMAL   # class: smaller = more important
+    deadline_s: Optional[float] = None  # relative to submit; None = no SLO
 
     @property
     def kwargs(self) -> Dict[str, Any]:
@@ -141,29 +215,41 @@ class QuerySpec:
         return (self.kind, self.params, shapes)
 
 
-def _spec(kind: str, arrays, params: Dict[str, Any], tag: str) -> QuerySpec:
+def _spec(kind: str, arrays, params: Dict[str, Any], tag: str,
+          priority: int, deadline_s: Optional[float]) -> QuerySpec:
     items = tuple(sorted(params.items()))
     try:
         hash(items)
     except TypeError as exc:
         raise TypeError(f"query parameters must be hashable, got {params!r}"
                         ) from exc
-    return QuerySpec(kind=kind, arrays=tuple(arrays), params=items, tag=tag)
+    if int(priority) < 0:
+        raise ValueError(f"priority must be >= 0, got {priority}")
+    if deadline_s is not None and float(deadline_s) < 0:
+        raise ValueError(f"deadline_s must be >= 0, got {deadline_s}")
+    return QuerySpec(kind=kind, arrays=tuple(arrays), params=items, tag=tag,
+                     priority=int(priority),
+                     deadline_s=None if deadline_s is None
+                     else float(deadline_s))
 
 
 def sort_query(x, *, algorithm: str = "auto", values=None, tag: str = "",
-               **params) -> QuerySpec:
+               priority: int = PRIORITY_NORMAL,
+               deadline_s: Optional[float] = None, **params) -> QuerySpec:
     """A ``cluster.sort`` request; params forward to the front door."""
     arrays = (x,) if values is None else (x, values)
     params = dict(params, algorithm=algorithm, has_values=values is not None)
-    return _spec("sort", arrays, params, tag)
+    return _spec("sort", arrays, params, tag, priority, deadline_s)
 
 
 def join_query(s_keys, s_rows, t_keys, t_rows, *, t_machines: int,
-               algorithm: str = "auto", tag: str = "", **params) -> QuerySpec:
+               algorithm: str = "auto", tag: str = "",
+               priority: int = PRIORITY_NORMAL,
+               deadline_s: Optional[float] = None, **params) -> QuerySpec:
     """A ``cluster.join`` request; params forward to the front door."""
     params = dict(params, algorithm=algorithm, t_machines=int(t_machines))
-    return _spec("join", (s_keys, s_rows, t_keys, t_rows), params, tag)
+    return _spec("join", (s_keys, s_rows, t_keys, t_rows), params, tag,
+                 priority, deadline_s)
 
 
 def run_spec(spec: QuerySpec, *, substrate=None,
@@ -247,16 +333,30 @@ class QueryResult:
 
 
 class _Ticket:
-    """Internal pending-request handle: submit() returns one."""
+    """Internal pending-request handle: submit() returns one.
+
+    Lifecycle (``status()``): "queued" (in the admission queue) ->
+    "batched" (on the continuous-batching board) -> "executing" ->
+    one of "done" / "failed" / "shed" / "expired".
+    """
 
     def __init__(self, query_id: int, spec: QuerySpec, submitted_at: float):
         self.query_id = query_id
         self.spec = spec
         self.submitted_at = submitted_at
+        self.priority = max(0, int(getattr(spec, "priority",
+                                           PRIORITY_NORMAL)))
+        dl = getattr(spec, "deadline_s", None)
+        self.deadline_at = None if dl is None else submitted_at + float(dl)
         self._done = threading.Event()
         self._result: Optional[QueryResult] = None
+        self._exc: Optional[BaseException] = None
+        self._status = "queued"
         self._claimed = False
         self._claim_lock = threading.Lock()
+
+    def expired(self, now: float) -> bool:
+        return self.deadline_at is not None and now > self.deadline_at
 
     def claim(self) -> bool:
         """Exactly-once finalization guard (first claimer delivers)."""
@@ -269,11 +369,208 @@ class _Ticket:
     def done(self) -> bool:
         return self._done.is_set()
 
+    def status(self) -> str:
+        """Where the request is in its lifecycle (racy by nature: a
+        'queued' answer may be 'executing' a microsecond later, but a
+        terminal answer — done/failed/shed/expired — is final)."""
+        return self._status
+
     def result(self, timeout: Optional[float] = None) -> QueryResult:
         if not self._done.wait(timeout):
-            raise TimeoutError(
-                f"query {self.query_id} not served within {timeout}s")
+            raise ResultTimeout(self.query_id, timeout, self._status)
+        if self._exc is not None:
+            raise self._exc
         return self._result
+
+
+# ---------------------------------------------------------------------------
+# Priority admission: the bounded, class-aware front door queue
+# ---------------------------------------------------------------------------
+
+class _AdmissionClosed(Exception):
+    """Internal: the admission queue was closed (engine close())."""
+
+
+class _PriorityAdmission:
+    """Bounded multi-class queue: FIFO within a class, strict priority
+    across classes, shed-by-class under overload.
+
+    One capacity bound spans all classes.  ``get()`` always serves the
+    best (lowest-numbered) nonempty class.  A ``put()`` into a full
+    queue evicts the **newest** queued ticket of the **worst strictly
+    lower** class and returns it to the caller (who sheds it with a
+    typed error); if nothing strictly worse is queued, the put blocks /
+    raises ``queue.Full`` — so a class can never displace itself or a
+    better class, which is the no-priority-inversion invariant the
+    property tests pin.
+
+    ``close()`` wakes every blocked producer and consumer: producers
+    see :class:`_AdmissionClosed` immediately (their tickets never
+    entered, so nothing hangs), consumers drain what remains and then
+    see :class:`_AdmissionClosed`.  Closing never blocks — this is the
+    structural fix for the close()/submit() deadlock: no engine lock is
+    ever held across a blocking queue operation.
+    """
+
+    def __init__(self, maxsize: int):
+        if maxsize < 1:
+            raise ValueError("maxsize must be >= 1")
+        self.maxsize = int(maxsize)
+        self._lock = threading.Lock()
+        self._nonempty = threading.Condition(self._lock)
+        self._notfull = threading.Condition(self._lock)
+        self._classes: Dict[int, collections.deque] = {}
+        self._size = 0
+        self._closed = False
+        self.peak = 0                 # high-water mark of queued tickets
+
+    # ---- state --------------------------------------------------------
+    def qsize(self) -> int:
+        with self._lock:
+            return self._size
+
+    def depths(self) -> Dict[int, int]:
+        with self._lock:
+            return {c: len(d) for c, d in self._classes.items() if d}
+
+    # ---- producer side ------------------------------------------------
+    def _append_locked(self, ticket: _Ticket) -> None:
+        self._classes.setdefault(ticket.priority,
+                                 collections.deque()).append(ticket)
+        self._size += 1
+        self.peak = max(self.peak, self._size)
+        self._nonempty.notify()
+
+    def _pop_worse_locked(self, priority: int) -> Optional[_Ticket]:
+        """Evict the newest ticket of the worst class > ``priority``.
+
+        Newest-of-worst minimizes wasted wait: the evicted request has
+        spent the least time queued, and older same-class requests keep
+        their FIFO position.
+        """
+        worst = None
+        for cls, dq in self._classes.items():
+            if dq and cls > priority and (worst is None or cls > worst):
+                worst = cls
+        if worst is None:
+            return None
+        ticket = self._classes[worst].pop()
+        self._size -= 1
+        return ticket
+
+    def put(self, ticket: _Ticket, block: bool = True,
+            timeout: Optional[float] = None) -> Optional[_Ticket]:
+        """Admit ``ticket``; returns the shed lower-class ticket if the
+        admission evicted one, else None.  Raises ``queue.Full`` when
+        full with nothing worse queued (after the block/timeout), and
+        :class:`_AdmissionClosed` once closed."""
+        with self._lock:
+            if self._closed:
+                raise _AdmissionClosed
+            deadline = (None if timeout is None
+                        else time.monotonic() + timeout)
+            while self._size >= self.maxsize:
+                shed = self._pop_worse_locked(ticket.priority)
+                if shed is not None:
+                    self._append_locked(ticket)
+                    return shed
+                if not block:
+                    raise queue.Full
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise queue.Full
+                if not self._notfull.wait(remaining):
+                    raise queue.Full
+                if self._closed:
+                    raise _AdmissionClosed
+            self._append_locked(ticket)
+            return None
+
+    # ---- consumer side ------------------------------------------------
+    def get(self, timeout: Optional[float] = None) -> Optional[_Ticket]:
+        """Best class first, FIFO within it.  None on timeout; raises
+        :class:`_AdmissionClosed` once closed AND drained (everything
+        admitted before close is still delivered)."""
+        with self._lock:
+            deadline = (None if timeout is None
+                        else time.monotonic() + timeout)
+            while self._size == 0:
+                if self._closed:
+                    raise _AdmissionClosed
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    return None
+                if not self._nonempty.wait(remaining):
+                    return None
+            for cls in sorted(self._classes):
+                dq = self._classes[cls]
+                if dq:
+                    ticket = dq.popleft()
+                    self._size -= 1
+                    self._notfull.notify()
+                    return ticket
+            raise AssertionError("size > 0 with all deques empty")
+
+    def drain(self) -> List[_Ticket]:
+        """Remove and return everything queued (close-path cleanup)."""
+        with self._lock:
+            out = [t for cls in sorted(self._classes)
+                   for t in self._classes[cls]]
+            self._classes.clear()
+            self._size = 0
+            self._notfull.notify_all()
+            return out
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            self._nonempty.notify_all()
+            self._notfull.notify_all()
+
+
+# ---------------------------------------------------------------------------
+# Shared result cache
+# ---------------------------------------------------------------------------
+
+class ResultCache:
+    """Bounded content-addressed result LRU, shareable across engines.
+
+    Pure + explicitly-seeded algorithms make an equal fingerprint
+    provably imply an equal result, so serving from the cache is exact;
+    mutated inputs hash elsewhere, so staleness is impossible by
+    construction.  ``EngineReplicas`` passes one instance to every
+    replica — that sharing is what keeps replica mode bitwise-identical
+    to a single engine.
+    """
+
+    def __init__(self, size: int = 64):
+        self.size = int(size)
+        self._lock = threading.Lock()
+        self._entries: "collections.OrderedDict[str, QueryResult]" = \
+            collections.OrderedDict()
+
+    def get(self, fp: str) -> Optional[QueryResult]:
+        if self.size <= 0:
+            return None
+        with self._lock:
+            hit = self._entries.get(fp)
+            if hit is not None:
+                self._entries.move_to_end(fp)
+            return hit
+
+    def put(self, fp: str, entry: QueryResult) -> None:
+        if self.size <= 0:
+            return
+        with self._lock:
+            self._entries[fp] = entry
+            while len(self._entries) > self.size:
+                self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
 
 
 # ---------------------------------------------------------------------------
@@ -287,6 +584,8 @@ class ServeStats:
     executed: int = 0                 # cluster.* calls actually run
     failed: int = 0
     rejected: int = 0                 # backpressure refusals
+    shed: int = 0                     # overload evictions (ShedError)
+    expired: int = 0                  # deadline sheds (DeadlineExceeded)
     coalesced: int = 0
     result_cache_hits: int = 0
     batches: int = 0
@@ -294,6 +593,12 @@ class ServeStats:
     qps: float = 0.0
     p50_latency_s: float = 0.0
     p99_latency_s: float = 0.0
+    peak_pending: int = 0             # admission-queue high-water mark
+    # Per-class SLO views: {"high": ...} keyed by class name.
+    shed_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
+    served_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
+    latency_by_class: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)         # class -> {p50, p99, p999}
     plan_cache_hits: int = 0
     plan_cache_misses: int = 0
     sketch_runs: int = 0
@@ -321,17 +626,19 @@ class ServeStats:
 # The engine
 # ---------------------------------------------------------------------------
 
-_SHUTDOWN = object()
-
 
 class QueryEngine:
     """Concurrent sort/join serving over the cluster front door.
 
     Parameters
     ----------
-    max_pending : admission-queue bound (backpressure beyond it).
+    max_pending : admission-queue bound (backpressure / shedding beyond
+        it — see the module docstring for the per-class semantics).
     max_batch   : micro-batch size cap.
-    batch_window_s : how long the dispatcher lingers to fill a batch.
+    batch_window_s : age-out for a cold batching bucket.  Continuous
+        batching dispatches full, hot, or engine-idle buckets
+        immediately; the window only bounds how long a cold bucket may
+        wait for batchmates while the engine is busy.
     workers     : micro-batch executor threads (1 = execute inline in
         the dispatcher; substrates serialize per-substrate regardless).
     pool        : a SubstratePool (or any ``(*axes) -> Substrate``
@@ -345,15 +652,12 @@ class QueryEngine:
         ``repro.obs.enable()`` was called), so tracing costs nothing
         until someone opts in.  ``engine.tracer.last()`` /
         ``QueryResult.trace`` expose the captured trees.
-    result_cache_size : content-addressed LRU of finished results.
-        Every algorithm behind the front door is pure and explicitly
-        seeded, so an identical fingerprint (same bytes, same
-        parameters) provably yields the identical result — serving it
-        from the LRU is exact, not approximate.  Mutated input data
-        hashes to a new fingerprint, so staleness is impossible by
-        construction (the plan cache's invalidation argument).  0
-        disables.  Cached hits are flagged (``QueryResult.cached``) and
-        counted in ``ServeStats.result_cache_hits``.
+    result_cache_size : content-addressed LRU of finished results
+        (see :class:`ResultCache`).  0 disables.  Cached hits are
+        flagged (``QueryResult.cached``) and counted in
+        ``ServeStats.result_cache_hits``.
+    result_cache : a :class:`ResultCache` instance to SHARE (replica
+        mode); overrides ``result_cache_size``.
     autostart   : start the dispatcher thread immediately.
     """
 
@@ -362,6 +666,7 @@ class QueryEngine:
                  pool: Optional[SubstratePool] = None,
                  kernel_backend: Optional[str] = None,
                  result_cache_size: int = 64,
+                 result_cache: Optional[ResultCache] = None,
                  tracer: Optional[obs_trace.Tracer] = None,
                  autostart: bool = True):
         if max_pending < 1 or max_batch < 1 or workers < 1:
@@ -370,8 +675,10 @@ class QueryEngine:
         self.batch_window_s = float(batch_window_s)
         self.kernel_backend = kernel_backend
         self.pool = pool if pool is not None else SubstratePool()
-        self._admit: "queue.Queue" = queue.Queue(maxsize=int(max_pending))
-        self._scheduler = LengthBucketScheduler(max_batch=self.max_batch)
+        self._admit = _PriorityAdmission(int(max_pending))
+        self._batcher = ContinuousBatcher(
+            max_batch=self.max_batch, window_s=self.batch_window_s,
+            scheduler=LengthBucketScheduler(max_batch=self.max_batch))
         self._exec = (ThreadPoolExecutor(max_workers=workers,
                                          thread_name_prefix="serve-worker")
                       if workers > 1 else None)
@@ -380,20 +687,20 @@ class QueryEngine:
         self._lock = threading.Lock()          # stats below
         self.tracer = tracer if tracer is not None \
             else obs_trace.get_tracer()
-        # Engine-local metrics registry: request counters + a streaming
-        # latency histogram, so a mid-run stats() is O(buckets) however
-        # long the engine has served (no per-query float list to scan).
+        # Engine-local metrics registry: request counters + streaming
+        # latency histograms (overall and per class), so a mid-run
+        # stats() is O(buckets) however long the engine has served.
         self.metrics = MetricsRegistry()
         self._latency_hist = self.metrics.histogram(
             "serve_request_latency_seconds")
+        self._exec_hist = self.metrics.histogram("serve_exec_seconds")
         self._first_submit: Optional[float] = None
         self._last_done: Optional[float] = None
         self._inflight: Dict[str, List[_Ticket]] = {}
         self._inflight_lock = threading.Lock()
-        self.result_cache_size = int(result_cache_size)
-        self._results: "collections.OrderedDict[str, QueryResult]" = \
-            collections.OrderedDict()
-        self._results_lock = threading.Lock()
+        self.results = result_cache if result_cache is not None \
+            else ResultCache(int(result_cache_size))
+        self.result_cache_size = self.results.size
         from repro.planner import planner_stats
         self._planner_base = planner_stats()
         # stats() reports deltas since construction for the pool too —
@@ -402,9 +709,10 @@ class QueryEngine:
                            if isinstance(self.pool, SubstratePool)
                            else collections.Counter())
         self._closed = False
-        # orders submit()'s put against close()'s _SHUTDOWN: every
-        # admitted ticket enters the FIFO strictly before the sentinel,
-        # so the dispatcher's tail drain provably sees it
+        # guards ONLY the closed flag's idempotency — never held across
+        # a blocking queue operation (the old code blocked in put()
+        # under this lock, deadlocking a concurrent close(); admission's
+        # own lock now orders submits against close atomically)
         self._close_lock = threading.Lock()
         self._started = False
         self._dispatcher = threading.Thread(target=self._dispatch_loop,
@@ -421,22 +729,27 @@ class QueryEngine:
         return self
 
     def close(self, wait: bool = True) -> None:
-        """Stop admitting; drain and serve everything already admitted."""
+        """Stop admitting; drain and serve everything already admitted.
+
+        Never blocks on the admission queue: closing wakes blocked
+        submitters (they raise :class:`EngineClosedError`) and the
+        dispatcher, which flushes its buckets and exits.
+        """
         with self._close_lock:
             if self._closed:
                 return
             self._closed = True
+            self._admit.close()
             if not self._started:    # never started: fail queued tickets
                 self._drain_failed("engine closed before start()")
                 return
-            self._admit.put(_SHUTDOWN)
         if wait:
             self._dispatcher.join()
             if self._exec is not None:
                 self._exec.shutdown(wait=True)
-            # a submit() racing close() can slip a ticket in after the
-            # dispatcher's tail drain; fail it loudly rather than let
-            # its .result() block forever
+            # belt-and-braces: nothing can be queued here (the closed
+            # admission refuses puts and the dispatcher drained), but a
+            # hung .result() is the worst failure mode serving has
             self._drain_failed("engine closed while the request was "
                                "in the admission queue")
 
@@ -455,23 +768,21 @@ class QueryEngine:
                                               event=name))
 
     def _drain_failed(self, msg: str) -> None:
-        while True:
-            try:
-                item = self._admit.get_nowait()
-            except queue.Empty:
-                return
-            if item is not _SHUTDOWN:
-                self._finalize(item, QueryResult(
-                    query_id=item.query_id, spec=item.spec, ok=False,
-                    error=msg))
+        for ticket in self._admit.drain():
+            self._finalize(ticket, QueryResult(
+                query_id=ticket.query_id, spec=ticket.spec, ok=False,
+                error=msg))
 
     # ---- submission ---------------------------------------------------
     def submit(self, spec: QuerySpec, *, block: bool = True,
                timeout: Optional[float] = None) -> _Ticket:
         """Admit one query.  Returns a ticket; ``ticket.result()`` waits.
 
-        Backpressure: when the admission queue is full, ``block=True``
-        waits (up to ``timeout``); ``block=False`` raises
+        Backpressure + shedding: when the admission queue is full, a
+        submit first sheds the newest queued request of a strictly
+        lower class (that ticket's ``result()`` raises
+        :class:`ShedError`); with nothing worse queued, ``block=True``
+        waits (up to ``timeout``) and ``block=False`` raises
         :class:`AdmissionError` immediately.
         """
         if self._closed:
@@ -480,18 +791,21 @@ class QueryEngine:
         now = time.monotonic()
         ticket = _Ticket(next(self._ids), spec, now)
         try:
-            # under _close_lock so a racing close() cannot slip its
-            # _SHUTDOWN sentinel in front of this ticket (the dispatcher
-            # drains everything ahead of the sentinel before exiting)
-            with self._close_lock:
-                if self._closed:
-                    raise EngineClosedError("submit() on a closed engine")
-                self._admit.put(ticket, block=block, timeout=timeout)
+            shed = self._admit.put(ticket, block=block, timeout=timeout)
         except queue.Full:
             _tick("rejected")
             self._count("rejected")
+            self._shed_metrics(ticket.priority, "rejected")
             raise AdmissionError(
                 f"admission queue full ({self._admit.maxsize} pending)")
+        except _AdmissionClosed:
+            raise EngineClosedError("submit() on a closed engine")
+        if shed is not None:
+            self._shed(shed, ShedError(
+                f"query {shed.query_id} (class "
+                f"{_class_name(shed.priority)}) shed under overload for a "
+                f"class-{_class_name(ticket.priority)} request"),
+                "shed", reason="overload")
         _tick("admitted")
         with self._lock:
             # only an ADMITTED request starts the QPS wall clock — a
@@ -507,65 +821,132 @@ class QueryEngine:
         return [t.result(timeout) for t in tickets]
 
     # ---- dispatch -----------------------------------------------------
+    # Board budget, in multiples of max_batch: how many tickets may sit
+    # on the batching board (open buckets + released-not-yet-executed
+    # groups) at once.  The board is a small staging area, NOT a queue:
+    # under overload the excess must stay in the bounded admission
+    # queue, where class eviction and deadline expiry work — tickets
+    # moved onto an unbounded board would be "queued unboundedly", the
+    # exact failure mode shedding exists to prevent.
+    _BOARD_BATCHES = 2
+
     def _dispatch_loop(self) -> None:
-        stop = False
-        while not stop:
-            try:
-                item = self._admit.get(timeout=0.05)
-            except queue.Empty:
-                continue
-            if item is _SHUTDOWN:
-                stop = True
-                batch: List[_Ticket] = []
+        batcher = self._batcher
+        futures: List[Tuple[Any, tuple, List[_Ticket]]] = []
+        # released-but-not-yet-executed groups, kept best-class-first.
+        # Executing ONE group per cycle (not the whole release) is the
+        # SLO lever: between any two batch executions the loop returns
+        # to the admission queue, so a just-admitted high-priority
+        # request waits at most one group execution before the
+        # dispatcher sees it — never a full cycle's worth of batches.
+        ready: List[Tuple[tuple, List[_Ticket]]] = []
+        closed = False
+        while True:
+            if futures:
+                live = []
+                for fut, key, group in futures:
+                    if fut.done():
+                        try:
+                            fut.result()
+                        except Exception as exc:
+                            self._fail_undone(group, exc)
+                        batcher.mark_done(key)
+                    else:
+                        live.append((fut, key, group))
+                futures = live
+            now = time.monotonic()
+            if ready:
+                wait = 0.0            # work pending: don't sleep
             else:
-                batch = [item]
-                deadline = time.monotonic() + self.batch_window_s
-                # linger to fill the micro-batcher's window
-                while len(batch) < 4 * self.max_batch:
-                    remaining = deadline - time.monotonic()
-                    try:
-                        nxt = (self._admit.get(timeout=remaining)
-                               if remaining > 0 else self._admit.get_nowait())
-                    except queue.Empty:
-                        break
-                    if nxt is _SHUTDOWN:
-                        stop = True
-                        break
-                    batch.append(nxt)
-            # the dispatcher must survive anything a batch can throw —
-            # a dead dispatcher hangs every pending and future query.
-            # (Reachable failures are already caught per ticket in
-            # _micro_batches/_run_batch/_execute; this is the backstop.)
-            futures = []
-            try:
-                for group in self._micro_batches(batch):
+                next_due = batcher.next_deadline(now)
+                wait = (0.05 if next_due is None
+                        else max(0.0, min(next_due - now, 0.05)))
+            board = batcher.pending() + sum(len(g) for _, g in ready)
+            budget = max(0, self._BOARD_BATCHES * self.max_batch - board)
+            drained = 0
+            if not closed and budget:
+                try:
+                    item = self._admit.get(timeout=wait)
+                    while item is not None:
+                        if self._enqueue(batcher, item):
+                            drained += 1   # shed/failed tickets never
+                        if drained >= budget:   # reached the board
+                            break
+                        item = self._admit.get(timeout=0)
+                except _AdmissionClosed:
+                    closed = True
+            elif not ready and (futures or wait > 0):
+                # board full (or closed) with nothing executable yet:
+                # wait for the next bucket due-time / a worker to finish
+                time.sleep(min(wait, 0.002) if wait > 0 else 0.0005)
+            now = time.monotonic()
+            idle = (not futures and not ready and drained == 0
+                    and self._admit.qsize() == 0)
+            ready.extend(batcher.release(now, idle=idle, flush=closed))
+            # best class first: the overloaded engine spends its next
+            # execution on the traffic with the tightest SLO
+            ready.sort(key=lambda kg: min(t.priority for t in kg[1]))
+            if ready:
+                key, group = ready.pop(0)
+                group = self._shed_expired(group)
+                if group:
+                    batcher.mark_dispatched(key, now)
                     if self._exec is not None:
                         futures.append(
                             (self._exec.submit(self._run_batch, group),
-                             group))
+                             key, group))
                     else:
                         try:
                             self._run_batch(group)
                         except Exception as exc:
+                            # the dispatcher must survive anything a
+                            # batch can throw — a dead dispatcher hangs
+                            # every pending and future query (reachable
+                            # failures are caught per ticket in
+                            # _run_batch/_execute; this is the backstop)
                             self._fail_undone(group, exc)
-            except Exception as exc:
-                self._fail_undone(batch, exc)
-            for f, group in futures:
-                try:
-                    f.result()
-                except Exception as exc:
-                    self._fail_undone(group, exc)
-        # post-shutdown: serve whatever was admitted before close()
-        tail = []
-        while True:
-            try:
-                item = self._admit.get_nowait()
-            except queue.Empty:
-                break
-            if item is not _SHUTDOWN:
-                tail.append(item)
-        for group in self._micro_batches(tail):
-            self._run_batch(group)
+                        batcher.mark_done(key)
+            if (closed and not futures and not ready
+                    and batcher.pending() == 0):
+                return
+
+    def _enqueue(self, batcher: ContinuousBatcher,
+                 ticket: _Ticket) -> bool:
+        """Move an admitted ticket onto the batching board (or shed it).
+        Returns True only when the ticket actually landed on the board
+        (sheds don't consume board budget)."""
+        now = time.monotonic()
+        if ticket.expired(now):
+            self._shed(ticket, DeadlineExceededError(
+                f"query {ticket.query_id} deadline "
+                f"({ticket.spec.deadline_s}s) passed before dispatch"),
+                "expired", reason="deadline")
+            return False
+        try:
+            key = ticket.spec.bucket_key()
+            size = ticket.spec.size   # _run_batch needs both; a spec
+        except Exception as exc:      # whose metadata can't be read must
+            self._finalize(ticket, QueryResult(   # fail ITS ticket only
+                query_id=ticket.query_id, spec=ticket.spec, ok=False,
+                error=f"malformed query spec: {exc!r}"))
+            return False
+        ticket._status = "batched"
+        batcher.add(key, ticket, size, now, ticket.deadline_at)
+        return True
+
+    def _shed_expired(self, group: List[_Ticket]) -> List[_Ticket]:
+        """Deadline re-check at dispatch: queue+bucket time counts."""
+        now = time.monotonic()
+        keep = []
+        for ticket in group:
+            if ticket.expired(now):
+                self._shed(ticket, DeadlineExceededError(
+                    f"query {ticket.query_id} deadline "
+                    f"({ticket.spec.deadline_s}s) passed before execution"),
+                    "expired", reason="deadline")
+            else:
+                keep.append(ticket)
+        return keep
 
     def _fail_undone(self, items: List[_Ticket], exc: Exception) -> None:
         """Backstop for 'impossible' dispatch errors: fail whatever the
@@ -576,34 +957,6 @@ class QueryEngine:
                     query_id=it.query_id, spec=it.spec, ok=False,
                     error=f"dispatch failure: {exc!r}"))
 
-    def _micro_batches(self, items: List[_Ticket]) -> List[List[_Ticket]]:
-        """Group compatible requests; SMMS-bucket mixed sizes within a
-        compatibility group so a micro-batch holds similar-length work.
-
-        A spec whose metadata cannot even be read (malformed operands)
-        fails ITS ticket here — it must never kill the dispatcher, which
-        would hang every other pending query.
-        """
-        groups: Dict[tuple, List[_Ticket]] = collections.OrderedDict()
-        for it in items:
-            try:
-                key = it.spec.bucket_key()
-                _ = it.spec.size       # plan() below will need this too
-            except Exception as exc:
-                self._finalize(it, QueryResult(
-                    query_id=it.query_id, spec=it.spec, ok=False,
-                    error=f"malformed query spec: {exc!r}"))
-                continue
-            groups.setdefault(key, []).append(it)
-        out: List[List[_Ticket]] = []
-        for members in groups.values():
-            if len(members) <= 1:
-                out.append(members)
-                continue
-            plan = self._scheduler.plan([m.spec.size for m in members])
-            out.extend([[members[i] for i in idxs] for idxs in plan])
-        return out
-
     # ---- execution ----------------------------------------------------
     def _run_batch(self, items: List[_Ticket]) -> None:
         if not items:
@@ -613,6 +966,7 @@ class QueryEngine:
         self._count("batches")
         leaders: List[Tuple[_Ticket, str]] = []
         for it in items:
+            it._status = "executing"
             try:
                 fp = it.spec.fingerprint()
             except Exception as exc:   # malformed operand bytes: fail the
@@ -628,7 +982,7 @@ class QueryEngine:
                 else:
                     waiting.append(it)
         for leader, fp in leaders:
-            cached = self._cache_get(fp)
+            cached = self.results.get(fp)
             if cached is not None:
                 result = self._from_cache(cached, leader, batch_id)
             else:
@@ -641,27 +995,14 @@ class QueryEngine:
                                else self._replica(result, w))
 
     # ---- result LRU (content-addressed; pure algorithms => exact) -----
-    def _cache_get(self, fp: str) -> Optional[QueryResult]:
-        if self.result_cache_size <= 0:
-            return None
-        with self._results_lock:
-            hit = self._results.get(fp)
-            if hit is not None:
-                self._results.move_to_end(fp)
-            return hit
-
     def _cache_put(self, fp: str, result: QueryResult) -> None:
-        if self.result_cache_size <= 0 or not result.ok:
+        if not result.ok:
             return
         # store a pristine report copy: the requester owns the delivered
         # report object and may decorate it — that must not leak into
         # later cache hits (each hit copies from this pristine one)
-        entry = dataclasses.replace(result,
-                                    report=_copy_report(result.report))
-        with self._results_lock:
-            self._results[fp] = entry
-            while len(self._results) > self.result_cache_size:
-                self._results.popitem(last=False)
+        self.results.put(fp, dataclasses.replace(
+            result, report=_copy_report(result.report)))
 
     def _from_cache(self, cached: QueryResult, it: _Ticket,
                     batch_id: int) -> QueryResult:
@@ -706,6 +1047,33 @@ class QueryEngine:
             result, query_id=w.query_id, spec=w.spec, coalesced=True,
             report=_copy_report(result.report))
 
+    # ---- delivery -----------------------------------------------------
+    def _shed_metrics(self, priority: int, reason: str) -> None:
+        """Tick shed counters in the engine AND global registries."""
+        labels = {"class": _class_name(priority), "reason": reason}
+        self.metrics.counter("serve_shed_total", **labels).inc()
+        obs_metrics.REGISTRY.counter("serve_shed_total", **labels).inc()
+
+    def _shed(self, ticket: _Ticket, exc: Exception, status: str,
+              reason: str) -> None:
+        """Fail a ticket with a typed shed error: its ``result()``
+        raises ``exc`` (never a hung ``_done`` event)."""
+        if not ticket.claim():
+            return
+        now = time.monotonic()
+        result = QueryResult(query_id=ticket.query_id, spec=ticket.spec,
+                             ok=False, error=repr(exc))
+        result.latency_s = now - ticket.submitted_at
+        with self._lock:
+            self._last_done = now
+        _tick(status)
+        self._count(status)
+        self._shed_metrics(ticket.priority, reason)
+        ticket._status = status
+        ticket._exc = exc
+        ticket._result = result
+        ticket._done.set()
+
     def _finalize(self, it: _Ticket, result: QueryResult) -> None:
         if not it.claim():        # already delivered (e.g. the backstop
             return                # raced a still-running worker)
@@ -713,23 +1081,40 @@ class QueryEngine:
         result.latency_s = done - it.submitted_at
         with self._lock:
             self._last_done = done
+        cname = _class_name(it.priority)
         if result.ok:
             self._count("served")
+            self.metrics.counter("serve_requests_total",
+                                 **{"class": cname,
+                                    "outcome": "served"}).inc()
             if not result.coalesced and not result.cached:
                 # a real execution (retries only counted once per run)
                 self._count("executed")
+                self._exec_hist.observe(result.exec_s)
                 if result.capacity_retries:
                     self._count("capacity_retries",
                                 result.capacity_retries)
             self._latency_hist.observe(result.latency_s)
+            self.metrics.histogram("serve_request_latency_seconds",
+                                   **{"class": cname}
+                                   ).observe(result.latency_s)
             _tick("served")
+            it._status = "done"
         else:
             self._count("failed")
+            self.metrics.counter("serve_requests_total",
+                                 **{"class": cname,
+                                    "outcome": "failed"}).inc()
             _tick("failed")
+            it._status = "failed"
         it._result = result
         it._done.set()
 
     # ---- metrics ------------------------------------------------------
+    def pending(self) -> int:
+        """Requests currently queued for admission (routing signal)."""
+        return self._admit.qsize()
+
     def stats(self) -> ServeStats:
         from repro.planner import planner_stats
         now = planner_stats()
@@ -748,6 +1133,29 @@ class QueryEngine:
         executed = self._count_value("executed")
         hits = delta.get("cache_hits", 0)
         misses = delta.get("cache_misses", 0)
+        shed_by_class: Dict[str, int] = {}
+        shed = expired = 0
+        for labels, v in self.metrics.counters_matching(
+                "serve_shed_total").items():
+            lab = dict(labels)
+            shed_by_class[lab.get("class", "?")] = \
+                shed_by_class.get(lab.get("class", "?"), 0) + int(v)
+            if lab.get("reason") == "deadline":
+                expired += int(v)
+            elif lab.get("reason") == "overload":
+                shed += int(v)
+        served_by_class = {
+            dict(labels).get("class", "?"): int(v)
+            for labels, v in self.metrics.counters_matching(
+                "serve_requests_total").items()
+            if dict(labels).get("outcome") == "served"}
+        latency_by_class = {
+            dict(labels).get("class", "?"): {
+                "p50": hist.quantile(0.50), "p99": hist.quantile(0.99),
+                "p999": hist.quantile(0.999)}
+            for labels, hist in self.metrics.histograms_matching(
+                "serve_request_latency_seconds").items()
+            if labels}   # the unlabeled histogram is the overall one
         # percentiles straight from the streaming histogram: O(buckets)
         # however many requests this engine has served
         return ServeStats(
@@ -755,6 +1163,8 @@ class QueryEngine:
             executed=executed,
             failed=self._count_value("failed"),
             rejected=self._count_value("rejected"),
+            shed=shed,
+            expired=expired,
             coalesced=self._count_value("coalesced"),
             result_cache_hits=self._count_value("result_cache_hits"),
             batches=self._count_value("batches"),
@@ -762,6 +1172,10 @@ class QueryEngine:
             qps=served / wall if wall > 0 else 0.0,
             p50_latency_s=self._latency_hist.quantile(0.50),
             p99_latency_s=self._latency_hist.quantile(0.99),
+            peak_pending=self._admit.peak,
+            shed_by_class=shed_by_class,
+            served_by_class=served_by_class,
+            latency_by_class=latency_by_class,
             plan_cache_hits=hits,
             plan_cache_misses=misses,
             sketch_runs=delta.get("sketch_runs", 0),
@@ -776,3 +1190,126 @@ class QueryEngine:
             programs_per_query=(pool_stats.get("runs", 0) / executed
                                 if executed else 0.0),
         )
+
+
+# ---------------------------------------------------------------------------
+# Engine replicas: one front door, N engines, shared caches
+# ---------------------------------------------------------------------------
+
+class EngineReplicas:
+    """N :class:`QueryEngine` replicas behind one front door.
+
+    All replicas share ONE :class:`~repro.cluster.SubstratePool` (and
+    with it every compiled program) and ONE :class:`ResultCache`.  The
+    4-layer cache contract (DESIGN.md §9) is what makes that exact
+    rather than approximate: (1) the planner's plan cache is
+    process-global and thread-safe, (2) substrates serialize each
+    ``run()`` under a per-substrate lock and hand back bound-snapshot
+    tapes, so interleaved replicas can never corrupt each other's
+    reports, (4) results are content-addressed over pure seeded
+    algorithms, so a cross-replica hit is provably the same answer.
+    Layer (3), in-flight coalescing, stays per-replica — identical
+    queries racing on two replicas may execute twice, which costs work
+    but never changes an answer.  ``tests/test_serve_slo.py`` pins
+    replica-vs-single-engine results bitwise.
+
+    Routing: least-pending replica, round-robin among ties; a
+    non-blocking submit that one replica refuses is offered to the
+    others before :class:`AdmissionError` propagates.
+
+    ``suggest_replicas()`` is the QPS-derived autoscaling hook: it
+    feeds the measured arrival rate and execution time into
+    :func:`repro.cluster.substrate.recommend_pool_size`.
+    """
+
+    def __init__(self, replicas: int = 2, *,
+                 pool: Optional[SubstratePool] = None,
+                 result_cache_size: int = 64,
+                 **engine_kw):
+        if replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        engine_kw.pop("result_cache", None)
+        self.pool = pool if pool is not None else SubstratePool()
+        self.results = ResultCache(int(result_cache_size))
+        self.engines = [QueryEngine(pool=self.pool,
+                                    result_cache=self.results,
+                                    **engine_kw)
+                        for _ in range(replicas)]
+        self._rr = itertools.count()
+
+    # ---- lifecycle ----------------------------------------------------
+    def __enter__(self) -> "EngineReplicas":
+        for e in self.engines:
+            e.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self, wait: bool = True) -> None:
+        for e in self.engines:
+            e.close(wait=wait)
+
+    # ---- traffic ------------------------------------------------------
+    def submit(self, spec: QuerySpec, *, block: bool = True,
+               timeout: Optional[float] = None) -> _Ticket:
+        n = len(self.engines)
+        start = next(self._rr) % n
+        order = sorted(range(n),
+                       key=lambda i: (self.engines[i].pending(),
+                                      (i - start) % n))
+        last: Optional[Exception] = None
+        for i in order:
+            try:
+                return self.engines[i].submit(spec, block=block,
+                                              timeout=timeout)
+            except AdmissionError as exc:
+                last = exc            # full here; try a sibling first
+        raise last if last is not None else AdmissionError("no replicas")
+
+    def run(self, specs: Sequence[QuerySpec],
+            timeout: Optional[float] = None) -> List[QueryResult]:
+        tickets = [self.submit(s) for s in specs]
+        return [t.result(timeout) for t in tickets]
+
+    # ---- metrics ------------------------------------------------------
+    def replica_stats(self) -> List[ServeStats]:
+        return [e.stats() for e in self.engines]
+
+    def stats(self) -> ServeStats:
+        """Fleet view: counts summed, percentiles worst-of-replicas
+        (a fleet meets an SLO only if every replica does)."""
+        per = self.replica_stats()
+        agg = ServeStats()
+        for s in per:
+            for f in ("served", "executed", "failed", "rejected", "shed",
+                      "expired", "coalesced", "result_cache_hits",
+                      "batches", "plan_cache_hits", "plan_cache_misses",
+                      "sketch_runs", "capacity_retries",
+                      "program_cache_hits"):
+                setattr(agg, f, getattr(agg, f) + getattr(s, f))
+            for cls, v in s.shed_by_class.items():
+                agg.shed_by_class[cls] = agg.shed_by_class.get(cls, 0) + v
+            for cls, v in s.served_by_class.items():
+                agg.served_by_class[cls] = \
+                    agg.served_by_class.get(cls, 0) + v
+            agg.wall_s = max(agg.wall_s, s.wall_s)
+            agg.peak_pending = max(agg.peak_pending, s.peak_pending)
+            agg.p50_latency_s = max(agg.p50_latency_s, s.p50_latency_s)
+            agg.p99_latency_s = max(agg.p99_latency_s, s.p99_latency_s)
+        # the pool is shared: count its compiles once, not per replica
+        agg.compiles = per[0].compiles if per else 0
+        agg.qps = agg.served / agg.wall_s if agg.wall_s > 0 else 0.0
+        hm = agg.plan_cache_hits + agg.plan_cache_misses
+        agg.plan_cache_hit_rate = agg.plan_cache_hits / hm if hm else 0.0
+        return agg
+
+    def suggest_replicas(self, *, target_utilization: float = 0.7,
+                         max_replicas: int = 64) -> int:
+        """QPS-derived sizing from observed traffic (Little's law)."""
+        agg = self.stats()
+        service = max(e.metrics.histogram("serve_exec_seconds").mean
+                      for e in self.engines)
+        return recommend_pool_size(agg.qps, service,
+                                   target_utilization=target_utilization,
+                                   max_replicas=max_replicas)

@@ -1,0 +1,431 @@
+"""SLO-aware serving: priority admission, deadlines, replicas, batching.
+
+The production-tier contracts under test:
+
+* **No close()/submit() deadlock** — the headline regression: a submit
+  blocked on a full admission queue must not hold any lock close()
+  needs; close() wakes it and it raises ``EngineClosedError``.
+* **Shed-by-class, never up-class**: a full queue sheds the newest
+  strictly-lower-class request to admit a better one; a class can
+  never displace itself or a better class (property-tested on the
+  admission queue directly).
+* **Typed shed errors, no hung tickets**: every shed/expired ticket's
+  ``result()`` raises ``ShedError``/``DeadlineExceededError``
+  immediately — ``_done`` is always set.
+* **Continuous batching**: a lone request on an idle engine dispatches
+  immediately even under a huge ``batch_window_s``; the
+  ``ContinuousBatcher`` release policy (full/hot/idle/aged/deadline)
+  is pinned with explicit clocks.
+* **Replica mode is exact**: N engines sharing one SubstratePool and
+  one ResultCache return results bitwise identical to a single engine.
+"""
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _prop import given, settings, st
+from repro.cluster import SubstratePool, recommend_pool_size
+from repro.data import uniform_keys
+from repro.obs import metrics as obs_metrics
+from repro.serve import (PRIORITY_HIGH, PRIORITY_LOW, PRIORITY_NORMAL,
+                         AdmissionError, ContinuousBatcher,
+                         DeadlineExceededError, EngineClosedError,
+                         EngineReplicas, QueryEngine, ResultTimeout,
+                         ShedError, join_query, sort_query)
+from repro.serve.query import _AdmissionClosed, _PriorityAdmission, _Ticket
+from repro.serve.query import run_spec
+
+
+def small_sort(t=2, m=64, seed=7, **kw):
+    x = jnp.asarray(uniform_keys(t * m, seed=seed).reshape(t, m))
+    return sort_query(x, algorithm="smms", **kw)
+
+
+def ticket(priority, qid=0, deadline_s=None, submitted_at=0.0):
+    spec = small_sort(seed=qid + 1, priority=priority,
+                      deadline_s=deadline_s, tag=str(qid))
+    return _Ticket(qid, spec, submitted_at)
+
+
+# ---------------------------------------------------------------------------
+# The headline bugfix: close() vs a submit() blocked on a full queue
+# ---------------------------------------------------------------------------
+
+def test_close_does_not_deadlock_with_blocked_submit():
+    """Pre-fix, submit(block=True) held _close_lock across a blocking
+    queue put; close() then deadlocked forever on that lock.  Post-fix
+    the blocked submitter is woken by close() and raises
+    EngineClosedError, and close() returns promptly."""
+    eng = QueryEngine(max_pending=2, autostart=False)
+    # fill the admission queue (dispatcher never started, nothing drains)
+    for i in range(2):
+        eng.submit(small_sort(seed=i + 1, tag=f"fill{i}"), block=False)
+
+    blocked_exc = []
+    entered = threading.Event()
+
+    def blocked_submit():
+        entered.set()
+        try:
+            # same class as everything queued -> nothing to shed -> blocks
+            eng.submit(small_sort(seed=99, tag="blocked"), block=True)
+        except Exception as exc:
+            blocked_exc.append(exc)
+
+    submitter = threading.Thread(target=blocked_submit, daemon=True)
+    submitter.start()
+    assert entered.wait(2.0)
+    time.sleep(0.05)          # let the submitter reach the blocking put
+
+    closer = threading.Thread(target=eng.close, daemon=True)
+    closer.start()
+    closer.join(timeout=5.0)
+    assert not closer.is_alive(), "close() deadlocked against submit()"
+    submitter.join(timeout=5.0)
+    assert not submitter.is_alive(), "blocked submit() never woke up"
+    assert len(blocked_exc) == 1
+    assert isinstance(blocked_exc[0], EngineClosedError)
+
+
+def test_close_fails_queued_tickets_no_hang():
+    eng = QueryEngine(max_pending=4, autostart=False)
+    tickets = [eng.submit(small_sort(seed=i + 1, tag=str(i)), block=False)
+               for i in range(3)]
+    eng.close()
+    for t in tickets:
+        res = t.result(timeout=1.0)   # must not hang
+        assert not res.ok and "closed" in res.error
+
+
+# ---------------------------------------------------------------------------
+# Priority admission: shed-by-class semantics
+# ---------------------------------------------------------------------------
+
+def test_high_priority_evicts_newest_low_under_overload():
+    eng = QueryEngine(max_pending=3, autostart=False)
+    lows = [eng.submit(small_sort(seed=i + 1, priority=PRIORITY_LOW,
+                                  tag=f"low{i}"), block=False)
+            for i in range(3)]
+    high = eng.submit(small_sort(seed=50, priority=PRIORITY_HIGH,
+                                 tag="high"), block=False)
+    # the NEWEST low was shed, with a typed error and a terminal status
+    shed = lows[-1]
+    with pytest.raises(ShedError):
+        shed.result(timeout=1.0)
+    assert shed.status() == "shed"
+    for kept in lows[:-1]:
+        assert kept.status() == "queued"
+    assert high.status() == "queued"
+    stats = eng.stats()
+    assert stats.shed == 1
+    assert stats.shed_by_class.get("low") == 1
+    # surfaced in the process-global registry too
+    assert obs_metrics.REGISTRY.counter_value(
+        "serve_shed_total", **{"class": "low", "reason": "overload"}) == 1
+    eng.close()
+
+
+def test_same_class_cannot_displace_itself():
+    eng = QueryEngine(max_pending=2, autostart=False)
+    for i in range(2):
+        eng.submit(small_sort(seed=i + 1, priority=PRIORITY_LOW,
+                              tag=str(i)), block=False)
+    with pytest.raises(AdmissionError):
+        eng.submit(small_sort(seed=9, priority=PRIORITY_LOW, tag="x"),
+                   block=False)
+    # ... and a LOWER class certainly cannot displace a better one
+    with pytest.raises(AdmissionError):
+        eng.submit(small_sort(seed=10, priority=PRIORITY_LOW + 5,
+                              tag="worse"), block=False)
+    assert eng.stats().rejected == 2
+    eng.close()
+
+
+def test_get_serves_best_class_first_fifo_within():
+    adm = _PriorityAdmission(maxsize=8)
+    order = [(PRIORITY_LOW, 0), (PRIORITY_HIGH, 1), (PRIORITY_NORMAL, 2),
+             (PRIORITY_HIGH, 3), (PRIORITY_LOW, 4)]
+    for prio, qid in order:
+        adm.put(ticket(prio, qid))
+    served = [adm.get(timeout=0).query_id for _ in range(len(order))]
+    assert served == [1, 3, 2, 0, 4]
+
+
+@settings(max_examples=20)
+@given(st.integers(0, 2 ** 30), st.integers(2, 6))
+def test_property_no_priority_inversion_in_shedding(seed, maxsize):
+    """Whatever the arrival order, a shed victim's class is strictly
+    worse than the admitting class — a high-priority ticket is never
+    shed to admit a lower class, and every rejection happens only when
+    nothing worse is queued."""
+    rng = np.random.default_rng(seed)
+    adm = _PriorityAdmission(maxsize=int(maxsize))
+    queued = {}
+    for qid in range(40):
+        prio = int(rng.integers(0, 4))
+        tk = ticket(prio, qid)
+        if rng.random() < 0.25 and queued:
+            got = adm.get(timeout=0)
+            assert got is not None
+            # strict priority: nothing better-class is still queued
+            assert got.priority <= min(t.priority for t in queued.values())
+            del queued[got.query_id]
+        try:
+            victim = adm.put(tk, block=False)
+        except Exception:   # queue.Full: only with nothing worse queued
+            assert all(t.priority <= prio for t in queued.values())
+            continue
+        queued[qid] = tk
+        if victim is not None:
+            assert victim.priority > prio, \
+                f"class {victim.priority} shed for class {prio}"
+            del queued[victim.query_id]
+        assert adm.qsize() <= maxsize
+    assert adm.qsize() == len(queued)
+
+
+def test_admission_close_wakes_blocked_producer():
+    adm = _PriorityAdmission(maxsize=1)
+    adm.put(ticket(PRIORITY_NORMAL, 0))
+    woke = []
+
+    def producer():
+        try:
+            adm.put(ticket(PRIORITY_NORMAL, 1), block=True)
+        except _AdmissionClosed:
+            woke.append(True)
+
+    th = threading.Thread(target=producer, daemon=True)
+    th.start()
+    time.sleep(0.05)
+    adm.close()
+    th.join(timeout=2.0)
+    assert woke == [True]
+    # consumer still drains what was admitted, then sees closed
+    assert adm.get(timeout=0).query_id == 0
+    with pytest.raises(_AdmissionClosed):
+        adm.get(timeout=0)
+
+
+# ---------------------------------------------------------------------------
+# Deadlines
+# ---------------------------------------------------------------------------
+
+def test_expired_deadline_sheds_with_typed_error():
+    with QueryEngine(max_pending=8, max_batch=2) as eng:
+        tk = eng.submit(small_sort(seed=3, deadline_s=0.0, tag="doomed"))
+        with pytest.raises(DeadlineExceededError):
+            tk.result(timeout=5.0)
+        assert tk.status() == "expired"
+        stats = eng.stats()
+        assert stats.expired == 1
+        assert obs_metrics.REGISTRY.counter_value(
+            "serve_shed_total",
+            **{"class": "normal", "reason": "deadline"}) == 1
+        # a generous deadline on the same engine still serves fine
+        ok = eng.submit(small_sort(seed=4, deadline_s=120.0))
+        assert ok.result(timeout=60.0).ok
+
+
+def test_ticket_status_and_result_timeout_carries_it():
+    eng = QueryEngine(max_pending=4, autostart=False)
+    tk = eng.submit(small_sort(seed=5), block=False)
+    assert tk.status() == "queued"
+    with pytest.raises(ResultTimeout) as info:
+        tk.result(timeout=0.01)
+    assert info.value.status == "queued"
+    assert "queued" in str(info.value)
+    eng.close()
+    assert tk.status() == "failed"   # drained on close, terminal state
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+def test_idle_engine_serves_immediately_despite_huge_window():
+    """The continuous-batching win: no fixed batch-window boundary.  A
+    lone request on an idle engine must not linger for batch_window_s
+    (5s here); it dispatches on the idle-release rule."""
+    with QueryEngine(max_pending=8, batch_window_s=5.0) as eng:
+        t0 = time.monotonic()
+        res = eng.submit(small_sort(seed=6)).result(timeout=60.0)
+        elapsed = time.monotonic() - t0
+        assert res.ok
+        assert elapsed < 4.0, \
+            f"idle request waited for the window ({elapsed:.2f}s)"
+
+
+def test_batcher_release_rules():
+    cb = ContinuousBatcher(max_batch=2, window_s=1.0)
+    # full bucket releases immediately
+    cb.add("a", "a1", 10, now=0.0)
+    cb.add("a", "a2", 12, now=0.1)
+    out = cb.release(now=0.1)
+    assert [(k, sorted(items)) for k, items in out] == [("a", ["a1", "a2"])]
+    # cold singleton: not due before the window, due after age-out
+    cb.add("b", "b1", 10, now=1.0)
+    assert cb.release(now=1.5) == []
+    assert cb.release(now=2.0) == [("b", ["b1"])]
+    # idle overrides the window
+    cb.add("c", "c1", 10, now=3.0)
+    assert cb.release(now=3.0, idle=True) == [("c", ["c1"])]
+    # hot bucket: an in-flight execution for the key drains arrivals now
+    cb.mark_dispatched("d", now=4.0)
+    cb.add("d", "d1", 10, now=4.0)
+    assert cb.release(now=4.0) == [("d", ["d1"])]
+    cb.mark_done("d")
+    cb.mark_done("d")
+    # recently-dispatched (within window) still counts as hot...
+    cb.add("d", "d2", 10, now=4.5)
+    assert cb.release(now=4.5) == [("d", ["d2"])]
+    # ...but past the window the key is cold again
+    cb.add("d", "d3", 10, now=6.0)
+    assert cb.release(now=6.0) == []
+    # a near deadline releases early rather than admit-then-expire
+    cb.add("e", "e1", 10, now=6.0, deadline_at=6.4)
+    assert ("e", ["e1"]) in cb.release(now=6.0)
+    # flush releases everything regardless
+    assert cb.release(now=6.0, flush=True) == [("d", ["d3"])]
+    assert cb.pending() == 0
+
+
+def test_batcher_next_deadline():
+    cb = ContinuousBatcher(max_batch=4, window_s=1.0)
+    assert cb.next_deadline(now=0.0) is None
+    cb.add("a", "a1", 10, now=0.0)
+    assert cb.next_deadline(now=0.0) == pytest.approx(1.0)
+    cb.add("b", "b1", 10, now=0.2, deadline_at=0.5)
+    assert cb.next_deadline(now=0.2) == pytest.approx(0.5)
+    cb.mark_dispatched("a", now=0.3)   # hot key -> due now
+    assert cb.next_deadline(now=0.3) == pytest.approx(0.3)
+
+
+def test_batcher_splits_oversized_release_by_length():
+    cb = ContinuousBatcher(max_batch=2, window_s=0.0)
+    for i, size in enumerate([100, 5, 110, 6]):
+        cb.add("k", f"i{i}", size, now=0.0)
+    groups = cb.release(now=0.0)
+    assert sorted(len(g) for _, g in groups) == [2, 2]
+    # SMMS length bucketing pairs similar sizes: {5,6} and {100,110}
+    assert {frozenset(g) for _, g in groups} == \
+        {frozenset({"i1", "i3"}), frozenset({"i0", "i2"})}
+
+
+# ---------------------------------------------------------------------------
+# Replicas: one front door, shared caches, exact results
+# ---------------------------------------------------------------------------
+
+def test_replicas_bitwise_match_single_engine(rng):
+    t, m = 2, 96
+    xs = [jnp.asarray(uniform_keys(t * m, seed=int(rng.integers(1 << 30)))
+                      .reshape(t, m)) for _ in range(3)]
+    specs = [sort_query(x, algorithm="smms") for x in xs]
+    specs += [sort_query(xs[0], algorithm="auto"),
+              sort_query(xs[1], algorithm="terasort", seed=3)]
+    direct = [run_spec(s) for s in specs]
+    with EngineReplicas(replicas=3, max_pending=16) as fleet:
+        results = fleet.run(specs, timeout=120.0)
+    assert all(r.ok for r in results)
+    for res, (value, _) in zip(results, direct):
+        for got, want in zip(res.value, value):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_replicas_share_result_cache_and_pool(rng):
+    t, m = 2, 64
+    x = jnp.asarray(uniform_keys(t * m, seed=int(rng.integers(1 << 30)))
+                    .reshape(t, m))
+    spec = sort_query(x, algorithm="smms")
+    with EngineReplicas(replicas=2, max_pending=16) as fleet:
+        assert fleet.engines[0].results is fleet.engines[1].results
+        assert fleet.engines[0].pool is fleet.engines[1].pool
+        first = fleet.engines[0].submit(spec).result(timeout=60.0)
+        # the OTHER replica serves the identical query from the shared LRU
+        second = fleet.engines[1].submit(spec).result(timeout=60.0)
+        agg = fleet.stats()
+    assert first.ok and second.ok and second.cached
+    for a, b in zip(first.value, second.value):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert agg.result_cache_hits >= 1
+    assert agg.served == 2
+
+
+def test_replica_routing_tries_siblings_on_full():
+    fleet = EngineReplicas(replicas=2, max_pending=1, autostart=False)
+    tickets = [fleet.submit(small_sort(seed=i + 1, tag=str(i)),
+                            block=False) for i in range(2)]
+    assert len({id(t) for t in tickets}) == 2
+    with pytest.raises(AdmissionError):   # both replicas full now
+        fleet.submit(small_sort(seed=9, tag="x"), block=False)
+    fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# QPS-derived pool sizing
+# ---------------------------------------------------------------------------
+
+def test_recommend_pool_size():
+    # Little's law: 100 qps * 0.07s / 0.7 utilization = 10 replicas
+    assert recommend_pool_size(100.0, 0.07, target_utilization=0.7) == 10
+    assert recommend_pool_size(0.0, 1.0) == 1        # no load -> 1
+    assert recommend_pool_size(-5.0, 0.1) == 1
+    assert recommend_pool_size(1e9, 1.0, max_replicas=64) == 64  # clamped
+    with pytest.raises(ValueError):
+        recommend_pool_size(1.0, 1.0, target_utilization=0.0)
+    with pytest.raises(ValueError):
+        recommend_pool_size(1.0, 1.0, max_replicas=0)
+
+
+@settings(max_examples=20)
+@given(st.floats(0.001, 1e4), st.floats(1e-6, 10.0),
+       st.floats(0.05, 1.0))
+def test_property_pool_size_monotone_and_bounded(qps, service, util):
+    n = recommend_pool_size(qps, service, target_utilization=util)
+    assert 1 <= n <= 64
+    # more load never means fewer replicas
+    n2 = recommend_pool_size(qps * 2, service, target_utilization=util)
+    assert n2 >= min(n, 64) or n2 == 64
+    # serving faster never means more replicas
+    n3 = recommend_pool_size(qps, service / 2, target_utilization=util)
+    assert n3 <= n
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: overload sheds by class, high-priority still served
+# ---------------------------------------------------------------------------
+
+def test_overload_sheds_low_serves_high():
+    """Flood a tiny engine with low-priority work, then submit highs:
+    every high is admitted (displacing lows) and eventually served;
+    shed lows raise ShedError; nothing hangs."""
+    with QueryEngine(max_pending=4, max_batch=4) as eng:
+        lows = [eng.submit(small_sort(seed=i + 1, priority=PRIORITY_LOW,
+                                      tag=f"l{i}"), block=False)
+                for i in range(4)]
+        highs = []
+        for i in range(3):
+            try:
+                highs.append(eng.submit(
+                    small_sort(seed=100 + i, priority=PRIORITY_HIGH,
+                               tag=f"h{i}"), block=False))
+            except AdmissionError:
+                # legal only if no low was still queued to displace
+                pass
+        assert highs, "no high-priority submit was admitted"
+        outcomes = {"served": 0, "shed": 0}
+        for tk in lows:
+            try:
+                res = tk.result(timeout=60.0)
+                assert res.ok
+                outcomes["served"] += 1
+            except ShedError:
+                outcomes["shed"] += 1
+        for tk in highs:
+            assert tk.result(timeout=60.0).ok   # never shed, always served
+        stats = eng.stats()
+        assert stats.shed == outcomes["shed"]
+        assert stats.shed_by_class.get("high", 0) == 0
