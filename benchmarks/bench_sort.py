@@ -36,10 +36,17 @@ BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 # the re-partition search, and split the receive merge into
 # overlap_chunks (=2) chunk merges plus one cross-run merge:
 # smms_staged = sort + search + merge + search + 2 chunk merges + final;
-# terasort_staged fuses its sort+search so it is one less.
+# terasort_staged fuses its sort+search so it is one less.  The *_radix
+# variants force the radix sort kernel (ops.force_sort_kernel): smms
+# swaps its sort dispatch 1:1 (radix sort + search + merge = 3);
+# terasort loses the fused sort_partition — there is no fused
+# radix+search kernel, so it splits into radix sort + search + merge
+# (2 -> 3).
 DISPATCH_BUDGET = {
     "smms": 3,
     "terasort": 2,
+    "smms_radix": 3,
+    "terasort_radix": 3,
     "smms_staged": 7,
     "terasort_staged": 6,
     "statjoin": 4,
@@ -48,11 +55,26 @@ DISPATCH_BUDGET = {
     "randjoin": 6,
 }
 
+# Dispatch paths that count against the budget: both kernel families
+# are real Pallas dispatches (the "radix" path label exists so the
+# benches can tell which family served a sort tick).
+KERNEL_PATHS = ("pallas", "radix")
+
+
+def _deep_merge(dst: dict, src: dict) -> None:
+    for k, v in src.items():
+        if isinstance(v, dict) and isinstance(dst.get(k), dict):
+            _deep_merge(dst[k], v)
+        else:
+            dst[k] = v
+
 
 def _merge_bench_json(update: dict) -> None:
-    """Read-modify-write BENCH_sort.json so the kernel-compare gate and
-    the exchange-compare report can each refresh their own keys without
-    clobbering the other's."""
+    """Read-modify-write BENCH_sort.json so each suite can refresh its
+    own keys without clobbering the others'.  Nested dicts merge
+    recursively: ``kernel_compare`` holds one record per backend mode
+    ("interpret" / "compiled"), and an interpret-mode CI run must not
+    erase the compiled record an accelerator run left behind."""
     data = {}
     if os.path.exists(BENCH_JSON):
         try:
@@ -60,7 +82,12 @@ def _merge_bench_json(update: dict) -> None:
                 data = json.load(f)
         except (json.JSONDecodeError, OSError):
             data = {}
-    data.update(update)
+    # migrate the legacy layout: run_kernel_compare used to write its
+    # record at the top level; it now lives under kernel_compare[mode]
+    for legacy in ("suite", "interpret_mode", "note", "regression",
+                   "entries"):
+        data.pop(legacy, None)
+    _deep_merge(data, update)
     with open(BENCH_JSON, "w") as f:
         json.dump(data, f, indent=2)
 
@@ -102,11 +129,23 @@ def run_kernel_compare(report_rows: List[str]) -> None:
     Each row times ``cluster.sort`` (and the raw ops) with
     kernel_backend="pallas" vs "reference" and asserts the outputs are
     bitwise identical — the differential contract, measured at benchmark
-    scale.  Results land in BENCH_sort.json.  On this CPU container the
-    Pallas path runs in interpret mode, so its latency is a correctness
-    datapoint, NOT TPU performance (the roofline suite models that).
+    scale.  Results land under ``kernel_compare[<mode>]`` of
+    BENCH_sort.json, keyed "interpret" or "compiled" by the live
+    ``ops.INTERPRET`` flag so the two backend modes keep separate
+    records (``main(--backend=compiled)`` flips the flag on an
+    accelerator).  In interpret mode the Pallas latency is a correctness
+    datapoint, NOT hardware performance; every entry carries its own
+    ``interpret_mode`` so a reader never has to guess.  Each kernel row
+    is joined against the roofline memory model
+    (:class:`repro.launch.roofline.KernelCost`) into expected-vs-
+    achieved bandwidth rows — the calibration feed for the
+    ``sort_kernel_choice`` crossover constants.
     """
+    from repro.launch.roofline import KernelCost
+
+    mode = "interpret" if ops.INTERPRET else "compiled"
     entries = []
+    roofline_rows = []
 
     def timed(fn, *args, **kw):
         out = jax.block_until_ready(fn(*args, **kw))
@@ -122,8 +161,11 @@ def run_kernel_compare(report_rows: List[str]) -> None:
         equal = bool(np.array_equal(np.asarray(ref), np.asarray(ker)))
         assert equal, "kernel sort diverged from reference"
         entries.append({"op": "ops.sort", "shape": f"{rows}x{n}",
+                        "interpret_mode": ops.INTERPRET,
                         "reference_us": round(ref_us),
                         "pallas_us": round(ker_us), "bitwise_equal": equal})
+        roofline_rows.append(KernelCost.bitonic(rows, n).row(
+            ker_us * 1e-6, op="ops.sort", shape=f"{rows}x{n}"))
         report_rows.append(
             f"kernel_compare,ops.sort,{rows}x{n},ref_us={ref_us:.0f},"
             f"pallas_us={ker_us:.0f},equal=1")
@@ -137,11 +179,69 @@ def run_kernel_compare(report_rows: List[str]) -> None:
     equal = bool(np.array_equal(np.asarray(ref), np.asarray(ker)))
     assert equal, "kernel merge diverged from reference"
     entries.append({"op": "ops.merge_sorted_rows", "shape": "8x512",
+                    "interpret_mode": ops.INTERPRET,
                     "reference_us": round(ref_us),
                     "pallas_us": round(ker_us), "bitwise_equal": equal})
+    roofline_rows.append(KernelCost.merge(8, 512).row(
+        ker_us * 1e-6, op="ops.merge_sorted_rows", shape="8x512"))
     report_rows.append(
         f"kernel_compare,ops.merge_sorted_rows,8x512,ref_us={ref_us:.0f},"
         f"pallas_us={ker_us:.0f},equal=1")
+
+    # ---- radix vs bitonic: the wide-row crossover point ------------------
+    # n = 2^14 is past the cost model's float32 crossover
+    # (sort_kernel_choice picks radix there on compiled backends); both
+    # kernel families are forced in turn over the SAME input, checked
+    # bitwise against each other and against jnp.sort, and joined
+    # against the roofline model.  The radix <= bitonic timing gate only
+    # arms in compiled mode — the interpret-mode emulator prices
+    # radix's scatter at ~30x its hardware cost (that measurement is
+    # exactly why sort_kernel_choice pins bitonic under interpret), so
+    # there the rows are recorded as calibration data only.
+    rows_w, n_w = 4, 1 << 14
+    for dtype, key_bits in ((jnp.float32, 32), (jnp.int32, 32),
+                            (jnp.bfloat16, 16)):
+        if dtype == jnp.int32:
+            xw = jax.random.randint(jax.random.key(n_w), (rows_w, n_w),
+                                    -(2 ** 31), 2 ** 31 - 1, dtype=jnp.int32)
+        else:
+            xw = jax.random.normal(jax.random.key(n_w + key_bits),
+                                   (rows_w, n_w)).astype(dtype)
+        with ops.force_sort_kernel("bitonic"):
+            bit, bit_us = timed(lambda a: ops.sort(a, backend="pallas"), xw)
+        with ops.force_sort_kernel("radix"):
+            rad, rad_us = timed(lambda a: ops.sort(a, backend="pallas"), xw)
+        equal = bool(np.array_equal(np.asarray(bit), np.asarray(rad)))
+        assert equal, f"radix diverged from bitonic on {dtype.__name__}"
+        assert bool(np.array_equal(np.asarray(rad),
+                                   np.asarray(jnp.sort(xw, axis=-1)))), (
+            f"radix diverged from jnp.sort on {dtype.__name__}")
+        faster = bool(rad_us <= bit_us)
+        entries.append({"op": "ops.sort[radix-vs-bitonic]",
+                        "shape": f"{rows_w}x{n_w}",
+                        "dtype": np.dtype(dtype).name,
+                        "interpret_mode": ops.INTERPRET,
+                        "bitonic_us": round(bit_us),
+                        "radix_us": round(rad_us),
+                        "radix_faster": faster,
+                        "chosen": ops.sort_kernel_choice(xw),
+                        "bitwise_equal": equal})
+        roofline_rows.append(KernelCost.bitonic(rows_w, n_w).row(
+            bit_us * 1e-6, op="ops.sort[bitonic]",
+            shape=f"{rows_w}x{n_w}", dtype=np.dtype(dtype).name))
+        roofline_rows.append(
+            KernelCost.radix(rows_w, n_w, key_bits=key_bits).row(
+                rad_us * 1e-6, op="ops.sort[radix]",
+                shape=f"{rows_w}x{n_w}", dtype=np.dtype(dtype).name))
+        report_rows.append(
+            f"kernel_compare,radix_vs_bitonic,{np.dtype(dtype).name},"
+            f"{rows_w}x{n_w},bitonic_us={bit_us:.0f},radix_us={rad_us:.0f},"
+            f"equal=1,radix_faster={int(faster)}")
+        if not ops.INTERPRET:
+            assert faster, (
+                f"compiled radix must beat bitonic at {rows_w}x{n_w} "
+                f"({np.dtype(dtype).name}): {rad_us:.0f}us vs "
+                f"{bit_us:.0f}us — recalibrate RADIX_PASS_SUBSTAGES")
 
     # ---- end-to-end: the cluster front door ------------------------------
     # The front door's default substrate is the shared jit pool, so a
@@ -155,21 +255,21 @@ def run_kernel_compare(report_rows: List[str]) -> None:
     x = jnp.asarray(uniform_keys(t * m, seed=6).reshape(t, m))
     reset_default_pool()
 
-    def best_of(**kw):
+    def best_of(xt, **kw):
         """Best of ``reps`` warm runs (the cold compile already happened)."""
-        return timeit(lambda: cluster.sort(x, **kw),
+        return timeit(lambda: cluster.sort(xt, **kw),
                       reps=reps, warmup=0).best_us
 
     for algorithm in ("smms", "terasort"):
         (ref_keys, _), rep_ref = cluster.sort(x, algorithm=algorithm,
                                               kernel_backend="reference")
-        ref_us = best_of(algorithm=algorithm, kernel_backend="reference")
+        ref_us = best_of(x, algorithm=algorithm, kernel_backend="reference")
         ops.reset_dispatch_counts()
         (ker_keys, _), rep_ker = cluster.sort(x, algorithm=algorithm,
                                               kernel_backend="pallas")
         kernel_calls = sum(c for (op, path), c in ops.DISPATCH_COUNTS.items()
-                           if path == "pallas")
-        ker_us = best_of(algorithm=algorithm, kernel_backend="pallas")
+                           if path in KERNEL_PATHS)
+        ker_us = best_of(x, algorithm=algorithm, kernel_backend="pallas")
         equal = bool(np.array_equal(np.asarray(ref_keys),
                                     np.asarray(ker_keys)))
         assert equal, f"{algorithm}: kernel path diverged from reference"
@@ -178,6 +278,7 @@ def run_kernel_compare(report_rows: List[str]) -> None:
         regression |= slower
         entries.append({"op": f"cluster.sort[{algorithm}]",
                         "shape": f"{t}x{m}",
+                        "interpret_mode": ops.INTERPRET,
                         "reference_us": round(ref_us),
                         "pallas_us": round(ker_us),
                         "pallas_dispatches": int(kernel_calls),
@@ -193,14 +294,67 @@ def run_kernel_compare(report_rows: List[str]) -> None:
             f"{algorithm}: {kernel_calls} pallas dispatches exceed the "
             f"fusion budget {DISPATCH_BUDGET[algorithm]}")
 
-    _merge_bench_json({"suite": "bench_sort.run_kernel_compare",
-                       "interpret_mode": ops.INTERPRET,
-                       "note": ("interpret-mode Pallas latencies are a "
-                                "correctness datapoint, not TPU performance; "
-                                "end-to-end rows time the warm fused front "
-                                "door, best of {} runs".format(reps)),
-                       "regression": regression,
-                       "entries": entries})
+    # ---- end-to-end radix at the wide-row point --------------------------
+    # Same front door, rows wide enough that the cost model would pick
+    # radix on a compiled backend (m = 2^14 per shard).  Radix is forced
+    # per family (fresh pool inside the context — the choice is a
+    # trace-time decision) so both families' end-to-end wall clock and
+    # dispatch counts land in the record; the timing gate again only
+    # arms in compiled mode.
+    t_w, m_w = 4, 1 << 14
+    xw = jnp.asarray(uniform_keys(t_w * m_w, seed=7).reshape(t_w, m_w))
+    e2e = {}
+    for family in ("bitonic", "radix"):
+        with ops.force_sort_kernel(family):
+            reset_default_pool()
+            ops.reset_dispatch_counts()
+            (keys_f, _), rep_f = cluster.sort(xw, algorithm="smms",
+                                              kernel_backend="pallas")
+            calls = sum(c for (op, path), c in ops.DISPATCH_COUNTS.items()
+                        if path in KERNEL_PATHS)
+            us = best_of(xw, algorithm="smms", kernel_backend="pallas")
+        e2e[family] = {"us": us, "keys": np.asarray(keys_f),
+                       "dispatches": int(calls),
+                       "k_workload": rep_f.k_workload}
+    assert np.array_equal(e2e["bitonic"]["keys"], e2e["radix"]["keys"]), (
+        "forced-radix cluster.sort diverged from forced-bitonic")
+    radix_faster = bool(e2e["radix"]["us"] <= e2e["bitonic"]["us"])
+    entries.append({"op": "cluster.sort[smms,radix-vs-bitonic]",
+                    "shape": f"{t_w}x{m_w}",
+                    "interpret_mode": ops.INTERPRET,
+                    "bitonic_us": round(e2e["bitonic"]["us"]),
+                    "radix_us": round(e2e["radix"]["us"]),
+                    "radix_dispatches": e2e["radix"]["dispatches"],
+                    "dispatch_budget": DISPATCH_BUDGET["smms_radix"],
+                    "radix_faster": radix_faster,
+                    "bitwise_equal": True,
+                    "k_workload": e2e["radix"]["k_workload"]})
+    report_rows.append(
+        f"kernel_compare,cluster.sort,radix_vs_bitonic,t={t_w},m={m_w},"
+        f"bitonic_us={e2e['bitonic']['us']:.0f},"
+        f"radix_us={e2e['radix']['us']:.0f},equal=1,"
+        f"radix_faster={int(radix_faster)}")
+    assert e2e["radix"]["dispatches"] <= DISPATCH_BUDGET["smms_radix"], (
+        f"forced-radix smms: {e2e['radix']['dispatches']} dispatches "
+        f"exceed the budget {DISPATCH_BUDGET['smms_radix']}")
+    if not ops.INTERPRET:
+        assert radix_faster, (
+            f"compiled radix must beat bitonic end-to-end at "
+            f"{t_w}x{m_w}: {e2e['radix']['us']:.0f}us vs "
+            f"{e2e['bitonic']['us']:.0f}us")
+    reset_default_pool()
+
+    _merge_bench_json({"kernel_compare": {mode: {
+        "suite": "bench_sort.run_kernel_compare",
+        "interpret_mode": ops.INTERPRET,
+        "note": ("interpret-mode Pallas latencies are a correctness "
+                 "datapoint, not TPU performance; end-to-end rows time "
+                 "the warm fused front door, best of {} runs; roofline "
+                 "rows join each kernel against the HBM-traffic model "
+                 "(expected vs achieved bandwidth)".format(reps)),
+        "regression": regression,
+        "entries": entries,
+        "roofline": roofline_rows}}})
     report_rows.append(f"kernel_compare,json,{os.path.abspath(BENCH_JSON)}")
     # fail LOUDLY (nonzero exit through the harness) when the kernel
     # path lost end-to-end — the silent-regression mode this suite
@@ -310,6 +464,16 @@ def run_dispatch_budget(report_rows: List[str]) -> None:
                                     exchange=exchange,
                                     kernel_backend="pallas")
 
+    def radix_query(algorithm):
+        # forced-radix variant: the pool is already fresh when the
+        # query runs (the loop resets it), so the trace happens inside
+        # the force context and the program keeps the radix family
+        def q():
+            with ops.force_sort_kernel("radix"):
+                return cluster.sort(x, algorithm=algorithm,
+                                    kernel_backend="pallas")
+        return q
+
     def join_query(algorithm):
         return lambda: cluster.join(s_keys, rows, t_keys, rows,
                                     algorithm=algorithm, t_machines=t,
@@ -317,6 +481,8 @@ def run_dispatch_budget(report_rows: List[str]) -> None:
 
     queries = {"smms": sort_query("smms"),
                "terasort": sort_query("terasort"),
+               "smms_radix": radix_query("smms"),
+               "terasort_radix": radix_query("terasort"),
                "smms_staged": sort_query("smms", exchange="staged"),
                "terasort_staged": sort_query("terasort", exchange="staged"),
                "statjoin": join_query("statjoin"),
@@ -328,7 +494,7 @@ def run_dispatch_budget(report_rows: List[str]) -> None:
         ops.reset_dispatch_counts()
         query()
         ticks = sum(c for (op, path), c in ops.DISPATCH_COUNTS.items()
-                    if path == "pallas")
+                    if path in KERNEL_PATHS)
         budget = DISPATCH_BUDGET[algorithm]
         report_rows.append(f"dispatch_budget,{algorithm},ticks={ticks},"
                            f"budget={budget},ok={int(0 < ticks <= budget)}")
@@ -336,6 +502,52 @@ def run_dispatch_budget(report_rows: List[str]) -> None:
             f"{algorithm}: {ticks} pallas dispatches vs budget {budget}: "
             f"{dict(ops.DISPATCH_COUNTS)}")
     reset_default_pool()
+
+
+def main(argv: List[str] = None) -> int:
+    """CLI: ``python -m benchmarks.bench_sort [--backend=interpret|compiled]``.
+
+    ``--backend=compiled`` reruns the kernel-compare gate with the
+    Pallas interpreter OFF (``ops.INTERPRET = False``, the runtime
+    equivalent of ``REPRO_PALLAS_INTERPRET=0``) so the kernels lower
+    through the real backend compiler; its record lands under
+    ``kernel_compare["compiled"]`` in BENCH_sort.json next to the
+    interpret record, and the radix-beats-bitonic timing gates arm.
+    Compiled Pallas needs an accelerator: on a CPU-only host the run
+    SKIPS gracefully (exit 0, one explanatory line) instead of crashing
+    in the Mosaic/Triton lowering.
+    """
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--backend", choices=("interpret", "compiled"),
+                   default="interpret",
+                   help="Pallas execution mode for the kernel-compare "
+                        "suite (compiled needs a GPU/TPU)")
+    args = p.parse_args(argv)
+
+    rows: List[str] = []
+    if args.backend == "compiled":
+        platform = jax.default_backend()
+        if platform not in ("gpu", "tpu"):
+            print(f"bench_sort: SKIP --backend=compiled — needs an "
+                  f"accelerator, jax.default_backend() is {platform!r} "
+                  f"(interpret-mode records in BENCH_sort.json are "
+                  f"unaffected)")
+            return 0
+        prev = ops.INTERPRET
+        ops.INTERPRET = False
+        reset_default_pool()
+        try:
+            run_kernel_compare(rows)
+        finally:
+            ops.INTERPRET = prev
+            reset_default_pool()
+    else:
+        run_kernel_compare(rows)
+    for row in rows:
+        print(row)
+    return 0
 
 
 def run_scaling(report_rows: List[str]) -> None:
@@ -355,3 +567,8 @@ def run_scaling(report_rows: List[str]) -> None:
         report_rows.append(
             f"sort_scaling,smms,t={t},imbalance={rep.imbalance:.3f},"
             f"{dt * 1e6:.0f}")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -89,7 +89,7 @@ def sort(x, *, algorithm: str = "smms",
          cap_factor: Optional[float] = None,
          backend: str = "static", kernel_backend: Optional[str] = None,
          policy=None, exchange: str = "flat", overlap_chunks: int = 2,
-         donate: bool = False):
+         donate: Optional[bool] = None):
     """Distributed sort of x: (t, m).  Returns ((keys, values), report).
 
     algorithm: one of SORT_ALGORITHMS, or "auto" to let the planner
@@ -113,10 +113,14 @@ def sort(x, *, algorithm: str = "smms",
 
     donate: allow the compiled program to consume (reuse) the input
     buffers instead of copying them into the exchange pipeline — do not
-    touch ``x``/``values`` afterwards.  Honored on donation-capable
-    platforms (GPU/TPU) when the capacity schedule cannot retry
-    (explicit ``cap_factor`` or a ``policy`` with ``max_retries=0``);
-    dropped silently otherwise (``Substrate.stats`` records which).
+    touch ``x``/``values`` afterwards.  ``None`` (the default) donates
+    automatically exactly when the resolved capacity schedule is
+    single-shot (explicit ``cap_factor`` or a ``policy`` with
+    ``max_retries=0``) — retry loops re-run the body from the same
+    inputs, so a donated buffer would be gone on attempt 2.  Honored on
+    donation-capable platforms (GPU/TPU); dropped otherwise, counted in
+    ``Substrate.stats['donation_dropped']`` and the
+    ``donation_dropped_total`` metric.
     """
     if np.ndim(x) != 2:
         raise ValueError(
@@ -194,7 +198,8 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
          in_cap_factor: float = 4.0, out_cap_factor: float = 1.05,
          kernel_backend: Optional[str] = None,
          ab: Optional[Tuple[int, int]] = None, stats=None,
-         mem_budget: Optional[int] = None, small_side: Optional[str] = None):
+         mem_budget: Optional[int] = None, small_side: Optional[str] = None,
+         donate: Optional[bool] = None):
     """Distributed equi-join.  Returns (JoinOutput, report).
 
     algorithm: one of JOIN_ALGORITHMS, or "auto" — sketch both tables in
@@ -210,6 +215,13 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
     information StatJoin's planner uses.  mem_budget caps the broadcast
     small side (planner feasibility, objects); small_side forces the
     broadcast orientation.
+
+    donate: as in :func:`sort` — ``None`` (default) donates the routed
+    fragment tensors automatically on the single-shot algorithms
+    (statjoin/repartition, whose capacity is planned exactly and never
+    retried); ``False`` keeps them alive.  The retrying algorithms
+    (randjoin/broadcast under the default capacity) never donate — the
+    retry loop re-reads the fragments.
     """
     if algorithm == AUTO:
         from repro.planner import plan_join_query
@@ -223,7 +235,8 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
                            seed=seed, in_cap_factor=in_cap_factor,
                            out_cap_factor=out_cap_factor,
                            kernel_backend=kernel_backend, ab=ab, stats=stats,
-                           mem_budget=mem_budget, small_side=small_side)
+                           mem_budget=mem_budget, small_side=small_side,
+                           donate=donate)
         _attach_plan(report, plan, sketch_phases)
         return out, report
     if algorithm not in JOIN_ALGORITHMS:
@@ -235,7 +248,7 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
                         out_cap_factor=out_cap_factor, stats=stats,
                         kernel_backend=kernel_backend,
                         substrate=_resolve_substrate(substrate, t_machines),
-                        out_capacity=out_capacity)
+                        out_capacity=out_capacity, donate=donate)
 
     defaulted_capacity = out_capacity is None
     if defaulted_capacity:
@@ -309,7 +322,8 @@ def join(s_keys, s_rows, t_keys, t_rows, *, algorithm: str = "statjoin",
                             t_machines=t_machines, out_capacity=out_capacity,
                             kernel_backend=kernel_backend,
                             substrate=_resolve_substrate(substrate,
-                                                         t_machines))
+                                                         t_machines),
+                            donate=donate)
 
 
 import functools as _functools

@@ -45,6 +45,7 @@ from jax.sharding import PartitionSpec as P
 from . import compat
 from .collectives import CollectiveTape
 from ..obs import trace as obs_trace
+from ..obs.metrics import REGISTRY
 
 __all__ = ["Substrate", "VmapSubstrate", "ShardMapSubstrate",
            "SubstratePool", "default_substrate", "default_pool",
@@ -157,6 +158,8 @@ class Substrate:
             return ()
         if not _donation_supported():
             self.stats["donation_dropped"] += 1
+            REGISTRY.counter("donation_dropped_total",
+                             platform=jax.default_backend()).inc()
             obs_trace.event("donation_dropped",
                             platform=jax.default_backend())
             return ()

@@ -36,8 +36,15 @@ def repartition_join(s_keys: np.ndarray, s_rows: np.ndarray,
                      t_keys: np.ndarray, t_rows: np.ndarray,
                      t_machines: int, out_capacity: int,
                      kernel_backend: Optional[str] = None,
-                     substrate: Optional[Substrate] = None):
-    """Hash-partition both tables by key; join per machine."""
+                     substrate: Optional[Substrate] = None,
+                     donate: Optional[bool] = None):
+    """Hash-partition both tables by key; join per machine.
+
+    ``donate=None`` (default) donates the four partitioned fragment
+    tensors: the out_capacity here is caller-fixed (single attempt, no
+    retry loop) and the fragments are built fresh in this call.
+    ``donate=False`` keeps them alive.
+    """
     t = t_machines
     s_keys = np.asarray(s_keys, np.int64)
     t_keys = np.asarray(t_keys, np.int64)
@@ -62,7 +69,9 @@ def repartition_join(s_keys: np.ndarray, s_rows: np.ndarray,
 
     body = functools.partial(_repartition_body, out_capacity=out_capacity,
                              kernel_backend=kernel_backend)
-    out, tape = substrate.run(body, sk, sr, tk, tr)
+    donate_argnums = (0, 1, 2, 3) if donate is not False else ()
+    out, tape = substrate.run(body, sk, sr, tk, tr,
+                              donate_argnums=donate_argnums)
     counts = np.asarray(out.count).reshape(-1)
     n_in = len(s_keys) + len(t_keys)
     report = tape.report(algorithm="RepartitionJoin", t=t, n_in=n_in,

@@ -207,7 +207,7 @@ def smms_sort(x: jnp.ndarray, r: int = 2,
               policy: Optional[CapacityPolicy] = None,
               exchange: str = "flat",
               overlap_chunks: int = 2,
-              donate: bool = False):
+              donate: Optional[bool] = None):
     """Sort x of shape (t, m) across t machines on the given substrate.
 
     Returns ((sorted_global, values_or_None), report: AlphaKReport).
@@ -216,6 +216,11 @@ def smms_sort(x: jnp.ndarray, r: int = 2,
     calls.  ``donate=True`` lets that program consume the input buffers
     (honored only when the capacity schedule is single-shot — a retry
     must re-read the operands — and on platforms with donation support).
+    ``donate=None`` (the default) donates automatically exactly when
+    the resolved capacity schedule is single-shot (``max_retries == 0``:
+    an explicit ``cap_factor`` or any ``CapacityPolicy.fixed``), so
+    capacity-stable callers get the copy-free path without opting in;
+    pass ``donate=False`` to keep the inputs alive.
 
     ``exchange="staged"`` routes Round 3 through the two-level staged
     exchange over a (t1, t2)-factored substrate (see
@@ -231,6 +236,8 @@ def smms_sort(x: jnp.ndarray, r: int = 2,
     if policy is None:
         policy = (CapacityPolicy.fixed(cap_factor) if cap_factor is not None
                   else CapacityPolicy.smms(n, t, r))
+    if donate is None:
+        donate = policy.max_retries == 0
     donate_argnums = ()
     if donate and policy.max_retries == 0:
         donate_argnums = (0,) if values is None else (0, 1)

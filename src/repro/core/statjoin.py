@@ -212,11 +212,20 @@ def statjoin(s_keys: np.ndarray, s_rows: np.ndarray,
              stats: Optional[JoinStatistics] = None,
              kernel_backend: Optional[str] = None,
              substrate: Optional[Substrate] = None,
-             out_capacity: Optional[int] = None):
+             out_capacity: Optional[int] = None,
+             donate: Optional[bool] = None):
     """Host wrapper: plan on statistics, execute per machine on a substrate.
 
     out_capacity overrides the Theorem-6-derived per-machine output
     buffer (ceil(out_cap_factor * 2W/t)) when given.
+
+    ``donate=None`` (default) donates the four routed fragment tensors
+    to the compiled program: StatJoin's capacity schedule is single-shot
+    by construction (the plan is exact, there is no retry loop) and the
+    fragments are built fresh in this call, so nothing can re-read
+    them.  ``donate=False`` keeps them alive (dropped anyway on
+    platforms without donation support — see
+    ``Substrate.stats['donation_dropped']``).
     """
     t = t_machines
     s_keys = np.asarray(s_keys, np.int32)
@@ -250,7 +259,9 @@ def statjoin(s_keys: np.ndarray, s_rows: np.ndarray,
     body = functools.partial(_statjoin_body, n_in=n_in, n_stat=n_stat, t=t,
                              capacity=capacity,
                              kernel_backend=kernel_backend)
-    out, tape = substrate.run(body, sk, sr, tk, tr)
+    donate_argnums = (0, 1, 2, 3) if donate is not False else ()
+    out, tape = substrate.run(body, sk, sr, tk, tr,
+                              donate_argnums=donate_argnums)
 
     counts = np.asarray(out.count).reshape(-1)
     report = tape.report(algorithm="StatJoin", t=t, n_in=n_in, n_out=w,

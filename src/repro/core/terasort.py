@@ -122,7 +122,7 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
                   values: Optional[jnp.ndarray] = None,
                   exchange: str = "flat",
                   overlap_chunks: int = 2,
-                  donate: bool = False):
+                  donate: Optional[bool] = None):
     """Host wrapper over t machines on a substrate.  x: (t, m).
 
     ``values`` (same leading (t, m) shape) ride along through the
@@ -132,7 +132,9 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
     signature).  ``substrate=None`` uses the process-wide jit pool —
     the sampling scan, boundary selection and shuffle compile into ONE
     cached program, so repeated sorts skip the (expensive) Algorithm-S
-    trace entirely.  ``donate`` as in :func:`repro.core.smms.smms_sort`.
+    trace entirely.  ``donate`` as in :func:`repro.core.smms.smms_sort`
+    (``None`` = donate automatically when the capacity schedule is
+    single-shot).
     """
     t, m = x.shape
     n = t * m
@@ -144,6 +146,8 @@ def terasort_sort(x: jnp.ndarray, seed: int = 0,
     if policy is None:
         policy = (CapacityPolicy.fixed(cap_factor) if cap_factor is not None
                   else CapacityPolicy.terasort(n, t, slack=1.1))
+    if donate is None:
+        donate = policy.max_retries == 0
     donate_argnums = ()
     if donate and policy.max_retries == 0:
         donate_argnums = (0,) if values is None else (0, 2)

@@ -5,7 +5,9 @@ from .bitonic import (bitonic_sort, bitonic_sort_kv, merge_sorted_rows,
                       sort_sentinel)
 from .bucketize import bucketize_histogram, searchsorted
 from .flash_attention import flash_attention
+from .radix import radix_sort, key_to_bits, bits_to_key
 
 __all__ = ["ops", "ref", "bitonic_sort", "bitonic_sort_kv",
            "merge_sorted_rows", "sort_sentinel", "bucketize_histogram",
-           "searchsorted", "flash_attention"]
+           "searchsorted", "flash_attention",
+           "radix_sort", "key_to_bits", "bits_to_key"]

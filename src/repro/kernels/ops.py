@@ -9,11 +9,26 @@ picks one of two backends:
   ``jnp.argsort``, ``jnp.searchsorted``).  Always available, always the
   semantic contract.
 * ``"pallas"``    — the purpose-built kernels in ``bitonic.py`` /
-  ``bucketize.py`` / ``fused.py``, with the dispatch layer handling
-  pad-to-pow2 with sort sentinels, key/index packing for stable payload
-  sorts, dtype and shape eligibility checks, and **automatic fallback**
-  to the reference for anything a kernel cannot take (exotic dtypes,
-  >2D operands, rows too long for VMEM residency).
+  ``radix.py`` / ``bucketize.py`` / ``fused.py``, with the dispatch
+  layer handling pad-to-pow2 with sort sentinels, key/index packing for
+  stable payload sorts, dtype and shape eligibility checks, and
+  **automatic fallback** to the reference for anything a kernel cannot
+  take (exotic dtypes, >2D operands, rows too long for VMEM residency).
+
+Within the pallas backend, the sort family picks between two kernel
+*families* (``sort_kernel_choice``): the bitonic network (short rows —
+n log^2 n compare-exchanges, but every substage is pure SIMD min/max)
+and the LSD radix kernel (wide rows on compiled backends — pass count
+scales with the key *width*, so bf16 crosses over earlier than
+float32/int32).  The crossover constants (``RADIX_MIN_LANES``,
+``RADIX_PASS_SUBSTAGES``) are calibrated from ``benchmarks/bench_sort``:
+on this host container the interpret-mode bench shows the counting
+passes lose outright (XLA-CPU emulates the in-kernel scatter
+scalar-wise, ~30x over the network), so in interpret mode the choice
+stays bitonic and the radix family engages on compiled accelerator
+backends — or explicitly via :func:`force_sort_kernel` (tests, budget
+benches).  Radix dispatches tick ``DISPATCH_COUNTS[(op, "radix")]`` so
+the fusion budgets stay enforceable per family.
 
 Dispatch-count economy: the fused ``sort_partition[_kv]`` collapses the
 sort → searchsorted chain into one kernel pass, and ``pad_pow2`` +
@@ -23,13 +38,17 @@ budgets in ``benchmarks/bench_sort.DISPATCH_BUDGET``.
 
 Every kernel-path result is bitwise-identical to the reference path —
 payload-carrying sorts route through a (key, arange) lexicographic pair
-sort, which reproduces the *stable* argsort permutation exactly; the
-differential suite in ``tests/test_kernel_dispatch.py`` pins this.
-The parity contract covers NaN-free keys (the cluster pipeline's
-standing precondition: keys strictly below the PAD sentinel).  NaN keys
-cannot be ordered by a comparison network — the kernels then return a
-permutation of the input (swap-based compare-exchange never fabricates
-or duplicates values) while jnp.sort moves NaNs last.
+sort (bitonic) or carry the stable permutation through the counting
+passes (radix), either way reproducing the *stable* argsort permutation
+exactly; the differential suites in ``tests/test_kernel_dispatch.py``
+and ``tests/test_radix.py`` pin this.  The bitonic parity contract
+covers NaN-free keys (the cluster pipeline's standing precondition:
+keys strictly below the PAD sentinel).  NaN keys cannot be ordered by a
+comparison network — the bitonic kernels then return a permutation of
+the input (swap-based compare-exchange never fabricates or duplicates
+values) while jnp.sort moves NaNs last.  The radix path's contract is
+strictly wider: NaNs canonicalize to the all-ones key bits, so they
+sort last in input order — full jnp.sort parity, NaNs included.
 
 ``backend=None`` resolves to the module default (``DEFAULT_BACKEND``,
 seeded from the ``REPRO_KERNEL_BACKEND`` env var, ``"reference"`` when
@@ -64,6 +83,7 @@ runtime set ``repro.kernels.ops.INTERPRET = False`` (or export
 from __future__ import annotations
 
 import collections
+import contextlib
 import functools
 import os
 import threading
@@ -72,7 +92,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from . import bitonic, bucketize, fused, flash_attention as fa
+from . import bitonic, bucketize, fused, radix, flash_attention as fa
+from .radix import key_to_bits, bits_to_key
 from ..obs import trace as obs_trace
 from ..obs.metrics import REGISTRY
 
@@ -91,6 +112,30 @@ MAX_KERNEL_LANES = 1 << 16
 # bound_block=...) — the double-buffered variant whose per-step VMEM is
 # O(block) instead of O(row).
 RANK_MERGE_BOUND_BLOCK = 1 << 11
+
+# ---- sort-family cost-model split (bitonic network vs LSD radix) ----
+# Digits per counting pass (16 bins): 8 passes for 32-bit keys, 4 for
+# bf16 — the key-specialization payoff (radix.key_to_bits).
+RADIX_BITS = radix.DEFAULT_RADIX_BITS
+# Rows narrower than this never pick radix: below it the whole bitonic
+# network is a handful of VREG-resident substages and the counting
+# pass's fixed costs (histogram + scatter setup) can't amortize.
+RADIX_MIN_LANES = 1 << 13
+# One counting pass costs about this many bitonic compare-exchange
+# substages of VPU work: ~8 vector ops for the 16-bin one-hot
+# rank/total cumsum plus ~4 for digit extract, position arithmetic and
+# the permutation scatter.  Radix wins once the network's
+# log2(n)(log2(n)+1)/2 substages exceed passes * this — log2(n) >= 14
+# for 32-bit keys, >= 13 for bf16 (the RADIX_MIN_LANES floor).
+# Calibrated against benchmarks/bench_sort.py: the compiled-mode rows
+# (BENCH_sort.json "compiled") recalibrate it on real hardware; the
+# interpret-mode rows show the host emulator is not in this regime at
+# all (XLA-CPU scatter ~30x over the network), which is why
+# sort_kernel_choice pins bitonic while INTERPRET is on.
+RADIX_PASS_SUBSTAGES = 12
+
+# force_sort_kernel override: None = cost model decides.
+_FORCE_SORT_KERNEL = None
 
 # (op, path) -> number of dispatch decisions, counted at trace time.
 # Ticks happen while substrates trace concurrently-submitted queries, so
@@ -117,8 +162,11 @@ __all__ = [
     "sort_partition", "sort_partition_kv", "pad_pow2",
     "merge_sorted_rows", "merge_sorted_rows_kv", "flash_attention",
     "resolve_backend", "reset_dispatch_counts", "kernel_eligible",
+    "sort_kernel_choice", "force_sort_kernel",
+    "key_to_bits", "bits_to_key",
     "INTERPRET", "BACKENDS", "DEFAULT_BACKEND", "DISPATCH_COUNTS",
     "MAX_KERNEL_LANES", "RANK_MERGE_BOUND_BLOCK",
+    "RADIX_BITS", "RADIX_MIN_LANES", "RADIX_PASS_SUBSTAGES",
     "EXEC_COUNTS_ENABLED", "OP_TIMING_ENABLED",
     "enable_exec_counts", "exec_dispatch_counts",
 ]
@@ -260,6 +308,11 @@ def kernel_eligible(op: str, x, y=None) -> bool:
                 and y is not None and y.ndim == 1 and y.shape[0] > 0
                 and jnp.dtype(x.dtype) == jnp.dtype(y.dtype)
                 and _lanes_ok(y.shape[0]))
+    if op == "radix":
+        # the radix family's own gate: eligible sort operands whose key
+        # dtype has a bit specialization (all of _KERNEL_KEY_DTYPES
+        # today, but the radix core needs no pow2 padding)
+        return x.ndim in (1, 2) and _key_dtype_ok(x) and _lanes_ok(x.shape[-1])
     if op in ("merge_sorted_rows", "merge_sorted_rows_kv"):
         t, c = x.shape
         if not _key_dtype_ok(x):
@@ -271,6 +324,60 @@ def kernel_eligible(op: str, x, y=None) -> bool:
         # length is lane-bound; the row count just sizes the grid
         return _lanes_ok(cp2) and tp2 <= 512
     raise ValueError(f"unknown op {op!r}")
+
+
+def sort_kernel_choice(x) -> str:
+    """Which sort-kernel family would the pallas path run: the cost-model
+    split between ``"bitonic"`` and ``"radix"``.
+
+    Bitonic's work is log2(n)·(log2(n)+1)/2 compare-exchange substages
+    over the padded row; an LSD radix sort is ``ceil(key_bits / 4)``
+    counting passes, each worth ~``RADIX_PASS_SUBSTAGES`` substages of
+    VPU work — so radix wins past a crossover in BOTH the row length
+    and the key width (bf16's 16-bit keys halve the pass count and
+    cross over a full octave earlier than float32/int32).  The split
+    only applies on compiled backends: the interpret-mode bench
+    calibrated that XLA-CPU's scalar scatter emulation prices radix out
+    entirely (see the module docstring), so while ``INTERPRET`` is on
+    the choice pins bitonic unless a :func:`force_sort_kernel` context
+    overrides it.  Pure function of shape/dtype/constants — safe to
+    consult without dispatching.
+    """
+    if _FORCE_SORT_KERNEL is not None:
+        return _FORCE_SORT_KERNEL
+    if INTERPRET or not _key_dtype_ok(x):
+        return "bitonic"
+    n = x.shape[-1]
+    if n < RADIX_MIN_LANES:
+        return "bitonic"
+    logn = max(1, max(2, _next_pow2(n)).bit_length() - 1)
+    bitonic_substages = logn * (logn + 1) // 2
+    passes = -(-radix.key_bits(x.dtype) // RADIX_BITS)
+    if bitonic_substages > passes * RADIX_PASS_SUBSTAGES:
+        return "radix"
+    return "bitonic"
+
+
+@contextlib.contextmanager
+def force_sort_kernel(kind):
+    """Pin :func:`sort_kernel_choice` to one family for the duration.
+
+    ``kind``: ``"radix"``, ``"bitonic"``, or ``None`` (restore the cost
+    model).  Used by the differential tests and the dispatch-budget
+    bench to exercise the radix paths on the interpret-mode container,
+    where the cost model would otherwise never pick them.  Affects
+    *trace-time* decisions only — already-compiled programs keep the
+    family they traced with (``reset_default_pool()`` to re-trace).
+    """
+    if kind not in (None, "bitonic", "radix"):
+        raise ValueError(f"unknown sort kernel family {kind!r}")
+    global _FORCE_SORT_KERNEL
+    prev = _FORCE_SORT_KERNEL
+    _FORCE_SORT_KERNEL = kind
+    try:
+        yield
+    finally:
+        _FORCE_SORT_KERNEL = prev
 
 
 # ---------------------------------------------------------------------------
@@ -293,10 +400,17 @@ def sort(x: jnp.ndarray, *, backend=None, block_rows: int = 8,
                          f"length (use ops.pad_pow2), got {x.shape[-1]}")
     b = resolve_backend(backend)
     if b == "pallas" and kernel_eligible("sort", x):
-        _tick("sort", "pallas")
         x2 = x[None, :] if x.ndim == 1 else x
-        out = bitonic.bitonic_sort(x2, block_rows=min(block_rows, x2.shape[0]),
-                                   interpret=INTERPRET)
+        if sort_kernel_choice(x) == "radix":
+            _tick("sort", "radix")
+            out, _ = radix.radix_sort(
+                x2, block_rows=min(block_rows, x2.shape[0]),
+                interpret=INTERPRET)
+        else:
+            _tick("sort", "pallas")
+            out = bitonic.bitonic_sort(
+                x2, block_rows=min(block_rows, x2.shape[0]),
+                interpret=INTERPRET)
         return out[0] if x.ndim == 1 else out
     _tick("sort", "reference")
     return jnp.sort(x, axis=-1)
@@ -323,6 +437,13 @@ def sort_kv(keys: jnp.ndarray, values, *, backend=None, block_rows: int = 8,
                          "the same power-of-two length (use ops.pad_pow2)")
     b = resolve_backend(backend)
     if b == "pallas" and kernel_eligible("sort_kv", keys, values):
+        if sort_kernel_choice(keys) == "radix":
+            # the permutation channel comes out of the counting passes
+            # for free — one gather carries the payload, no (key, iota)
+            # lexicographic pair-sort
+            _tick("sort_kv", "radix")
+            ks, order = radix.radix_sort(keys[None, :], interpret=INTERPRET)
+            return ks[0], values[order[0]]
         _tick("sort_kv", "pallas")
         n = keys.shape[0]
         iota = jnp.arange(n, dtype=jnp.int32)
@@ -386,6 +507,14 @@ def sort_partition(x: jnp.ndarray, interior: jnp.ndarray, *, backend=None):
     if nq == 0:                         # t == 1: sort only, trivial partition
         xs = sort(x, backend=backend)
         cuts = jnp.zeros((0,), jnp.int32)
+    elif (b == "pallas" and kernel_eligible("sort_partition", x, interior)
+          and sort_kernel_choice(x) == "radix"):
+        # no fused radix+search kernel: past the crossover the sort
+        # dominates, so the split costs one extra (cheap) searchsorted
+        # dispatch — the budget benches carry it as smms_radix /
+        # terasort_radix
+        xs = sort(x, backend=b)
+        cuts = searchsorted(xs, interior, side="left", backend=b)
     elif b == "pallas" and kernel_eligible("sort_partition", x, interior):
         _tick("sort_partition", "pallas")
         xs, cuts = fused.sort_partition(x, interior, interpret=INTERPRET)
@@ -414,6 +543,12 @@ def sort_partition_kv(keys: jnp.ndarray, values, interior: jnp.ndarray, *,
     if nq == 0:
         ks, vs = sort_kv(keys, values, backend=backend)
         cuts = jnp.zeros((0,), jnp.int32)
+    elif (b == "pallas"
+          and kernel_eligible("sort_partition_kv", keys, interior)
+          and values.shape[:1] == keys.shape[:1]
+          and sort_kernel_choice(keys) == "radix"):
+        ks, vs = sort_kv(keys, values, backend=b)
+        cuts = searchsorted(ks, interior, side="left", backend=b)
     elif (b == "pallas"
           and kernel_eligible("sort_partition_kv", keys, interior)
           and values.shape[:1] == keys.shape[:1]):

@@ -212,6 +212,85 @@ class ExchangeStage:
         return self.receive_bytes / LINK_BW
 
 
+@dataclasses.dataclass
+class KernelCost:
+    """Memory-traffic model for one sort-kernel dispatch.
+
+    Sorting kernels are memory-bound (compare/permute per element is a
+    handful of cheap vector ops), so the roofline term that matters is
+    HBM traffic: ``bytes_hbm`` counts every full-array stream the kernel
+    makes over its (rows, n) block, and ``t_memory`` prices it at the
+    chip's HBM bandwidth — the floor a perfect implementation could hit.
+    ``row(elapsed_s)`` joins the model against a measured wall time into
+    the expected-vs-achieved record BENCH_sort.json carries per kernel.
+    On the interpret-mode (CPU emulator) bench the achieved column is
+    emulator throughput, not hardware — the row exists so the compiled
+    run on a real accelerator lands in the same schema.
+
+    Stream models (per (rows, n) block, padded to np2 lanes):
+
+    * **bitonic** — every substage reads and writes the whole block:
+      ``2 * elems * dtype_bytes * lg(np2)*(lg(np2)+1)/2``.
+    * **radix** — per pass: gather current keys bits (4 B), read the
+      permutation (4 B), scatter it back (4 B); after the last pass one
+      gather materializes keys + permutation (3 more 4 B streams).
+    * **merge** — ``ceil(lg t)`` pairwise merge levels, each a bitonic
+      merge over the flat np2 block: ``2 * elems * dtype_bytes *
+      ceil(lg t) * lg(np2_total)``.
+    """
+    kernel: str
+    bytes_hbm: float
+
+    @property
+    def t_memory(self) -> float:
+        """Elapsed-time floor at HBM bandwidth (seconds)."""
+        return self.bytes_hbm / HBM_BW
+
+    def achieved_bw(self, elapsed_s: float) -> float:
+        """Effective bytes/s the measured run moved through the model."""
+        return self.bytes_hbm / elapsed_s if elapsed_s > 0 else 0.0
+
+    def row(self, elapsed_s: float, **extra) -> Dict[str, object]:
+        """Expected-vs-achieved record for BENCH_sort.json."""
+        d = {"kernel": self.kernel,
+             "bytes_hbm": round(self.bytes_hbm),
+             "expected_t_memory_s": self.t_memory,
+             "expected_bw_gb_s": HBM_BW / 1e9,
+             "achieved_s": elapsed_s,
+             "achieved_bw_gb_s": self.achieved_bw(elapsed_s) / 1e9,
+             "bw_fraction": (self.t_memory / elapsed_s
+                             if elapsed_s > 0 else 0.0)}
+        d.update(extra)
+        return d
+
+    @staticmethod
+    def _np2(n: int) -> int:
+        return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+    @classmethod
+    def bitonic(cls, rows: int, n: int,
+                dtype_bytes: int = 4) -> "KernelCost":
+        np2 = cls._np2(n)
+        logn = max(1, np2.bit_length() - 1)
+        substages = logn * (logn + 1) // 2
+        return cls("bitonic", 2.0 * rows * np2 * dtype_bytes * substages)
+
+    @classmethod
+    def radix(cls, rows: int, n: int, key_bits: int = 32,
+              radix_bits: int = 4) -> "KernelCost":
+        passes = -(-key_bits // radix_bits)
+        per_pass = 3 * 4          # gather bits + read perm + scatter perm
+        final = 3 * 4             # keys gather-out + perm write + bits read
+        return cls("radix", float(rows * n) * (passes * per_pass + final))
+
+    @classmethod
+    def merge(cls, rows: int, n: int, dtype_bytes: int = 4) -> "KernelCost":
+        total = cls._np2(rows * n)
+        levels = max(1, (rows - 1).bit_length())
+        logm = max(1, total.bit_length() - 1)
+        return cls("merge", 2.0 * total * dtype_bytes * levels * logm)
+
+
 def exchange_stage_bytes(t: int, m: int, *, topology: str = "flat",
                          cap_factor: float, bytes_per_obj: int = 4,
                          overlap_chunks: int = 2) -> List[ExchangeStage]:

@@ -606,6 +606,11 @@ class ServeStats:
     compiles: int = 0                 # substrate recompile count
     program_cache_hits: int = 0
     capacity_retries: int = 0
+    # Buffer donations requested by single-shot queries but dropped by
+    # the substrate (platform without donation support, retrying
+    # schedule, eager execution).  Nonzero on CPU is expected; nonzero
+    # on GPU/TPU means the memory saving is not being realized.
+    donation_dropped: int = 0
     # Fusion payoff, from the pool's labeled compile counters: compiled
     # programs per algorithm body (e.g. {"smms_shard": 1}) and substrate
     # runs per executed query.  Each algorithm's multi-round body is ONE
@@ -1184,6 +1189,7 @@ class QueryEngine:
             compiles=pool_stats.get("compiles", 0),
             program_cache_hits=pool_stats.get("program_cache_hits", 0),
             capacity_retries=self._count_value("capacity_retries"),
+            donation_dropped=pool_stats.get("donation_dropped", 0),
             program_counts={k[len("compiles["):-1]: v
                             for k, v in sorted(pool_stats.items())
                             if k.startswith("compiles[") and v},
@@ -1297,8 +1303,10 @@ class EngineReplicas:
             agg.peak_pending = max(agg.peak_pending, s.peak_pending)
             agg.p50_latency_s = max(agg.p50_latency_s, s.p50_latency_s)
             agg.p99_latency_s = max(agg.p99_latency_s, s.p99_latency_s)
-        # the pool is shared: count its compiles once, not per replica
+        # the pool is shared: count its compiles (and its donation
+        # drops) once, not per replica
         agg.compiles = per[0].compiles if per else 0
+        agg.donation_dropped = per[0].donation_dropped if per else 0
         agg.qps = agg.served / agg.wall_s if agg.wall_s > 0 else 0.0
         hm = agg.plan_cache_hits + agg.plan_cache_misses
         agg.plan_cache_hit_rate = agg.plan_cache_hits / hm if hm else 0.0
